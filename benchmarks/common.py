@@ -1,0 +1,87 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import SimConfig, paper_schedule, run
+from repro.sim.runner import total_cost
+
+SPOT = 0.0081
+
+# The two TTC settings, derived exactly as the paper derives them (§V.C):
+# the longest workload completion time under Autoscale with 1-instance and
+# 10-instance steps respectively (measured in our testbed; paper: 2h07/1h37).
+TTC_CONSERVATIVE = 7500.0    # AS-1:  125 min in our calibration
+TTC_FAST = 6300.0            # AS-10: 105 min
+
+
+def make_cfg(policy="aimd", predictor="kalman", monitor_dt=300.0,
+             terminate="boundary", as_step=10.0, ticks=130,
+             seed=0) -> SimConfig:
+    # paper §V.B: ARMA reliability window = 3 measurements at 5-min
+    # monitoring, 10 at 1-min.
+    params = ControlParams(monitor_dt=monitor_dt,
+                           arma_window=10 if monitor_dt <= 60.0 else 3)
+    bill = BillingParams(terminate=terminate)
+    return SimConfig(
+        ctrl=ControllerConfig(policy=policy, predictor=predictor,
+                              params=params, billing=bill, as_step=as_step),
+        ticks=ticks, seed=seed)
+
+
+def run_policy(policy, ttc, seed=0, **kw):
+    sched = paper_schedule(ttc=ttc, arrival_gap_ticks=1, seed=seed)
+    cfg = make_cfg(policy=policy, seed=seed, **kw)
+    t0 = time.time()
+    tr = run(sched, cfg)
+    return {
+        "trace": tr,
+        "cost": total_cost(tr),
+        "max_n": float(np.asarray(tr.n_committed).max()),
+        "violations": int(tr.violations),
+        "lb": sched.total_cus / 3600 * SPOT,
+        "wall_s": time.time() - t0,
+    }
+
+
+def time_to_reliable_minutes(trace, schedule, monitor_dt) -> np.ndarray:
+    """Per-workload minutes from submission to the predictor's t_init."""
+    rel = np.asarray(trace.reliable[:, :, 0])        # (T, W)
+    sub = np.asarray(trace.work_final.t_submit).astype(float)
+    t_rel = np.argmax(rel, axis=0).astype(float)
+    ok = rel.any(axis=0) & (sub >= 0)
+    out = np.full(rel.shape[1], np.nan)
+    out[ok] = (t_rel[ok] - sub[ok]) * monitor_dt / 60.0
+    return out
+
+
+def mae_at_reliable(trace, schedule) -> np.ndarray:
+    """Mean |b̂ - b_inst| / b_inst over the post-t_init life of each
+    workload, where b_inst is the *instantaneous* true per-item cost (the
+    cheap-items-first completion bias makes the contemporaneous cost the
+    quantity the estimator is actually filtering — see workloads.ramp)."""
+    from repro.sim.workloads import ramp
+    import jax.numpy as jnp
+
+    rel = np.asarray(trace.reliable[:, :, 0])        # (T, W)
+    act = np.asarray(trace.active)                   # (T, W)
+    b_hat = np.asarray(trace.b_hat[:, :, 0])
+    remaining = np.asarray(trace.remaining)          # (T, W)
+    m0 = np.maximum(schedule.m0[:, 0], 1.0)
+    p = 1.0 - remaining / m0[None, :]
+    bias = np.asarray(ramp(jnp.asarray(p), jnp.asarray(schedule.c0),
+                           jnp.asarray(schedule.p_r),
+                           jnp.asarray(schedule.overshoot)))
+    b_inst = schedule.b_true[None, :, 0] * bias
+    out = np.full(rel.shape[1], np.nan)
+    for w in range(rel.shape[1]):
+        sel = rel[:, w] & act[:, w]
+        if sel.any():
+            out[w] = float(np.mean(
+                np.abs(b_hat[sel, w] - b_inst[sel, w]) / b_inst[sel, w]))
+    return out

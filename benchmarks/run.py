@@ -1,0 +1,48 @@
+"""Benchmark suite — one module per paper table/figure.
+
+Emits ``name,value,derived`` CSV rows (value is the headline number of the
+artifact; ``derived`` packs the secondary columns).
+
+  bench_prediction   -> Table II   (time-to-reliable + MAE per estimator)
+  bench_convergence  -> Fig. 3     (estimator traces; CSV artifact)
+  bench_cost         -> Figs. 4-5 + Table III (cumulative cost, 5 policies)
+  bench_lambda       -> Table IV   (per-image cost vs AWS Lambda)
+  bench_kernels      -> kernel micro-benchmarks (host timings)
+  bench_roofline     -> §Roofline summary over the dry-run sweep
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from . import (bench_convergence, bench_cost, bench_kernels,
+                   bench_lambda, bench_prediction, bench_roofline)
+    suites = {
+        "prediction": bench_prediction,
+        "convergence": bench_convergence,
+        "cost": bench_cost,
+        "lambda": bench_lambda,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    print("name,value,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    for name, mod in suites.items():
+        if only and only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(emit)
+            emit(f"_suite_{name}_wall_s", time.time() - t0, "ok")
+        except Exception as e:  # noqa: BLE001 — a failed suite must not
+            emit(f"_suite_{name}_wall_s", time.time() - t0,  # hide others
+                 f"FAILED:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

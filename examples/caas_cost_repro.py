@@ -1,0 +1,32 @@
+"""Reproduce the paper's headline cost experiment (Figs. 4-5, Table III)
+and write the cumulative-cost curves to CSV.
+
+    PYTHONPATH=src python examples/caas_cost_repro.py
+"""
+
+import sys
+
+
+def emit(name, value, derived=""):
+    print(f"{name},{value:.6g},{derived}")
+
+
+def main() -> None:
+    sys.path.insert(0, ".")
+    from benchmarks import bench_cost
+    t3 = bench_cost.run_table3(seeds=(0, 1, 2))
+    print("== Table III reproduction (mean of 3 seeds) ==")
+    for tag, rows in t3.items():
+        print(f"-- TTC setting: {tag}")
+        for policy in ("aimd", "reactive", "mwa", "lr", "autoscale"):
+            r = rows[policy]
+            print(f"  {policy:10s} ${r['cost']:.3f}  maxN={r['max_n']:.0f} "
+                  f" +LB {r['over_lb_pct']:.0f}%  "
+                  f"(AIMD saves {r['aimd_saving_pct']:.0f}%)")
+        print(f"  {'LB':10s} ${rows['lb']['cost']:.3f}")
+    bench_cost.write_curves("results/curves")
+    print("curves written to results/curves_fig4.csv / _fig5.csv")
+
+
+if __name__ == "__main__":
+    main()

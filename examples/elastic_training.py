@@ -1,0 +1,75 @@
+"""End-to-end driver: train a real (reduced) LM for a few hundred steps
+under the paper's control plane — AIMD-elastic data parallelism, Kalman
+step-cost prediction, spot preemptions, hard failures, stragglers, and
+checkpoint/restart on every topology change.
+
+    PYTHONPATH=src python examples/elastic_training.py [--steps 200]
+"""
+
+import argparse
+import shutil
+
+import jax
+
+from repro.configs import ARCHS
+from repro.core.types import ControlParams
+from repro.data.pipeline import DataConfig, batch_at
+from repro.ft.elastic import ElasticConfig, ElasticTrainer
+from repro.ft.failures import FailureConfig, FailureInjector
+from repro.models import Model
+from repro.training import optimizer
+from repro.training.train_loop import init_state, make_train_step
+
+CKPT = "/tmp/repro_elastic_example"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+    shutil.rmtree(CKPT, ignore_errors=True)
+
+    red = ARCHS[args.arch].reduced()
+    model = Model(red)
+    state = init_state(model, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"training {red.name}: {n_params / 1e6:.1f}M params "
+          f"(reduced {args.arch})")
+
+    opt_cfg = optimizer.OptConfig(lr=3e-3, warmup_steps=20,
+                                  total_steps=args.steps)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    data = DataConfig(vocab=red.vocab, seq_len=64, global_batch=8)
+
+    cfg = ElasticConfig(
+        total_steps=args.steps, ttc_seconds=0.4 * args.steps,
+        min_replicas=1, max_replicas=16, checkpoint_every=25,
+        checkpoint_dir=CKPT,
+        control=ControlParams(alpha=2.0, beta=0.9, n_min=1.0, n_max=16.0))
+    injector = FailureInjector(FailureConfig(p_fail=2e-3, p_straggle=1e-2,
+                                             seed=1))
+    trainer = ElasticTrainer(cfg, step, state,
+                             lambda s: batch_at(data, s),
+                             failures=injector)
+
+    records = trainer.run()
+    losses = []
+    for r in records:
+        if r.step % 25 == 0 or r.event:
+            print(f"  step {r.step:4d}  replicas={r.replicas:2d}  "
+                  f"step_time={r.step_time:.3f}s  n*={r.n_star:5.2f}  "
+                  f"ĉ/step={r.b_hat:.2f} chip-s  {r.event}")
+
+    # verify training actually progressed through all the chaos
+    final_loss = float(step(trainer.state, batch_at(data, 0))[1]["loss"])
+    print(f"\ncompleted {int(trainer.state.opt.step)} optimizer steps, "
+          f"{trainer.restarts} topology changes, final loss {final_loss:.3f}")
+    sizes = [r.replicas for r in records]
+    print(f"replica count: min {min(sizes)}, max {max(sizes)}; "
+          f"job TTC {'met' if trainer.sim_time <= cfg.ttc_seconds else 'MISSED'} "
+          f"({trainer.sim_time:.0f}s vs {cfg.ttc_seconds:.0f}s budget)")
+
+
+if __name__ == "__main__":
+    main()

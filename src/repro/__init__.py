@@ -1,0 +1,5 @@
+"""Dithen-JAX: CaaS control plane (Kalman + proportional fairness + AIMD,
+IC2E'16) as the elastic runtime of a multi-pod JAX training/serving
+framework."""
+
+__version__ = "1.0.0"

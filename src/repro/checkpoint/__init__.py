@@ -1,0 +1,3 @@
+from . import checkpointer
+
+__all__ = ["checkpointer"]

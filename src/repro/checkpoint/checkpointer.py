@@ -1,0 +1,114 @@
+"""Fault-tolerant checkpointing: atomic, topology-agnostic, restart-safe.
+
+Layout: <dir>/step_<N>/   (one .npy per flattened pytree leaf + manifest)
+        <dir>/step_<N>.done  (commit marker — a crash mid-write leaves no
+                              marker, so restore never sees a torn state)
+
+Leaves are saved by *path* (e.g. "params/blocks/attn/wq"), so a checkpoint
+written on one mesh restores onto any other topology — the elastic runtime
+re-sharding after an AIMD scale event is just restore-with-new-shardings.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(directory: str, step: int, tree) -> str:
+    """Write checkpoint for ``step``; atomic via the .done marker."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = _flatten(tree)
+    manifest = {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if dtype not in ("float32", "float64", "int32", "int64", "uint32",
+                         "uint64", "int8", "uint8", "bool", "int16",
+                         "uint16", "float16"):
+            arr = arr.astype(np.float32)     # bf16 etc.: store widened
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": dtype}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.rename(tmp, d)
+    open(d + ".done", "w").close()
+    return d
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(n[len("step_"):-len(".done")])
+             for n in os.listdir(directory)
+             if n.startswith("step_") and n.endswith(".done")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like):
+    """Restore into the structure (and shardings) of ``like``.
+
+    ``like`` can be a pytree of arrays or ShapeDtypeStructs; device layout
+    follows each leaf's sharding when present (topology-agnostic).
+    """
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+
+    flat_like, treedef = _flatten(like)
+    out = {}
+    for key, leaf in flat_like.items():
+        if key not in manifest:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(d, manifest[key]["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: ckpt {arr.shape} != model {leaf.shape}")
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            out[key] = jax.device_put(arr.astype(leaf.dtype), sharding)
+        else:
+            out[key] = jax.numpy.asarray(arr, leaf.dtype)
+        del arr
+
+    leaves_in_order = [out[k] for k in flat_like.keys()]
+    return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+
+
+def prune(directory: str, keep: int = 3) -> None:
+    """Retain only the newest ``keep`` committed checkpoints."""
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n[len("step_"):-len(".done")]) for n in os.listdir(directory)
+        if n.startswith("step_") and n.endswith(".done"))
+    for s in steps[:-keep]:
+        d = os.path.join(directory, f"step_{s:08d}")
+        if os.path.isdir(d):
+            shutil.rmtree(d)
+        marker = d + ".done"
+        if os.path.exists(marker):
+            os.remove(marker)

@@ -1,0 +1,6 @@
+# One module per assigned architecture (+ the paper's own control-plane
+# defaults); ``registry.ARCHS`` maps --arch ids to ArchConfig.
+from .base import ArchConfig, ShapeConfig, SHAPES
+from .registry import ARCHS, get
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get"]

@@ -1,0 +1,174 @@
+"""Architecture configuration schema for the model zoo.
+
+One frozen dataclass describes every assigned architecture; family-specific
+fields are zero/None when unused.  ``reduced()`` derives the CPU smoke-test
+variant of the same family (small widths, few layers/experts, tiny vocab).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | ssm | hybrid | audio | vlm | moe
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None        # default d_model // n_heads
+    qkv_bias: bool = False                # Qwen1.5-style QKV bias
+    tie_embeddings: bool = False
+    mlp: str = "swiglu"                   # swiglu | gelu
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False           # Llama-4 shared expert path
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba-2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256                  # SSD chunk length
+
+    # --- hybrid (Zamba-2): shared attention block every k SSM layers --------
+    attn_every: int = 0
+
+    # --- attention locality --------------------------------------------------
+    sliding_window: Optional[int] = None  # Mixtral SWA
+    attn_chunk: Optional[int] = None      # Llama-4 chunked-local attention
+    global_every: int = 0                 # Llama-4: every Nth layer is global
+
+    # --- encoder-decoder (Whisper) -------------------------------------------
+    enc_layers: int = 0
+    enc_len: int = 1500                   # fixed audio frame count (stub)
+
+    # --- VLM (LLaVA): stub patch-embedding frontend --------------------------
+    n_patches: int = 0                    # patches prepended to the text seq
+
+    # --- §Perf variants (hillclimb switches; defaults = paper-faithful) ------
+    parallel_block: bool = False          # PaLM-style fused attn+MLP residual
+    kv_dtype: str = "bf16"                # "int8": quantized KV cache
+
+    # -------------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        if self.n_heads == 0:
+            return 0
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape (see DESIGN.md §Arch-applicability)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None
+                or self.attn_chunk is not None)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        per_attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
+            + self.n_heads * self.hd * d
+        per_mlp = (3 if self.mlp == "swiglu" else 2) * d * f
+        if self.family == "ssm":
+            per_block = self._ssm_block_params()
+            return emb + self.n_layers * per_block
+        if self.family == "hybrid":
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            return (emb + self.n_layers * (self._ssm_block_params())
+                    + (per_attn + per_mlp))  # one *shared* attention block
+        if self.family == "moe":
+            experts = self.n_experts * per_mlp
+            shared = per_mlp if self.shared_expert else 0
+            router = d * self.n_experts
+            return emb + self.n_layers * (per_attn + experts + shared + router)
+        if self.family == "audio":
+            cross = per_attn
+            return emb + self.enc_layers * (per_attn + per_mlp) \
+                + self.n_layers * (per_attn + per_mlp + cross)
+        return emb + self.n_layers * (per_attn + per_mlp)
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k experts + shared)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        per_attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd \
+            + self.n_heads * self.hd * d
+        per_mlp = 3 * d * f
+        act = self.top_k * per_mlp + (per_mlp if self.shared_expert else 0)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return emb + self.n_layers * (per_attn + act + d * self.n_experts)
+
+    def _ssm_block_params(self) -> int:
+        # Mamba-2 block, ngroups=1 (B and C shared across heads).
+        d, di = self.d_model, self.d_inner
+        in_proj = d * (2 * di + 2 * self.ssm_state + self.ssm_heads)
+        conv = self.ssm_conv * (di + 2 * self.ssm_state)
+        return in_proj + conv + self.ssm_heads * 2 + di * d
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2 if self.attn_every == 0
+                         else self.attn_every + 1),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads
+            else 4,
+            d_ff=256,
+            vocab=256,
+            head_dim=32 if self.head_dim else None,
+            n_experts=min(self.n_experts, 4),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32,
+            ssm_chunk=16,
+            enc_layers=min(self.enc_layers, 2),
+            enc_len=24,
+            n_patches=min(self.n_patches, 8),
+            sliding_window=64 if self.sliding_window else None,
+            attn_chunk=32 if self.attn_chunk else None,
+        )
+
+
+# Input-shape cells assigned to every LM-family architecture.
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

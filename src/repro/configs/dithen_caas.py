@@ -1,0 +1,12 @@
+"""The paper's own platform configuration (§V defaults)."""
+
+from ..core.controller import ControllerConfig
+from ..core.types import BillingParams, ControlParams
+
+CONTROL = ControlParams(alpha=5.0, beta=0.9, n_min=10.0, n_max=100.0,
+                        n_w_max=10.0, sigma_z2=0.5, sigma_v2=0.5,
+                        monitor_dt=60.0)
+BILLING = BillingParams(price_per_quantum=0.0081, quantum=3600.0,
+                        boot_delay=300.0, terminate="boundary")
+CONTROLLER = ControllerConfig(predictor="kalman", policy="aimd",
+                              params=CONTROL, billing=BILLING)

@@ -1,0 +1,8 @@
+"""`--arch` config module (see registry.py for the source).
+
+Exact architecture hyper-parameters plus the reduced smoke variant.
+"""
+
+from .registry import LLAVA_NEXT_34B as CONFIG
+
+SMOKE = CONFIG.reduced()

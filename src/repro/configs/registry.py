@@ -1,0 +1,79 @@
+"""The 10 assigned architectures (exact public configs) + the paper's own
+CaaS control-plane config.  Select with ``--arch <id>``.
+
+Sources per the assignment sheet; ``head_dim = d_model // n_heads`` unless
+the source specifies otherwise.
+"""
+
+from __future__ import annotations
+
+from .base import ArchConfig
+
+# [arXiv:2403.17297; hf] — dense GQA
+INTERNLM2_20B = ArchConfig(
+    name="internlm2-20b", family="dense", n_layers=48, d_model=6144,
+    n_heads=48, n_kv_heads=8, d_ff=16384, vocab=92544, rope_theta=1e6)
+
+# [hf:ibm-granite/granite-3.0-2b-base; hf] — dense GQA
+GRANITE_3_2B = ArchConfig(
+    name="granite-3-2b", family="dense", n_layers=40, d_model=2048,
+    n_heads=32, n_kv_heads=8, d_ff=8192, vocab=49155, tie_embeddings=True)
+
+# [hf:stabilityai/stablelm-2-1_6b; unverified] — dense, MHA (kv == heads)
+STABLELM_3B = ArchConfig(
+    name="stablelm-3b", family="dense", n_layers=32, d_model=2560,
+    n_heads=32, n_kv_heads=32, d_ff=6912, vocab=50304)
+
+# [hf:Qwen/Qwen1.5-0.5B; hf] — dense, QKV bias, tied embeddings
+QWEN15_05B = ArchConfig(
+    name="qwen1.5-0.5b", family="dense", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=2816, vocab=151936, qkv_bias=True,
+    tie_embeddings=True)
+
+# [arXiv:2405.21060; unverified] — Mamba-2, SSD (state-space duality)
+MAMBA2_780M = ArchConfig(
+    name="mamba2-780m", family="ssm", n_layers=48, d_model=1536,
+    n_heads=0, n_kv_heads=0, d_ff=0, vocab=50280, ssm_state=128)
+
+# [arXiv:2411.15242; hf] — Mamba-2 backbone + shared attention block
+ZAMBA2_1_2B = ArchConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, d_ff=8192, vocab=32000, ssm_state=64,
+    attn_every=6, sliding_window=4096)
+
+# [arXiv:2212.04356; unverified] — enc-dec; conv frontend is a STUB
+WHISPER_BASE = ArchConfig(
+    name="whisper-base", family="audio", n_layers=6, d_model=512,
+    n_heads=8, n_kv_heads=8, d_ff=2048, vocab=51865, mlp="gelu",
+    enc_layers=6, enc_len=1500)
+
+# [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] — anyres tiling STUB
+LLAVA_NEXT_34B = ArchConfig(
+    name="llava-next-34b", family="vlm", n_layers=60, d_model=7168,
+    n_heads=56, n_kv_heads=8, d_ff=20480, vocab=64000, n_patches=2880)
+
+# [arXiv:2401.04088; hf] — 8 experts top-2, sliding-window attention
+MIXTRAL_8X7B = ArchConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab=32000,
+    n_experts=8, top_k=2, sliding_window=4096)
+
+# [hf:meta-llama/Llama-4-Scout-17B-16E; unverified] — 16e top-1, chunked attn
+LLAMA4_SCOUT = ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe", n_layers=48, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_ff=8192, vocab=202048,
+    n_experts=16, top_k=1, shared_expert=True,
+    attn_chunk=8192, global_every=4, rope_theta=5e5)
+
+ARCHS = {
+    a.name: a for a in [
+        INTERNLM2_20B, GRANITE_3_2B, STABLELM_3B, QWEN15_05B, MAMBA2_780M,
+        ZAMBA2_1_2B, WHISPER_BASE, LLAVA_NEXT_34B, MIXTRAL_8X7B, LLAMA4_SCOUT,
+    ]
+}
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[name]

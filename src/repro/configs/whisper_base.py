@@ -1,0 +1,8 @@
+"""`--arch` config module (see registry.py for the source).
+
+Exact architecture hyper-parameters plus the reduced smoke variant.
+"""
+
+from .registry import WHISPER_BASE as CONFIG
+
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,12 @@
+# The paper's primary contribution: Kalman CUS prediction (§II.A),
+# proportional-fair TTC scheduling (§III), AIMD instance scaling (§IV),
+# plus the comparison baselines (§V) — all as pure-JAX state machines.
+from . import aimd, billing, controller, fairshare, kalman, predictors, types
+from .controller import ControllerConfig, ControllerState, step as control_step
+from .types import BillingParams, ControlParams
+
+__all__ = [
+    "aimd", "billing", "controller", "fairshare", "kalman", "predictors",
+    "types", "ControllerConfig", "ControllerState", "control_step",
+    "BillingParams", "ControlParams",
+]

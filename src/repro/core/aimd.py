@@ -1,0 +1,98 @@
+"""AIMD compute-unit scaling (paper §IV, Fig. 1) and scaling baselines (§V.C).
+
+The AIMD rule, verbatim from Fig. 1:
+
+    if N_tot[t] <= N*_tot[t]:   N_tot[t+1] = min(N_tot[t] + α, N_max)
+    else:                        N_tot[t+1] = max(β N_tot[t], N_min)
+
+Baselines (all consume the same N*_tot history, eq. 12):
+  * Reactive:  N_tot[t+1] = N*_tot[t]
+  * MWA (eq. 16):  mean of the last 6 values of N*_tot
+  * LR:  extrapolate a least-squares line through the last 6 values of N*_tot
+
+Instance termination (§IV): always terminate the instances with the smallest
+remaining paid time a_{i,j} — they are about to incur another billing quantum.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import AimdState, ControlParams, PolicyState
+
+HIST = 6  # MWA / LR look-back (current + five previous, §V.C)
+
+
+def aimd_init(n0: float) -> AimdState:
+    return AimdState(n_target=jnp.asarray(n0, jnp.float32))
+
+
+def aimd_step(state: AimdState, n_tot: jnp.ndarray, n_star: jnp.ndarray,
+              params: ControlParams) -> AimdState:
+    """Fig. 1: one AIMD update of the CU target."""
+    incr = n_tot <= n_star
+    up = jnp.minimum(n_tot + params.alpha, params.n_max)
+    down = jnp.maximum(params.beta * n_tot, params.n_min)
+    return AimdState(n_target=jnp.where(incr, up, down))
+
+
+def policy_init() -> PolicyState:
+    return PolicyState(n_star_hist=jnp.zeros((HIST,), jnp.float32),
+                       hist_len=jnp.asarray(0, jnp.int32))
+
+
+def policy_push(state: PolicyState, n_star: jnp.ndarray) -> PolicyState:
+    hist = jnp.concatenate([n_star[None].astype(jnp.float32),
+                            state.n_star_hist[:-1]])
+    return PolicyState(n_star_hist=hist,
+                       hist_len=jnp.minimum(state.hist_len + 1, HIST))
+
+
+# N_min/N_max are platform-wide CU limits (Table I: "lower/upper limits for
+# CUSs in Dithen"), so every scaling policy is clipped to the same band —
+# which is why the paper's Reactive/MWA/LR costs cluster tightly while the
+# differences come from peak/churn behaviour above the floor.
+
+
+def reactive_target(state: PolicyState, params: ControlParams) -> jnp.ndarray:
+    """N_tot[t+1] = N*_tot[t]."""
+    return jnp.clip(state.n_star_hist[0], params.n_min, params.n_max)
+
+
+def mwa_target(state: PolicyState, params: ControlParams) -> jnp.ndarray:
+    """Eq. 16 — mean-weighted average over the last HIST instants."""
+    n = jnp.maximum(state.hist_len, 1)
+    idx = jnp.arange(HIST)
+    valid = (idx < state.hist_len).astype(jnp.float32)
+    mean = jnp.sum(state.n_star_hist * valid) / n.astype(jnp.float32)
+    return jnp.clip(mean, params.n_min, params.n_max)
+
+
+def lr_target(state: PolicyState, params: ControlParams) -> jnp.ndarray:
+    """Least-squares line through {N*[t-5..t]} extrapolated one step ahead.
+
+    hist[0] is the newest sample at x=0, hist[i] at x=-i; predict x=+1.
+    """
+    x = -jnp.arange(HIST, dtype=jnp.float32)
+    y = state.n_star_hist
+    valid = (jnp.arange(HIST) < state.hist_len).astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(valid), 1.0)
+    xm = jnp.sum(x * valid) / n
+    ym = jnp.sum(y * valid) / n
+    cov = jnp.sum(valid * (x - xm) * (y - ym))
+    var = jnp.sum(valid * (x - xm) ** 2)
+    slope = jnp.where(var > 0, cov / jnp.maximum(var, 1e-9), 0.0)
+    pred = ym + slope * (1.0 - xm)
+    # Degenerate history (<2 samples): behave reactively.
+    pred = jnp.where(state.hist_len >= 2, pred, state.n_star_hist[0])
+    return jnp.clip(pred, params.n_min, params.n_max)
+
+
+def termination_order(a: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """Indices of active instances sorted by remaining paid time (ascending).
+
+    Implements §IV's rule: kill the instances closest to their billing
+    renewal first.  Inactive instances sort to the back.
+    """
+    key = jnp.where(active, a, jnp.inf)
+    return jnp.argsort(key)

@@ -1,0 +1,161 @@
+"""Instance lifecycle + quantized billing (paper §II.C, §IV, Appendix A).
+
+The fleet is a fixed pool of ``I`` potential instances (``I`` ≥ N_max) whose
+lifecycle is driven by two pure functions:
+
+  * ``advance``   — one monitoring interval of wall-clock: boot progress and
+                    billing-quantum renewal (a_{i,j} countdown, eq. 3).
+  * ``scale_to``  — start/drain instances to hit a target count.
+
+Billing model (Appendix A): a CU is billed ``price_per_quantum`` for each
+*started* ``quantum`` (EC2 2015: $0.0081/hour for m3.medium spot), beginning
+at the start request (boot time is paid, as on EC2).  There are no refunds.
+
+Termination (§IV): "the prudent action is always to terminate spot instances
+with the smallest remaining time before renewal" — i.e. AWS's
+``ClosestToNextInstanceHour`` policy.  Scaling down therefore *drains*: the
+instance is marked, keeps executing the work it has already been paid for,
+and is reclaimed exactly at its quantum boundary instead of renewing.
+Scaling up first cancels pending drains (free capacity) before paying for
+new starts.  The control plane counts only non-draining instances; the
+execution plane happily uses draining ones — they are paid for.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import BillingParams, ClusterState
+
+OFF, BOOTING, ACTIVE = 0, 1, 2
+
+
+def init(pool: int) -> ClusterState:
+    return ClusterState(
+        phase=jnp.zeros((pool,), jnp.int8),
+        a=jnp.zeros((pool,), jnp.float32),
+        boot_left=jnp.zeros((pool,), jnp.float32),
+        draining=jnp.zeros((pool,), bool),
+        cum_cost=jnp.asarray(0.0, jnp.float32),
+        busy_frac=jnp.zeros((pool,), jnp.float32),
+    )
+
+
+def committed(cluster: ClusterState) -> jnp.ndarray:
+    """Control-plane fleet size: paid-for instances not marked to drain."""
+    on = (cluster.phase >= BOOTING) & ~cluster.draining
+    return jnp.sum(on.astype(jnp.float32))
+
+
+def usable(cluster: ClusterState) -> jnp.ndarray:
+    """Control-plane usable CUs (paper N_tot, eq. 2): active, not draining."""
+    on = (cluster.phase == ACTIVE) & ~cluster.draining
+    return jnp.sum(on.astype(jnp.float32))
+
+
+def capacity(cluster: ClusterState) -> jnp.ndarray:
+    """Execution capacity: every booted instance, drained or not, is paid
+    for and is given tasks until its quantum expires."""
+    return jnp.sum((cluster.phase == ACTIVE).astype(jnp.float32))
+
+
+def advance(cluster: ClusterState, dt: float,
+            billing: BillingParams) -> ClusterState:
+    """Advance wall-clock ``dt`` seconds: boots finish, quanta renew, and
+    draining instances are reclaimed at their billing boundary."""
+    on = cluster.phase >= BOOTING
+    boot_left = jnp.where(on, jnp.maximum(cluster.boot_left - dt, 0.0),
+                          cluster.boot_left)
+    phase = jnp.where(on & (boot_left <= 0.0), jnp.int8(ACTIVE),
+                      cluster.phase)
+
+    a = jnp.where(on, cluster.a - dt, cluster.a)
+    hit_boundary = on & (a <= 0.0)
+    renew = hit_boundary & ~cluster.draining
+    reclaim = hit_boundary & cluster.draining
+
+    # A monitoring interval can span several billing quanta (per-second /
+    # per-minute billing): charge as many as the clock crossed.
+    k = jnp.where(renew, jnp.floor(-a / billing.quantum) + 1.0, 0.0)
+    a = a + k * billing.quantum
+    cum_cost = cluster.cum_cost + jnp.sum(k) * billing.price_per_quantum
+
+    phase = jnp.where(reclaim, jnp.int8(OFF), phase)
+    a = jnp.where(reclaim, 0.0, a)
+    draining = cluster.draining & ~reclaim
+
+    return ClusterState(phase=phase, a=a, boot_left=boot_left,
+                        draining=draining, cum_cost=cum_cost,
+                        busy_frac=cluster.busy_frac)
+
+
+def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
+             billing: BillingParams) -> ClusterState:
+    """Drive the control-plane fleet size toward ``n_target``.
+
+    Growth: cancel drains first (the capacity is already paid for), then
+    start OFF slots, paying a full quantum each.  Shrink: mark the instances
+    with the *smallest remaining paid time* (§IV) as draining.
+    """
+    pool = cluster.phase.shape[0]
+    n_target = jnp.round(n_target)
+    n_live = committed(cluster)
+    delta = n_target - n_live
+
+    # ---- grow: undrain cheapest-to-keep first (largest remaining time) ----
+    n_grow = jnp.maximum(delta, 0.0)
+    drain_key = jnp.where(cluster.draining, -cluster.a, jnp.inf)
+    undrain_rank = _rank(drain_key)
+    do_undrain = cluster.draining & (undrain_rank <= n_grow)
+    n_undrained = jnp.sum(do_undrain.astype(jnp.float32))
+    draining = cluster.draining & ~do_undrain
+
+    n_start = jnp.maximum(n_grow - n_undrained, 0.0)
+    off = cluster.phase == OFF
+    start_rank = _rank(jnp.where(off, jnp.arange(pool, dtype=jnp.float32),
+                                 jnp.inf))
+    do_start = off & (start_rank <= n_start)
+    n_started = jnp.sum(do_start.astype(jnp.float32))
+
+    phase = jnp.where(do_start, jnp.int8(BOOTING), cluster.phase)
+    a = jnp.where(do_start, billing.quantum, cluster.a)
+    boot_left = jnp.where(do_start, billing.boot_delay, cluster.boot_left)
+    cum_cost = cluster.cum_cost + n_started * billing.price_per_quantum
+
+    # ---- shrink: smallest-remaining-time instances first (§IV) -----------
+    n_shrink = jnp.maximum(-delta, 0.0)
+    live = (phase >= BOOTING) & ~draining
+    # Active instances by remaining paid time ascending; booting ones last.
+    shrink_key = jnp.where(live & (phase == ACTIVE), a,
+                           jnp.where(live, a + 2.0 * billing.quantum,
+                                     jnp.inf))
+    shrink_rank = _rank(shrink_key)
+    do_shed = live & (shrink_rank <= n_shrink)
+
+    if billing.terminate == "immediate":
+        # Paper semantics: release now, forfeit the rest of the quantum.
+        phase = jnp.where(do_shed, jnp.int8(OFF), phase)
+        a = jnp.where(do_shed, 0.0, a)
+        boot_left = jnp.where(do_shed, 0.0, boot_left)
+    else:
+        # Beyond-paper: drain and reclaim at the billing boundary.
+        draining = draining | do_shed
+
+    return ClusterState(phase=phase, a=a, boot_left=boot_left,
+                        draining=draining, cum_cost=cum_cost,
+                        busy_frac=cluster.busy_frac)
+
+
+def _rank(key: jnp.ndarray) -> jnp.ndarray:
+    """1-based rank of each element under ascending sort of ``key``."""
+    pool = key.shape[0]
+    order = jnp.argsort(key)
+    return jnp.zeros((pool,), jnp.float32).at[order].set(
+        jnp.arange(1, pool + 1, dtype=jnp.float32))
+
+
+def lower_bound_cost(total_cus: jnp.ndarray,
+                     billing: BillingParams) -> jnp.ndarray:
+    """Paper 'LB': the bill if every paid CU-second were used at 100%."""
+    quanta = jnp.ceil(total_cus / billing.quantum)
+    return quanta * billing.price_per_quantum

@@ -1,0 +1,160 @@
+"""The integrated CaaS control plane (paper §II-§IV, one fused step).
+
+Per monitoring instant the platform:
+  1. absorbs CUS measurements into the configured predictor (Kalman §II.A,
+     or the ad-hoc / ARMA baselines of §V.B),
+  2. computes r_w = Σ_k m b̂ (eq. 1), detects t_init and confirms TTCs,
+  3. allocates proportional-fair service rates (eqs. 11-14),
+  4. updates the CU target with the configured scaling policy (AIMD Fig. 1,
+     or Reactive / MWA / LR of §V.C, or utilization-driven Autoscale),
+  5. starts/terminates instances (termination = smallest a_{i,j} first).
+
+The step is pure and fixed-shape: the surrounding environment (simulator or
+the elastic TPU runtime in ``repro.ft``) drives it under ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import aimd as aimd_lib
+from . import billing as billing_lib
+from . import fairshare, kalman, predictors
+from .types import (AimdState, ArmaState, BillingParams, ClusterState,
+                    ControlParams, KalmanState, PolicyState, WorkloadState,
+                    required_cus)
+
+PREDICTORS = ("kalman", "adhoc", "arma")
+POLICIES = ("aimd", "reactive", "mwa", "lr", "autoscale")
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    predictor: str = "kalman"
+    policy: str = "aimd"
+    params: ControlParams = ControlParams()
+    billing: BillingParams = BillingParams()
+    # Pre-confirmation probe rate: the platform runs one task at a time per
+    # unconfirmed workload to build the initial CUS estimate — a fraction of
+    # one CU on average, not a dedicated instance.
+    bootstrap_rate: float = 0.3
+    # Autoscale baseline (§V.C): step instances on mean-CPU threshold.
+    as_threshold: float = 0.20
+    as_step: float = 1.0
+    # AIMD base: 'committed' (booting+active; avoids double-request during
+    # boot) or 'active' (paper-literal eq. 2).
+    aimd_base: str = "committed"
+
+    def __post_init__(self):
+        assert self.predictor in PREDICTORS, self.predictor
+        assert self.policy in POLICIES, self.policy
+
+
+class ControllerState(NamedTuple):
+    kf: KalmanState          # Kalman or ad-hoc filter bank (shape-shared)
+    arma: ArmaState
+    pol: PolicyState
+    aimd: AimdState
+
+
+class ControlDecision(NamedTuple):
+    s: jnp.ndarray           # (W,) service rates for [t, t+1)
+    n_star: jnp.ndarray      # ()   N*_tot (eq. 12)
+    n_target: jnp.ndarray    # ()   CU count requested for t+1
+    b_hat: jnp.ndarray       # (W, K) current predictions
+    reliable: jnp.ndarray    # (W, K) predictor reliability flags
+
+
+def init(w: int, k: int, cfg: ControllerConfig) -> ControllerState:
+    return ControllerState(
+        kf=kalman.init(w, k),
+        arma=predictors.arma_init(w, k),
+        pol=aimd_lib.policy_init(),
+        aimd=aimd_lib.aimd_init(cfg.params.n_min),
+    )
+
+
+def reset_rows(state: ControllerState, rows: jnp.ndarray) -> ControllerState:
+    """Clear predictor state for newly (re)submitted workload rows."""
+    return state._replace(
+        kf=kalman.reset_rows(state.kf, rows),
+        arma=predictors.arma_reset_rows(state.arma, rows),
+    )
+
+
+def step(state: ControllerState,
+         work: WorkloadState,
+         cluster: ClusterState,
+         b_meas: jnp.ndarray,        # (W, K) fresh CUS measurements
+         meas_mask: jnp.ndarray,     # (W, K) bool
+         exec_time: jnp.ndarray,     # (W, K) CU-seconds consumed in window
+         items_done: jnp.ndarray,    # (W, K) completions in window
+         cfg: ControllerConfig,
+         ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
+    p = cfg.params
+
+    # -- 1. predictor update ------------------------------------------------
+    if cfg.predictor == "kalman":
+        kf = kalman.step(state.kf, b_meas, meas_mask, p)
+        arma = state.arma
+        b_hat, reliable = kf.b_hat, kf.reliable
+    elif cfg.predictor == "adhoc":
+        kf = predictors.adhoc_step(state.kf, b_meas, meas_mask, p)
+        arma = state.arma
+        b_hat, reliable = kf.b_hat, kf.reliable
+    else:  # arma
+        kf = state.kf
+        arma = predictors.arma_step(state.arma, exec_time, items_done,
+                                    work.m0, p)
+        b_hat, reliable = arma.b_hat, arma.reliable
+
+    # -- 2. demand + TTC confirmation (§II.B) --------------------------------
+    r = required_cus(work.m, b_hat)                        # eq. 1
+    w_reliable = jnp.all(reliable | (work.m0 == 0), axis=-1) & jnp.any(
+        work.m0 > 0, axis=-1)
+    newly_conf = work.active & w_reliable & ~work.confirmed
+    d_conf = fairshare.confirm_ttc(r, work.d, newly_conf, p)
+    d = jnp.where(newly_conf, d_conf, work.d)
+    confirmed = work.confirmed | newly_conf
+    work = work._replace(d=d, confirmed=confirmed)
+
+    # -- 3. proportional-fair service rates (eqs. 11-14) ---------------------
+    n_usable = billing_lib.usable(cluster)
+    sched = work.active & confirmed
+    alloc = fairshare.allocate(r, d, sched, n_usable, p)
+    # Pre-confirmation bootstrap: run a trickle so measurements arrive.
+    boot = work.active & ~confirmed
+    s = jnp.where(boot, cfg.bootstrap_rate, alloc.s)
+    # Demand seen by the scaler includes the bootstrap trickle.
+    n_star = alloc.n_star + jnp.sum(jnp.where(boot, cfg.bootstrap_rate, 0.0))
+
+    # -- 4. scaling policy ---------------------------------------------------
+    pol = aimd_lib.policy_push(state.pol, n_star)
+    n_base = (billing_lib.committed(cluster) if cfg.aimd_base == "committed"
+              else n_usable)
+    aimd_state = aimd_lib.aimd_step(state.aimd, n_base, n_star, p)
+    if cfg.policy == "aimd":
+        n_target = aimd_state.n_target
+    elif cfg.policy == "reactive":
+        n_target = aimd_lib.reactive_target(pol, p)
+    elif cfg.policy == "mwa":
+        n_target = aimd_lib.mwa_target(pol, p)
+    elif cfg.policy == "lr":
+        n_target = aimd_lib.lr_target(pol, p)
+    else:  # autoscale: ±step instances on mean CPU utilization (§V.C)
+        active_mask = (cluster.phase == billing_lib.ACTIVE)
+        n_act = jnp.maximum(jnp.sum(active_mask.astype(jnp.float32)), 1.0)
+        util = jnp.sum(cluster.busy_frac * active_mask) / n_act
+        n_now = billing_lib.committed(cluster)
+        any_work = jnp.any(work.active)
+        n_target = jnp.where(util > cfg.as_threshold,
+                             n_now + cfg.as_step, n_now - cfg.as_step)
+        n_target = jnp.where(any_work, n_target, n_now - cfg.as_step)
+        n_target = jnp.clip(n_target, 1.0, p.n_max)
+
+    new_state = ControllerState(kf=kf, arma=arma, pol=pol, aimd=aimd_state)
+    return new_state, work, ControlDecision(
+        s=s, n_star=n_star, n_target=n_target, b_hat=b_hat, reliable=reliable)

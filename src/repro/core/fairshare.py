@@ -1,0 +1,81 @@
+"""Proportional-fair service-rate allocation under TTC constraints (paper §III).
+
+Per workload the platform maximizes  f(s_w) = r_w ln(s_w) − d_w s_w  (eq. 10),
+whose optimum is  s*_w = r_w / d_w  (eq. 11).  When aggregate demand
+N* = Σ s*_w (eq. 12) drifts outside the AIMD guard band
+[β N_tot, N_tot + α], every rate is rescaled multiplicatively (eqs. 13-14)
+so that the allocation matches what AIMD can deliver next instant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .types import ControlParams
+
+_EPS = 1e-9
+
+
+class Allocation(NamedTuple):
+    s: jnp.ndarray        # (W,) service rates actually granted
+    s_star: jnp.ndarray   # (W,) unconstrained optimum r/d
+    n_star: jnp.ndarray   # ()   N*_tot = Σ s*   (eq. 12)
+
+
+def optimal_rates(r: jnp.ndarray, d: jnp.ndarray,
+                  active: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 11: s*_w = r_w / d_w for active workloads (0 otherwise)."""
+    s = r / jnp.maximum(d, _EPS)
+    return jnp.where(active, s, 0.0)
+
+
+def allocate(r: jnp.ndarray,
+             d: jnp.ndarray,
+             active: jnp.ndarray,
+             n_tot: jnp.ndarray,
+             params: ControlParams) -> Allocation:
+    """Service rates for the interval [t, t+1) (eqs. 11-14 + per-w cap).
+
+    Args:
+      r:       (W,) predicted CUS to completion (eq. 1).
+      d:       (W,) remaining TTC seconds (already confirmed workloads).
+      active:  (W,) bool mask of schedulable workloads.
+      n_tot:   ()   currently usable CUs (eq. 2).
+    """
+    s_star = optimal_rates(r, d, active)
+    # Eq. 12: N* = Σ s*_w.  The per-workload cap N_{w,max} only extends d_w
+    # once, at TTC confirmation (§II.B) — a later prediction overshoot
+    # therefore spikes N* well beyond the confirmed plan, and how a scaling
+    # policy reacts to those impulses is what §V.C compares.  Each
+    # workload's contribution is bounded by the surge ceiling (see
+    # ControlParams.surge_mult) because demand beyond what the platform can
+    # physically deliver to one workload is not actionable.
+    n_star = jnp.sum(jnp.minimum(s_star, params.surge_mult * params.n_w_max))
+
+    over = n_star > n_tot + params.alpha                 # demand exceeds band
+    under = n_star < params.beta * n_tot                 # demand below band
+    scale_down = (n_tot + params.alpha) / jnp.maximum(n_star, _EPS)   # eq. 13
+    scale_up = (params.beta * n_tot) / jnp.maximum(n_star, _EPS)      # eq. 14
+    scale = jnp.where(over, scale_down, jnp.where(under, scale_up, 1.0))
+
+    # Granted rates are physically capped at N_{w,max} CUs per workload.
+    s = jnp.minimum(s_star * scale, params.n_w_max)
+    s = jnp.where(active, s, 0.0)
+    return Allocation(s=s, s_star=s_star, n_star=n_star)
+
+
+def confirm_ttc(r: jnp.ndarray,
+                d_requested: jnp.ndarray,
+                newly_reliable: jnp.ndarray,
+                params: ControlParams) -> jnp.ndarray:
+    """TTC confirmation at t_init (§II.B).
+
+    If the requested TTC would need s* > N_{w,max}, extend it to the minimum
+    feasible value r / N_{w,max}; otherwise confirm as requested.  Returns the
+    confirmed TTC for rows in ``newly_reliable`` (junk elsewhere).
+    """
+    d_min = r / params.n_w_max
+    d_conf = jnp.maximum(d_requested, d_min)
+    return jnp.where(newly_reliable, d_conf, d_requested)

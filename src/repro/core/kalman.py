@@ -1,0 +1,93 @@
+"""Kalman-filter CUS prediction (paper §II.A, eqs. 4-9).
+
+Each (workload, data-type) pair carries an independent scalar Kalman filter
+over the random-walk model
+
+    b̃[t] = b̂[t] + v[t],      v ~ N(0, σ_v²)       (eq. 4, measurement)
+    b̂[t] = b̂[t-1] + z[t],    z ~ N(0, σ_z²)       (eq. 5, process)
+
+The whole fleet of filters updates as one fused, vectorized step — (W, K)
+arrays in, (W, K) arrays out — so a platform tracking millions of
+(workload, type) pairs runs the update as a single TPU program.  A Pallas
+kernel for the fused update lives in ``repro.kernels.kalman_update``.
+
+t_init detection (§V.B): the Kalman estimate is underdamped; the first
+monitoring instant at which the prediction slope turns negative marks the
+estimate as *reliable*, which triggers TTC confirmation for the workload.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import ControlParams, KalmanState
+
+
+def init(w: int, k: int, dtype=jnp.float32) -> KalmanState:
+    """Paper init: b̂[0] = π[0] = 0."""
+    z = jnp.zeros((w, k), dtype)
+    f = jnp.zeros((w, k), dtype=bool)
+    return KalmanState(b_hat=z, pi=z, b_meas_prev=z, has_meas=f,
+                       b_hat_prev=z, reliable=f)
+
+
+def step(state: KalmanState,
+         b_meas: jnp.ndarray,
+         meas_mask: jnp.ndarray,
+         params: ControlParams) -> KalmanState:
+    """One monitoring-instant update for every (w, k) filter.
+
+    Args:
+      state:      current filter bank.
+      b_meas:     (W, K) new CUS measurements b̃_{w,k}[t] (junk where unmasked).
+      meas_mask:  (W, K) bool — True where a fresh measurement exists this tick.
+      params:     σ_z², σ_v².
+
+    Filters with no fresh measurement keep their state unchanged (their clock
+    only advances on measurement arrival, matching the platform: a type that
+    completed no tasks in [t-1, t) produced no b̃).
+    """
+    # First-ever measurement bootstraps the filter: b̂[0] := b̃ (the paper
+    # "initializes each estimator with b̂_{w,k}[0], established via the
+    # initial measurement").
+    first = meas_mask & ~state.has_meas
+    b_hat0 = jnp.where(first, b_meas, state.b_hat)
+    prev_meas0 = jnp.where(first, b_meas, state.b_meas_prev)
+
+    # Time update (eqs. 6-7).
+    pi_minus = state.pi + params.sigma_z2
+    kappa = pi_minus / (pi_minus + params.sigma_v2)
+
+    # Measurement update (eqs. 8-9) — note eq. 8 uses the *lagged* measurement.
+    b_hat_new = b_hat0 + kappa * (prev_meas0 - b_hat0)
+    pi_new = (1.0 - kappa) * pi_minus
+
+    upd = meas_mask & state.has_meas          # regular (non-bootstrap) update
+    b_hat = jnp.where(upd, b_hat_new, b_hat0)
+    pi = jnp.where(upd, pi_new, state.pi)
+    b_meas_prev = jnp.where(meas_mask, b_meas, prev_meas0)
+    has_meas = state.has_meas | meas_mask
+
+    # t_init detection: first negative slope of the prediction trajectory.
+    slope = b_hat - state.b_hat
+    newly_reliable = upd & (slope < 0.0)
+    reliable = state.reliable | newly_reliable
+
+    return KalmanState(b_hat=b_hat, pi=pi, b_meas_prev=b_meas_prev,
+                       has_meas=has_meas, b_hat_prev=state.b_hat,
+                       reliable=reliable)
+
+
+def reset_rows(state: KalmanState, rows: jnp.ndarray) -> KalmanState:
+    """Zero the filters of (re)submitted workloads. ``rows``: (W,) bool."""
+    r = rows[:, None]
+    z = jnp.zeros_like(state.b_hat)
+    f = jnp.zeros_like(state.has_meas)
+    return KalmanState(
+        b_hat=jnp.where(r, z, state.b_hat),
+        pi=jnp.where(r, z, state.pi),
+        b_meas_prev=jnp.where(r, z, state.b_meas_prev),
+        has_meas=jnp.where(r, f, state.has_meas),
+        b_hat_prev=jnp.where(r, z, state.b_hat_prev),
+        reliable=jnp.where(r, f, state.reliable),
+    )

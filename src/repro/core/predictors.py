@@ -1,0 +1,128 @@
+"""Baseline CUS predictors the paper compares against (§V.B).
+
+* Ad-hoc: the Kalman measurement update (eq. 8) with a fixed gain κ = 0.1 —
+  the best fixed setting per the paper.
+* ARMA: the second-order autoregressive moving average of Roy et al. (eq. 15)
+  over *normalized* cumulative cost  b_norm[t] = total_exec_time / fraction_done,
+  divided by total items (so it predicts per-item CUS on the same scale as the
+  Kalman filter).  Reliability: prediction deviation within the last-3 window
+  stays within ±20% of the window mean (§V.B).
+
+Both are vectorized over the (W, K) filter bank exactly like ``kalman.step``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import ArmaState, ControlParams, KalmanState
+
+
+# ---------------------------------------------------------------------------
+# Ad-hoc estimator (fixed-gain exponential smoother).
+# ---------------------------------------------------------------------------
+
+def adhoc_init(w: int, k: int, dtype=jnp.float32) -> KalmanState:
+    return KalmanState(
+        b_hat=jnp.zeros((w, k), dtype), pi=jnp.zeros((w, k), dtype),
+        b_meas_prev=jnp.zeros((w, k), dtype),
+        has_meas=jnp.zeros((w, k), dtype=bool),
+        b_hat_prev=jnp.zeros((w, k), dtype),
+        reliable=jnp.zeros((w, k), dtype=bool))
+
+
+def adhoc_step(state: KalmanState, b_meas: jnp.ndarray, meas_mask: jnp.ndarray,
+               params: ControlParams) -> KalmanState:
+    """Eq. 8 with κ fixed; shares KalmanState (π is carried but unused)."""
+    first = meas_mask & ~state.has_meas
+    b_hat0 = jnp.where(first, b_meas, state.b_hat)
+    prev_meas0 = jnp.where(first, b_meas, state.b_meas_prev)
+
+    b_hat_new = b_hat0 + params.adhoc_kappa * (prev_meas0 - b_hat0)
+
+    upd = meas_mask & state.has_meas
+    b_hat = jnp.where(upd, b_hat_new, b_hat0)
+    b_meas_prev = jnp.where(meas_mask, b_meas, prev_meas0)
+    has_meas = state.has_meas | meas_mask
+
+    slope = b_hat - state.b_hat
+    reliable = state.reliable | (upd & (slope < 0.0))
+    return KalmanState(b_hat=b_hat, pi=state.pi, b_meas_prev=b_meas_prev,
+                       has_meas=has_meas, b_hat_prev=state.b_hat,
+                       reliable=reliable)
+
+
+# ---------------------------------------------------------------------------
+# ARMA estimator (Roy et al.).
+# ---------------------------------------------------------------------------
+
+WINDOW_DEPTH = 10   # reliability window capacity (paper: 3 at 5-min
+                    # monitoring, 10 at 1-min — ControlParams.arma_window)
+
+
+def arma_init(w: int, k: int, dtype=jnp.float32) -> ArmaState:
+    z3 = jnp.zeros((w, k, 3), dtype)
+    zw = jnp.zeros((w, k, WINDOW_DEPTH), dtype)
+    z = jnp.zeros((w, k), dtype)
+    return ArmaState(b_norm=z3, n_meas=z, b_hat=z, window=zw,
+                     reliable=jnp.zeros((w, k), dtype=bool),
+                     total_time=z, total_done=z)
+
+
+def arma_step(state: ArmaState,
+              exec_time: jnp.ndarray,     # (W, K) seconds spent on type k in [t-1,t)
+              items_done: jnp.ndarray,    # (W, K) items completed in [t-1,t)
+              m0: jnp.ndarray,            # (W, K) total items at submission
+              params: ControlParams) -> ArmaState:
+    """One ARMA tick.  b_norm[t] = (Σ exec time) / (completed fraction) / m0
+    == per-item CUS implied by cumulative progress (eq. 15 context)."""
+    meas_mask = items_done > 0
+    total_time = state.total_time + exec_time
+    total_done = state.total_done + items_done
+
+    frac = jnp.where(m0 > 0, total_done / jnp.maximum(m0, 1.0), 0.0)
+    b_norm_now = jnp.where(
+        frac > 0,
+        total_time / jnp.maximum(frac, 1e-9) / jnp.maximum(m0, 1.0),
+        0.0)
+
+    # Shift the 3-deep lag buffer where a fresh measurement arrived.
+    shifted = jnp.concatenate(
+        [b_norm_now[..., None], state.b_norm[..., :2]], axis=-1)
+    b_norm = jnp.where(meas_mask[..., None], shifted, state.b_norm)
+    n_meas = state.n_meas + meas_mask.astype(state.n_meas.dtype)
+
+    d, g = params.arma_delta, params.arma_gamma
+    pred3 = d * b_norm[..., 0] + g * b_norm[..., 1] + (1 - d - g) * b_norm[..., 2]
+    # Until 3 lags exist, fall back to the freshest normalized estimate.
+    b_hat = jnp.where(n_meas >= 3, pred3,
+                      jnp.where(n_meas >= 1, b_norm[..., 0], state.b_hat))
+
+    window = jnp.where(meas_mask[..., None],
+                       jnp.concatenate([b_hat[..., None],
+                                        state.window[..., :-1]], axis=-1),
+                       state.window)
+    nw = min(max(int(params.arma_window), 1), WINDOW_DEPTH)
+    win = window[..., :nw]                    # newest-first slice
+    wmean = jnp.mean(win, axis=-1)
+    dev = jnp.max(jnp.abs(win - wmean[..., None]), axis=-1)
+    ok = (n_meas >= nw) & (dev <= params.arma_tol * jnp.maximum(wmean, 1e-9))
+    reliable = state.reliable | (ok & meas_mask)
+
+    return ArmaState(b_norm=b_norm, n_meas=n_meas, b_hat=b_hat, window=window,
+                     reliable=reliable, total_time=total_time,
+                     total_done=total_done)
+
+
+def arma_reset_rows(state: ArmaState, rows: jnp.ndarray) -> ArmaState:
+    r2 = rows[:, None]
+    r3 = rows[:, None, None]
+    return ArmaState(
+        b_norm=jnp.where(r3, 0.0, state.b_norm),
+        n_meas=jnp.where(r2, 0.0, state.n_meas),
+        b_hat=jnp.where(r2, 0.0, state.b_hat),
+        window=jnp.where(r3, 0.0, state.window),
+        reliable=jnp.where(r2, False, state.reliable),
+        total_time=jnp.where(r2, 0.0, state.total_time),
+        total_done=jnp.where(r2, 0.0, state.total_done),
+    )

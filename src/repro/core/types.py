@@ -1,0 +1,154 @@
+"""Core state pytrees and static parameters for the Dithen CaaS control plane.
+
+Every *state* is a NamedTuple of fixed-shape jnp arrays so the whole control
+loop (and the cloud simulator around it) can run under ``jax.lax.scan``.
+Static knobs live in frozen dataclasses that are closed over at trace time.
+
+Notation follows Table I of the paper:
+  t        monitoring instant
+  W        max workloads tracked (fixed; ``active`` masks real ones)
+  K        data types per workload
+  m[w,k]   remaining items of type k in workload w
+  b_hat    CUS prediction per item           (paper: b̂_{w,k}[t])
+  b_meas   latest CUS measurement per item   (paper: b̃_{w,k}[t])
+  r[w]     CUS to complete workload w        (eq. 1)
+  d[w]     remaining time-to-completion
+  s[w]     service rate (CUs granted to w for [t, t+1))
+  N_tot    active compute units              (eq. 2)
+  c_tot    billed-and-available CUS          (eq. 3)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlParams:
+    """Static parameters of the control plane (paper §IV–§V defaults)."""
+
+    # AIMD (Fig. 1)
+    alpha: float = 5.0          # additive increase (CUs per monitoring instant)
+    beta: float = 0.9           # multiplicative decrease
+    n_min: float = 10.0         # lower bound for N_tot
+    n_max: float = 100.0        # upper bound for N_tot
+    n_w_max: float = 10.0       # per-workload service-rate cap  (N_{w,max})
+    # Kalman (§II.A)
+    sigma_z2: float = 0.5       # process-noise variance  σ_z²
+    sigma_v2: float = 0.5       # measurement-noise variance  σ_v²
+    # Ad-hoc estimator (§V.B)
+    adhoc_kappa: float = 0.1
+    # ARMA (eq. 15), weights per Roy et al. second-order ARMA
+    arma_delta: float = 0.8
+    arma_gamma: float = 0.15
+    # ARMA reliability: window deviation threshold (§V.B)
+    arma_window: int = 3
+    arma_tol: float = 0.20
+    # Monitoring
+    monitor_dt: float = 60.0    # seconds between monitoring instants
+    # Surge ceiling on each workload's eq-12 demand contribution: near/past
+    # its deadline a workload's r/d diverges, but the platform can never
+    # deliver more than N_{w,max} CUs to it, so provisioning demand is
+    # bounded at surge_mult × N_{w,max} per workload (implementation choice;
+    # the paper's eq. 12 is silent on the divergence).
+    surge_mult: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BillingParams:
+    """IaaS billing model (paper Appendix A: m3.medium spot, hourly quanta)."""
+
+    price_per_quantum: float = 0.0081   # $ per billing quantum per CU
+    quantum: float = 3600.0             # seconds per billing quantum
+    boot_delay: float = 300.0           # spot request → usable CU (§II.C:
+                                        # "in the order of minutes" in 2015)
+    cores_per_instance: int = 1         # p_i; paper uses single-CU instances
+    # Termination semantics.  "immediate" releases the instance now and
+    # forfeits the rest of its paid quantum (§IV's smallest-remaining-time
+    # rule minimizes the forfeit).  "boundary" (default) is the limiting
+    # case of the same rule: mark-and-drain, reclaiming exactly at the
+    # quantum boundary so nothing paid is ever forfeited (AWS's
+    # ClosestToNextInstanceHour).  Both are benchmarked.
+    terminate: str = "boundary"
+
+
+class KalmanState(NamedTuple):
+    """Per-(workload, type) scalar Kalman filter (eqs. 4-9)."""
+
+    b_hat: jnp.ndarray        # (W, K)  b̂_{w,k}[t]
+    pi: jnp.ndarray           # (W, K)  error covariance π_{w,k}[t]
+    b_meas_prev: jnp.ndarray  # (W, K)  b̃_{w,k}[t-1] (eq. 8 uses the lagged meas.)
+    has_meas: jnp.ndarray     # (W, K)  bool: at least one measurement absorbed
+    b_hat_prev: jnp.ndarray   # (W, K)  b̂_{w,k}[t-1], for slope / t_init detection
+    reliable: jnp.ndarray     # (W, K)  bool: t_init reached (first negative slope)
+
+
+class ArmaState(NamedTuple):
+    """Second-order ARMA estimator of Roy et al. (eq. 15) + §V.B reliability."""
+
+    b_norm: jnp.ndarray       # (W, K, 3)  b_norm at t, t-1, t-2
+    n_meas: jnp.ndarray       # (W, K)     measurements absorbed so far
+    b_hat: jnp.ndarray        # (W, K)     current prediction
+    window: jnp.ndarray       # (W, K, 3)  last predictions, reliability window
+    reliable: jnp.ndarray     # (W, K)     bool
+    total_time: jnp.ndarray   # (W, K)     cumulative execution seconds
+    total_done: jnp.ndarray   # (W, K)     cumulative completed items
+
+
+class WorkloadState(NamedTuple):
+    """Submitted workloads and their SLA bookkeeping."""
+
+    active: jnp.ndarray       # (W,)   bool: submitted and not finished
+    m: jnp.ndarray            # (W, K) remaining items per type
+    m0: jnp.ndarray           # (W, K) items at submission (for completion %)
+    b_true: jnp.ndarray       # (W, K) ground-truth mean CUS per item (sim only)
+    d: jnp.ndarray            # (W,)   remaining TTC (s); counts down once confirmed
+    d_requested: jnp.ndarray  # (W,)   SLA TTC requested at submission
+    confirmed: jnp.ndarray    # (W,)   bool: TTC confirmed (t_init reached)
+    t_submit: jnp.ndarray     # (W,)   submission instant (monitoring ticks)
+    t_done: jnp.ndarray       # (W,)   completion instant (-1 while running)
+
+
+class ClusterState(NamedTuple):
+    """Fixed pool of potential instances; ``phase`` drives the lifecycle.
+
+    phase: 0 = off, 1 = booting, 2 = active.
+    ``a`` is the paper's a_{i,j}[t]: seconds left in the current paid quantum.
+    """
+
+    phase: jnp.ndarray        # (I,) int8
+    a: jnp.ndarray            # (I,) remaining paid seconds in current quantum
+    boot_left: jnp.ndarray    # (I,) seconds of boot remaining (phase==1)
+    draining: jnp.ndarray     # (I,) bool: reclaim at next quantum boundary
+    cum_cost: jnp.ndarray     # ()   cumulative $ billed
+    busy_frac: jnp.ndarray    # (I,) fraction of last interval spent computing
+
+
+class AimdState(NamedTuple):
+    n_target: jnp.ndarray     # () target N_tot for the next instant
+
+
+class PolicyState(NamedTuple):
+    """Shared scratch for the scaling baselines (MWA/LR need a history)."""
+
+    n_star_hist: jnp.ndarray  # (H,) ring buffer of N*_tot
+    hist_len: jnp.ndarray     # ()   valid entries
+
+
+def n_tot(cluster: ClusterState, cores_per_instance: int = 1) -> jnp.ndarray:
+    """Paper eq. (2): active CUs (booting instances are not usable yet)."""
+    return jnp.sum((cluster.phase == 2).astype(jnp.float32)) * cores_per_instance
+
+
+def c_tot(cluster: ClusterState, cores_per_instance: int = 1) -> jnp.ndarray:
+    """Paper eq. (3): already-billed CUS available across the fleet."""
+    usable = (cluster.phase == 2).astype(jnp.float32)
+    return jnp.sum(usable * cluster.a) * cores_per_instance
+
+
+def required_cus(m: jnp.ndarray, b_hat: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (1): r_w[t] = Σ_k m_{w,k}[t] · b̂_{w,k}[t]."""
+    return jnp.sum(m * b_hat, axis=-1)

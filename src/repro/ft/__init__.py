@@ -1,0 +1,5 @@
+from .elastic import ElasticConfig, ElasticTrainer
+from .failures import FailureConfig, FailureInjector
+
+__all__ = ["ElasticConfig", "ElasticTrainer", "FailureConfig",
+           "FailureInjector"]

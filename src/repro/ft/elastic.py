@@ -1,0 +1,188 @@
+"""Elastic training runtime: the paper's control plane driving data-parallel
+replica count, with checkpoint/restart fault tolerance and straggler
+mitigation.
+
+Mapping (DESIGN.md §2): a training job is a CaaS *workload* whose items are
+steps; the Kalman filter (§II.A) predicts chip-seconds per step from noisy
+measurements; proportional fairness (§III) turns the job's TTC (deadline
+for the remaining steps) into a replica demand; AIMD (§IV) grows the fleet
+additively and sheds it multiplicatively.  Replica granules are whole DP
+slices (Appendix A's many-small-granules argument), so a scale event is:
+checkpoint → re-form mesh with R' replicas → restore (topology-agnostic) →
+continue.  Preempted/failed replicas shrink R the same way; stragglers are
+detected by per-replica step-time ratios and replaced rather than waited on.
+
+In this container replicas are logical (single CPU device); on a pod the
+same class drives ``jax.distributed`` re-initialization.  Everything
+observable (step times, events, scale decisions) is recorded for the
+benchmarks and the example driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpointer
+from ..core import aimd as aimd_lib
+from ..core import kalman
+from ..core.types import ControlParams
+from .failures import FailureConfig, FailureInjector
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    total_steps: int = 200
+    ttc_seconds: float = 3600.0      # deadline for the whole job
+    min_replicas: int = 1
+    max_replicas: int = 64
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_elastic_ckpt"
+    straggle_ratio: float = 2.0      # replace replicas slower than 2x median
+    control: ControlParams = ControlParams(alpha=2.0, beta=0.9, n_min=1.0,
+                                           n_max=64.0)
+    # Simulated per-replica step time model (CPU container): base seconds
+    # for R=1; an R-replica fleet runs a step in base/R + comm overhead.
+    sim_base_step: float = 1.0
+    sim_comm_overhead: float = 0.01  # per-step, grows log2(R)
+
+
+@dataclasses.dataclass
+class ElasticRecord:
+    step: int
+    replicas: int
+    step_time: float
+    n_star: float
+    b_hat: float
+    event: str = ""
+
+
+class ElasticTrainer:
+    """Drives (train_step, state) under the paper's controller."""
+
+    def __init__(self, cfg: ElasticConfig, train_step: Callable,
+                 state, batch_fn: Callable[[int], dict],
+                 failures: Optional[FailureInjector] = None,
+                 wall_clock: bool = False):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.state = state
+        self.batch_fn = batch_fn
+        self.failures = failures or FailureInjector(FailureConfig())
+        self.wall_clock = wall_clock
+
+        self.kf = kalman.init(1, 1)
+        self.aimd = aimd_lib.aimd_init(cfg.min_replicas)
+        self.replicas = list(range(cfg.min_replicas))
+        self._next_id = cfg.min_replicas
+        self.records: list[ElasticRecord] = []
+        self.sim_time = 0.0
+        self.restarts = 0
+
+    # ---- step-time model -----------------------------------------------------
+    def _measure_step(self, step: int) -> float:
+        r = len(self.replicas)
+        if self.wall_clock:
+            t0 = time.perf_counter()
+            self.state, _ = self.train_step(self.state,
+                                            self.batch_fn(step))
+            jax.block_until_ready(jax.tree.leaves(self.state.params)[0])
+            return time.perf_counter() - t0
+        # Simulated fleet: slowest replica paces the step (synchronous DP).
+        self.state, _ = self.train_step(self.state, self.batch_fn(step))
+        slow = max(self.failures.slowdown(rep, step)
+                   for rep in self.replicas)
+        comm = self.cfg.sim_comm_overhead * max(np.log2(max(r, 2)), 1.0)
+        noise = float(np.random.default_rng(step).lognormal(0.0, 0.08))
+        return (self.cfg.sim_base_step / r) * slow * noise + comm
+
+    # ---- control -------------------------------------------------------------
+    def _control(self, step: int, step_time: float) -> tuple[float, float]:
+        r = len(self.replicas)
+        # Measurement: chip-seconds per step (the job's CUS per item).
+        b_meas = jnp.asarray([[step_time * r]], jnp.float32)
+        self.kf = kalman.step(self.kf, b_meas,
+                              jnp.asarray([[True]]), self.cfg.control)
+        b_hat = float(self.kf.b_hat[0, 0])
+
+        remaining = self.cfg.total_steps - (step + 1)
+        deadline_left = max(self.cfg.ttc_seconds - self.sim_time, 1.0)
+        r_cus = remaining * b_hat                      # eq. 1
+        n_star = r_cus / deadline_left                 # eq. 11: s* = r/d
+        self.aimd = aimd_lib.aimd_step(
+            self.aimd, jnp.asarray(float(r)), jnp.asarray(n_star),
+            self.cfg.control)
+        return n_star, b_hat
+
+    def _resize(self, target: int, reason: str) -> None:
+        target = int(np.clip(target, self.cfg.min_replicas,
+                             self.cfg.max_replicas))
+        r = len(self.replicas)
+        if target == r:
+            return
+        # Topology change: checkpoint → re-form → restore.
+        step = int(self.state.opt.step)
+        checkpointer.save(self.cfg.checkpoint_dir, step, self.state._asdict())
+        if target > r:
+            self.replicas += [self._next_id + i for i in range(target - r)]
+            self._next_id += target - r
+        else:
+            self.replicas = self.replicas[:target]
+        restored = checkpointer.restore(self.cfg.checkpoint_dir, step,
+                                        self.state._asdict())
+        self.state = type(self.state)(**restored)
+        self.restarts += 1
+        if self.records:
+            self.records[-1].event += f" resize:{r}->{target}({reason})"
+
+    # ---- main loop -----------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> list[ElasticRecord]:
+        steps = steps or self.cfg.total_steps
+        for step in range(steps):
+            event = ""
+            failed, stragglers, reclaimed = self.failures.step_events(
+                step, self.sim_time / 3600.0, self.replicas)
+            if reclaimed and len(self.replicas) > self.cfg.min_replicas:
+                event += " spot-reclaim"
+                self._resize(max(self.cfg.min_replicas,
+                                 len(self.replicas) // 2), "reclaim")
+            if failed:
+                event += f" fail:{len(failed)}"
+                keep = [r for r in self.replicas if r not in failed]
+                self.replicas = keep or self.replicas[:1]
+                self._resize(len(self.replicas), "failure")
+
+            step_time = self._measure_step(step)
+            self.sim_time += step_time
+
+            # Straggler mitigation: replace, don't wait.
+            slow = [r for r in self.replicas
+                    if self.failures.slowdown(r, step)
+                    >= self.cfg.straggle_ratio]
+            if slow:
+                event += f" straggle:{len(slow)}"
+                for r in slow:
+                    self.replicas.remove(r)
+                    self.replicas.append(self._next_id)
+                    self._next_id += 1
+
+            n_star, b_hat = self._control(step, step_time)
+            target = int(round(float(self.aimd.n_target)))
+            self.records.append(ElasticRecord(
+                step=step, replicas=len(self.replicas),
+                step_time=step_time, n_star=n_star, b_hat=b_hat,
+                event=event.strip()))
+            if target != len(self.replicas):
+                self._resize(target, "aimd")
+
+            if (step + 1) % self.cfg.checkpoint_every == 0:
+                checkpointer.save(self.cfg.checkpoint_dir,
+                                  int(self.state.opt.step),
+                                  self.state._asdict())
+                checkpointer.prune(self.cfg.checkpoint_dir)
+        return self.records

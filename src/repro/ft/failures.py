@@ -1,0 +1,55 @@
+"""Failure / preemption / straggler injection for the elastic runtime.
+
+Spot reclamations are drawn from the Appendix-A market model (bid vs. price
+trace); stragglers and hard failures are Poisson events.  At 1000+ nodes the
+per-step event probabilities here are the design point: with p_fail ≈ 1e-4
+per node-step, a 4096-chip job sees an event every ~2.4 steps — which is why
+the runtime treats topology change as the *common case*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..sim import market
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureConfig:
+    p_fail: float = 5e-4          # hard failure per replica-step
+    p_straggle: float = 2e-3      # transient slowdown per replica-step
+    straggle_factor: float = 3.0  # slowdown multiple while straggling
+    straggle_steps: int = 5
+    spot_instance: str = "m3.medium"
+    spot_bid: float = 0.0095
+    seed: int = 0
+
+
+class FailureInjector:
+    def __init__(self, cfg: FailureConfig, horizon_hours: int = 48):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        trace = market.spot_trace(cfg.spot_instance, horizon_hours,
+                                  seed=cfg.seed)
+        self.reclaim_hours = set(
+            np.nonzero(market.preemptions(trace, cfg.spot_bid))[0].tolist())
+        self._straggle_until: dict[int, int] = {}
+
+    def step_events(self, step: int, hour: float, replicas: list[int]):
+        """Returns (failed_ids, straggler_ids, reclaimed_all: bool)."""
+        reclaimed = int(hour) in self.reclaim_hours
+        failed = [r for r in replicas
+                  if self.rng.random() < self.cfg.p_fail]
+        for r in replicas:
+            if self.rng.random() < self.cfg.p_straggle:
+                self._straggle_until[r] = step + self.cfg.straggle_steps
+        stragglers = [r for r in replicas
+                      if self._straggle_until.get(r, -1) >= step]
+        return failed, stragglers, reclaimed
+
+    def slowdown(self, replica: int, step: int) -> float:
+        if self._straggle_until.get(replica, -1) >= step:
+            return self.cfg.straggle_factor
+        return 1.0

@@ -1,0 +1,102 @@
+"""Flash-decode Pallas kernel: one query token against a long KV cache,
+with *fused int8 dequantization* (§Perf iteration 2's follow-up: the
+quantized cache is dequantized in VMEM registers inside the QK/PV matmuls,
+so HBM traffic is the int8 bytes — the full −50% wire win, which the
+pure-JAX path cannot express because XLA materializes the dequantized
+copy).
+
+Grid: (batch·kv-heads, cache blocks); the cache block index is innermost
+and sequential, carrying the streaming-softmax state (m, l, acc) in VMEM
+scratch.  The group dimension (q heads per kv head) rides along as rows of
+a (G, hd) tile so the matmuls stay MXU-shaped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 256
+NEG_INF = -1e30
+KV_SCALE = 32.0
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr,
+                   *, block_s: int, n_blocks: int, quantized: bool):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                   # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bs, hd)
+    v = v_ref[0].astype(jnp.float32)
+    if quantized:
+        k = k * (1.0 / KV_SCALE)
+        v = v * (1.0 / KV_SCALE)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)                      # (G, bs)
+
+    valid_len = len_ref[0, 0]
+    idx = si * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < valid_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(idx < valid_len, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(si == n_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 lengths: jnp.ndarray,
+                 block_s: int = DEFAULT_BLOCK_S,
+                 interpret: bool = True) -> jnp.ndarray:
+    """q: (BK, G, hd); k/v: (BK, S, hd) [bf16/f32 or int8];
+    lengths: (BK,) int32 valid cache entries.  Returns (BK, G, hd) f32."""
+    bk, g, hd = q.shape
+    s = k.shape[1]
+    assert s % block_s == 0, (s, block_s)
+    n_blocks = s // block_s
+    quantized = k.dtype == jnp.int8
+
+    kernel = functools.partial(_decode_kernel, block_s=block_s,
+                               n_blocks=n_blocks, quantized=quantized)
+    return pl.pallas_call(
+        kernel,
+        grid=(bk, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_s, hd), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bk, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.reshape(bk, 1).astype(jnp.int32), q, k, v)

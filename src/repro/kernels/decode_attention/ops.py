@@ -1,0 +1,25 @@
+"""Jit'd wrapper: GQA decode attention over a (possibly int8) KV cache."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_decode as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gqa_flash_decode(q, cache_k, cache_v, lengths, interpret: bool = True):
+    """q: (B, H, hd); cache_k/v: (B, S, KV, hd); lengths: (B,).
+    Returns (B, H, hd) f32."""
+    b, h, hd = q.shape
+    s, kv = cache_k.shape[1], cache_k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).transpose(0, 1, 2, 3).reshape(b * kv, g, hd)
+    kf = cache_k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = cache_v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    lf = jnp.repeat(lengths, kv)
+    o = _kernel(qg, kf, vf, lf, interpret=interpret)
+    return o.reshape(b, kv, g, hd).reshape(b, h, hd)

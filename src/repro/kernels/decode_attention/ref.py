@@ -1,0 +1,22 @@
+"""Oracle for the flash-decode kernel: one query against a (possibly
+int8-quantized) KV cache with a valid-length mask."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_SCALE = 32.0
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               length: jnp.ndarray) -> jnp.ndarray:
+    """q: (hd,); k/v: (S, hd) bf16/f32 or int8; length: () valid entries."""
+    if k.dtype == jnp.int8:
+        k = k.astype(jnp.float32) / KV_SCALE
+        v = v.astype(jnp.float32) / KV_SCALE
+    s = (k.astype(jnp.float32) @ q.astype(jnp.float32)) * q.shape[-1] ** -0.5
+    mask = jnp.arange(k.shape[0]) < length
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s)
+    return (p @ v.astype(jnp.float32)).astype(jnp.float32)

@@ -1,0 +1,104 @@
+"""Flash attention as a Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): the grid is (batch·heads, q-blocks);
+each program streams K/V blocks HBM→VMEM via the innermost grid dimension
+and keeps a (BLOCK_Q, hd) accumulator plus running max/denominator in VMEM
+scratch.  Block shapes are MXU-aligned (multiples of (8,128) for f32 tiles;
+BLOCK_Q×hd and BLOCK_K×hd matmuls land on the 128×128 systolic array).
+
+Causal masking is tile-level: tiles entirely above the diagonal are masked
+via the position arithmetic (Pallas grids execute all tiles; the mask makes
+them no-ops numerically).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr,
+                  *, causal: bool, block_q: int, block_k: int, n_k: int):
+    qi = pl.program_id(1)          # q-block index
+    ki = pl.program_id(2)          # k-block index (innermost: streams K/V)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (q.shape[-1] ** -0.5)
+
+    if causal:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BH, Sk, hd) — heads pre-flattened, MHA tile.
+
+    GQA is handled by the caller (repeat/reshape); this kernel is the
+    per-(batch·head) attention primitive.
+    """
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    n_q, n_k = sq // block_q, sk // block_k
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Jit'd public wrapper: GQA-aware flash attention on the Pallas kernel.
+
+On TPU this pads/reshapes (B, S, H, hd) GQA tensors into the kernel's
+(batch·head, S, hd) tiles; on CPU it runs the kernel in interpret mode
+(tests) — production dry-runs lower the pure-JAX flash path instead, so the
+roofline sees real dots (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention as _kernel
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def gqa_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        interpret: bool = True) -> jnp.ndarray:
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) with H % KV == 0."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    # Expand KV heads to H (GQA) then flatten (B,H) into the kernel grid.
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    o = _kernel(qf, kf, vf, causal=causal, interpret=interpret)
+    return o.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def gqa_reference(q, k, v, causal=True):
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    out = jax.vmap(jax.vmap(
+        lambda qq, kk, vv: attention_ref(qq, kk, vv, causal),
+        in_axes=1, out_axes=1), in_axes=0)(q, k, v)
+    return out

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash-attention kernel (single head-group tile).
+
+Semantics: causal (optional) softmax attention over one (batch·head) slice —
+q (S_q, hd), k/v (S_k, hd) — matching the Pallas kernel's per-program tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    sq, hd = q.shape
+    sk = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

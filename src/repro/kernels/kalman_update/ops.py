@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the fused Kalman fleet update."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import kalman_fused as _kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sigma_z2", "sigma_v2", "interpret"))
+def kalman_update(b_hat, pi, b_meas_prev, mask,
+                  sigma_z2: float = 0.5, sigma_v2: float = 0.5,
+                  interpret: bool = True):
+    return _kernel(b_hat, pi, b_meas_prev, mask, sigma_z2, sigma_v2,
+                   interpret=interpret)

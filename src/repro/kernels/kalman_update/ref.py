@@ -1,0 +1,15 @@
+"""Oracle for the fused Kalman fleet update: eqs. 6-9 over a (W, K) bank."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kalman_fused_ref(b_hat, pi, b_meas_prev, mask, sigma_z2, sigma_v2):
+    pi_minus = pi + sigma_z2
+    kappa = pi_minus / (pi_minus + sigma_v2)
+    b_new = b_hat + kappa * (b_meas_prev - b_hat)
+    pi_new = (1.0 - kappa) * pi_minus
+    b_out = jnp.where(mask, b_new, b_hat)
+    pi_out = jnp.where(mask, pi_new, pi)
+    return b_out, pi_out

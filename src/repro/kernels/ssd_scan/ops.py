@@ -1,0 +1,28 @@
+"""Jit'd wrapper mapping model-layout SSD tensors onto the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan as _kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_log, b, c, chunk: int = 128, interpret: bool = True):
+    """Model layout: x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,N).
+    Broadcasts shared B/C across heads and flattens (B,H) into the grid."""
+    bsz, s, h, p_ = x.shape
+    n = b.shape[-1]
+    a = (-jnp.exp(a_log))[None, None, :] * dt          # (B,S,H)
+
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p_)
+    dtf = dt.transpose(0, 2, 1).reshape(bsz * h, s)
+    af = a.transpose(0, 2, 1).reshape(bsz * h, s)
+    bf = jnp.broadcast_to(b[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+    cf = jnp.broadcast_to(c[:, None], (bsz, h, s, n)).reshape(bsz * h, s, n)
+
+    y = _kernel(xf, dtf, af, bf, cf, chunk=chunk, interpret=interpret)
+    return y.reshape(bsz, h, s, p_).transpose(0, 2, 1, 3)

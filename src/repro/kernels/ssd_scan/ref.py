@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the *intra-chunk* dense form.
+
+One program instance of the kernel computes, for a single (batch, head) and
+one chunk of length Q:
+    Y[i] = Σ_{j<=i} (C_i·B_j) exp(Σ_{j<m<=i} a_m) dt_j X[j]   (+ state I/O)
+This oracle mirrors exactly that contraction.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, dt, a, b, c, s_in):
+    """x: (Q,P); dt,a: (Q,); b,c: (Q,N); s_in: (N,P).
+    Returns y (Q,P), s_out (N,P)."""
+    q = x.shape[0]
+    cs = jnp.cumsum(a)
+    diff = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l = jnp.where(mask, jnp.exp(diff), 0.0)
+    w = (c @ b.T) * l * dt[None, :]
+    y_intra = w @ x
+    y_inter = (c @ s_in) * jnp.exp(cs)[:, None]
+    decay_to_end = jnp.exp(cs[-1] - cs)
+    s_out = s_in * jnp.exp(cs[-1]) + (b * (dt * decay_to_end)[:, None]).T @ x
+    return y_intra + y_inter, s_out

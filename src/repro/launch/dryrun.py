@@ -1,0 +1,322 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Per cell this produces:
+  * the FULL-DEPTH compile (scan-over-layers): proves the sharding config
+    is coherent at 256/512 devices, and yields memory_analysis() (fits?)
+    plus the compiled collective schedule;
+  * two DEPTH-PROBE compiles (scan unrolled at depths L1 < L2): XLA's
+    cost_analysis does NOT scale while-loop bodies by trip count (verified
+    empirically — see DESIGN.md §5), so per-layer FLOPs/bytes/collectives
+    come from the probes and extrapolate linearly:
+        total(L) = probe(L1) + (L - L1)/(L2 - L1) · (probe(L2) - probe(L1)).
+
+Each invocation handles one cell (clean device state per process); the
+sweep driver fans processes out.  Results land in JSON for §Roofline.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES
+from ..configs.base import ShapeConfig
+from ..models import sharding as sh_cfg
+from ..models.model import Model
+from ..training import optimizer
+from ..training.train_loop import TrainState
+from . import shardings as shr
+from .mesh import make_production_mesh
+
+# Microbatching for activation memory.  llama4-scout needs 16 (its (E,C,D)
+# MoE dispatch buffers dominate temp memory — §Perf iteration 5).
+GRAD_ACCUM = {"train_4k": 8}
+GRAD_ACCUM_ARCH = {("llama4-scout-17b-a16e", "train_4k"): 16}
+
+_COLL_RE = re.compile(
+    r"(\w+)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?replica_groups=(\{[^}]*\}|\[[^\]]*\])", re.S)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """Extract collective ops: kind, result bytes, group size.
+
+    Handles tuple-result collectives (XLA fuses co-located reductions into
+    one op over several tensors) and skips the -done halves of async pairs.
+    """
+    out = []
+    for line in hlo.splitlines():
+        m = re.search(
+            r"= (\(?[a-z0-9]+\[[^=]*?)\s*"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all"
+            r"|collective-permute)(-start)?\(", line)
+        if not m or "-done" in line:
+            continue
+        result_seg, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dtype, shape_s in re.findall(r"([a-z0-9]+)\[([\d,]*)\]",
+                                         result_seg):
+            size = 1
+            for d in [int(x) for x in shape_s.split(",") if x] or [1]:
+                size *= d
+            nbytes += size * _DTYPE_BYTES.get(dtype, 4)
+        gm = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+        gsize = None
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if gm2:
+                gsize = int(gm2.group(2))
+        out.append({"kind": kind, "bytes": nbytes, "group": gsize or 1})
+    return out
+
+
+def collective_link_seconds(colls: list[dict], link_bw: float = 50e9) -> float:
+    """Per-chip link-time estimate under ring algorithms.
+
+    Factors applied to the op's RESULT bytes (what the HLO shape reports):
+      all-reduce        2(g-1)/g   (reduce-scatter + all-gather rings)
+      all-gather        (g-1)/g    (result is the gathered tensor)
+      reduce-scatter    (g-1)      (result is 1/g of the logical tensor)
+      all-to-all        (g-1)/g
+      collective-permute 1
+    """
+    t = 0.0
+    for c in colls:
+        g = max(c["group"], 1)
+        if g == 1:
+            continue
+        frac = (g - 1) / g
+        factor = {"all-reduce": 2.0 * frac,
+                  "all-gather": frac,
+                  "reduce-scatter": float(g - 1),
+                  "all-to-all": frac,
+                  "collective-permute": 1.0}[c["kind"]]
+        t += factor * c["bytes"] / link_bw
+    return t
+
+
+def _shape_cfg(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+VARIANTS = ("parallel_block", "kv_int8", "accum2", "accum16", "remat_dots")
+
+
+def build_step(arch: str, shape_name: str, mesh, depth: int | None = None,
+               unroll: bool = False, variant: str | None = None):
+    """Build (fn, args_specs, in_shardings, out_shardings, donate) for a cell."""
+    cfg = ARCHS[arch]
+    if variant == "parallel_block":
+        cfg = dataclasses.replace(cfg, parallel_block=True)
+    elif variant == "kv_int8":
+        cfg = dataclasses.replace(cfg, kv_dtype="int8")
+    if depth is not None:
+        kw = {"n_layers": depth}
+        if cfg.family == "audio":
+            kw["enc_layers"] = min(cfg.enc_layers, depth)
+        cfg = dataclasses.replace(cfg, **kw)
+    shape = _shape_cfg(shape_name)
+    model_size = dict(mesh.shape)["model"]
+    model = Model(cfg, model_size=model_size)
+
+    seq_shard = (shape.kind == "decode"
+                 and shape.global_batch < dict(mesh.shape)["data"])
+    sh_cfg.configure(enabled=True, seq_sharded=seq_shard,
+                     scan_unroll=True if unroll else False,
+                     remat="dots" if variant == "remat_dots" else "nothing")
+
+    batch_specs = model.input_specs(shape)
+    params_shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    param_sh = shr.param_shardings(params_shapes, mesh)
+
+    if shape.kind == "train":
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        opt_sh = shr.tree_shardings(opt_shapes, mesh, shr.opt_spec)
+        state_specs = TrainState(params=params_shapes, opt=opt_shapes)
+        state_sh = TrainState(params=param_sh, opt=opt_sh)
+        opt_cfg = optimizer.OptConfig()
+        accum = GRAD_ACCUM_ARCH.get((arch, shape_name),
+                                    GRAD_ACCUM.get(shape_name, 1))
+        if variant == "accum2":
+            accum = 2
+        elif variant == "accum16":
+            accum = 16
+
+        from ..training.train_loop import make_train_step
+        step_fn = make_train_step(model, opt_cfg, grad_accum=accum)
+        in_sh = (state_sh, shr.batch_shardings(batch_specs, mesh))
+        metrics_specs = {"grad_norm": jax.ShapeDtypeStruct((), jnp.float32),
+                         "lr": jax.ShapeDtypeStruct((), jnp.float32),
+                         "loss": jax.ShapeDtypeStruct((), jnp.float32)}
+        out_sh = (state_sh, shr.replicated(metrics_specs, mesh))
+        return (step_fn, (state_specs, batch_specs), in_sh, out_sh, (0,))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.forward(params, batch, remat=False)
+        in_sh = (param_sh, shr.batch_shardings(batch_specs, mesh))
+        return (prefill_step, (params_shapes, batch_specs), in_sh, None, ())
+
+    # decode
+    b = shape.global_batch
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    dummy_batch = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.family == "audio":
+        dummy_batch["frames"] = batch_specs["frames"]
+    cache_shapes = jax.eval_shape(
+        lambda p, bt: model.init_decode_state(p, bt, shape.seq_len),
+        params_shapes, dummy_batch)
+    cache_sh = shr.cache_shardings(cache_shapes, mesh, seq_shard=seq_shard)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    tok_sh = shr.tree_shardings({"token": tok}, mesh, shr.batch_spec)["token"]
+    in_sh = (param_sh, tok_sh, cache_sh,
+             jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+    return (serve_step, (params_shapes, tok, cache_shapes, pos), in_sh,
+            None, (2,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool = True, variant: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = ARCHS[arch]
+    result = {"arch": arch, "shape": shape_name, "variant": variant,
+              "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        # ---- full-depth compile: proof + memory + schedule ------------------
+        fn, args, in_sh, out_sh, donate = build_step(arch, shape_name, mesh,
+                                                     variant=variant)
+        jit_kw = dict(in_shardings=in_sh)
+        if out_sh is not None:
+            jit_kw["out_shardings"] = out_sh
+        if donate:
+            jit_kw["donate_argnums"] = donate
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            result["memory"] = {
+                k: int(getattr(mem, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        ca = compiled.cost_analysis() or {}
+        result["full_cost"] = {k: float(ca[k]) for k in
+                               ("flops", "bytes accessed") if k in ca}
+        colls = parse_collectives(compiled.as_text())
+        result["full_collectives"] = {
+            "count": len(colls),
+            "bytes": float(sum(c["bytes"] for c in colls)),
+            "by_kind": _by_kind(colls),
+        }
+        result["compile_s"] = round(time.time() - t0, 1)
+
+        # ---- depth probes (single-pod roofline only) -------------------------
+        if probes:
+            l1, l2 = _probe_depths(cfg)
+            probe = {}
+            for tag, depth in (("l1", l1), ("l2", l2)):
+                fn, args, in_sh, out_sh, _ = build_step(
+                    arch, shape_name, mesh, depth=depth, unroll=True,
+                    variant=variant)
+                jit_kw = dict(in_shardings=in_sh)
+                if out_sh is not None:
+                    jit_kw["out_shardings"] = out_sh
+                plow = jax.jit(fn, **jit_kw).lower(*args)
+                pcomp = plow.compile()
+                pca = pcomp.cost_analysis() or {}
+                pcolls = parse_collectives(pcomp.as_text())
+                probe[tag] = {
+                    "depth": depth,
+                    "flops": float(pca.get("flops", 0.0)),
+                    "bytes": float(pca.get("bytes accessed", 0.0)),
+                    "coll_bytes": float(sum(c["bytes"] for c in pcolls)),
+                    "coll_link_s": collective_link_seconds(pcolls),
+                    "colls": _by_kind(pcolls),
+                }
+            result["probe"] = probe
+            result["probe_depths"] = [l1, l2]
+
+    result["ok"] = True
+    result["total_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def _by_kind(colls: list[dict]) -> dict:
+    agg: dict = {}
+    for c in colls:
+        k = c["kind"]
+        a = agg.setdefault(k, {"count": 0, "bytes": 0.0})
+        a["count"] += 1
+        a["bytes"] += c["bytes"]
+    return agg
+
+
+def _probe_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every
+    if cfg.family == "moe" and cfg.global_every:
+        return cfg.global_every, 2 * cfg.global_every
+    return 1, 2
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--variant", default=None, choices=VARIANTS,
+                    help="§Perf hillclimb variant")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    shape = SHAPES[args.shape]
+    model = Model(cfg, model_size=16)
+    if not model.supports(shape):
+        res = {"arch": args.arch, "shape": args.shape, "ok": True,
+               "skipped": "quadratic attention at 500k (DESIGN.md)",
+               "mesh": "2x16x16" if args.multipod else "16x16"}
+    else:
+        try:
+            res = run_cell(args.arch, args.shape, args.multipod,
+                           probes=not args.no_probes, variant=args.variant)
+        except Exception as e:  # noqa: BLE001 — report, don't crash sweep
+            res = {"arch": args.arch, "shape": args.shape, "ok": False,
+                   "mesh": "2x16x16" if args.multipod else "16x16",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+
+    js = json.dumps(res, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(js)
+    print(js if len(js) < 4000 else js[:4000])
+    if res.get("memory"):
+        print("memory_analysis:", res["memory"], file=sys.stderr)
+    sys.exit(0 if res.get("ok") else 1)
+
+
+if __name__ == "__main__":
+    main()

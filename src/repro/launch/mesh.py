@@ -1,0 +1,27 @@
+"""Production meshes for the dry-run and launchers.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests import this
+module under a single CPU device without side effects).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16×16 (data, model).  Multi-pod: 2×16×16 (pod, data,
+    model) — the 'pod' axis composes with 'data' for gradient reduction and
+    carries the lowest-frequency collectives across the DCI/ICI boundary."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host offers (CPU smoke / examples): 1×N (data, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

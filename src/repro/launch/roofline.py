@@ -1,0 +1,139 @@
+"""Roofline analysis over dry-run JSON results (§Roofline of EXPERIMENTS.md).
+
+Three terms per (arch × shape) cell on the single-pod 16×16 mesh, all in
+seconds-per-step on TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips · 197e12)        [bf16 MXU peak]
+  memory     = HLO_bytes / (chips · 819e9)         [HBM bandwidth]
+  collective = Σ ring-model link-seconds / 50e9    [per-link ICI]
+
+HLO_FLOPs/bytes come from the depth-probe extrapolation (dryrun.py §doc);
+collective link-seconds likewise.  MODEL_FLOPS = 6·N·D (dense) or
+6·N_active·D (MoE) exposes remat/dispatch/padding waste as a ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from ..configs import ARCHS, SHAPES
+
+CHIPS = 256
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+GRAD_ACCUM = {"train_4k": 8}  # must match dryrun.GRAD_ACCUM
+
+
+def extrapolate(res: dict, key: str) -> float:
+    """total(L) = p1 + (L-L1)/(L2-L1) · (p2-p1), over the probe depths.
+
+    cost_analysis is PER-DEVICE on the SPMD-partitioned module; probes
+    unroll both the layer scan and the grad-accum scan, so the value is
+    per-device per-step directly.
+    """
+    p = res["probe"]
+    l1, l2 = res["probe_depths"]
+    cfg = ARCHS[res["arch"]]
+    l = cfg.n_layers
+    v1, v2 = p["l1"][key], p["l2"][key]
+    return v1 + (l - l1) / (l2 - l1) * (v2 - v1)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D where D = tokens processed by the step."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch        # decode: one token per seq
+
+
+def analyze(res: dict) -> dict | None:
+    if not res.get("ok") or "probe" not in res:
+        return None
+    arch, shape = res["arch"], res["shape"]
+    flops = extrapolate(res, "flops")
+    bytes_ = extrapolate(res, "bytes")
+    coll_s = extrapolate(res, "coll_link_s")
+
+    # Per-device quantities (SPMD module) → per-chip time directly.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll_s                      # already per-chip link seconds
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(arch, shape) / CHIPS     # per-chip share
+    return {
+        "arch": arch, "shape": shape,
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "model_flops": mf,
+        "hlo_flops": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": t_compute / bound if bound else 0.0,
+        "hlo_bytes": bytes_,
+        "mem_temp_bytes": res.get("memory", {}).get("temp_size_in_bytes"),
+        "mem_arg_bytes": res.get("memory", {}).get("argument_size_in_bytes"),
+    }
+
+
+def load_dir(d: str) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def table(results: list[dict]) -> str:
+    rows = []
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collect':>10s} {'dom':>8s} {'useful':>7s} {'roofl%':>7s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for res in results:
+        if res.get("skipped"):
+            rows.append(f"{res['arch']:24s} {res['shape']:12s} "
+                        f"{'— skipped: ' + res['skipped']}")
+            continue
+        a = analyze(res)
+        if a is None:
+            rows.append(f"{res['arch']:24s} {res['shape']:12s} FAILED: "
+                        f"{res.get('error', '?')[:60]}")
+            continue
+        rows.append(
+            f"{a['arch']:24s} {a['shape']:12s} "
+            f"{a['t_compute']:10.4f} {a['t_memory']:10.4f} "
+            f"{a['t_collective']:10.4f} {a['dominant']:>8s} "
+            f"{a['useful_ratio']:7.2f} {100 * a['roofline_fraction']:6.1f}%")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    results = [r for r in load_dir(args.dir) if r.get("mesh") == "16x16"]
+    print(table(results))
+    if args.json_out:
+        rows = [analyze(r) for r in results]
+        with open(args.json_out, "w") as f:
+            json.dump([r for r in rows if r], f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+One table maps leaf *names* to the tensor axis that shards over 'model';
+everything else is replicated across 'model'.  Parameters are replicated
+across 'data'/'pod' in the baseline (pure DP+TP); ZeRO-1 optimizer-state
+sharding is a §Perf variant.  Every spec is divisibility-guarded: an axis
+that does not divide the mesh factor falls back to replication rather than
+failing to lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# leaf name -> axis index (negative, from the right) sharded over 'model'
+_MODEL_AXIS = {
+    "embedding": -2,
+    "wq": -2, "wk": -2, "wv": -2, "bq": -2, "bk": -2, "bv": -2,
+    "wo": -3,
+    "w_gate": -1, "w_up": -1, "b_up": -1,
+    "w_down": -2,
+    "z_proj": -1, "x_proj": -1, "dt_proj": -1,
+    "conv_x": -1, "conv_bias_x": -1,
+    "a_log": -1, "dt_bias": -1, "d_skip": -1,
+    "out_proj": -2,
+}
+# parents whose "scale" leaf shards on 'model' (inner-dim norms)
+_SHARDED_NORM_PARENTS = {"gnorm"}
+
+
+def _path_names(path) -> list[str]:
+    return [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+
+
+def _guard(spec_axes, shape, mesh) -> P:
+    """Drop mesh axes that do not divide the tensor axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        factor = int(np.prod([sizes[n] for n in names]))
+        out.append(ax if dim % factor == 0 and dim > 0 else None)
+    return P(*out)
+
+
+def param_spec(path, leaf, mesh) -> P:
+    names = _path_names(path)
+    leaf_name = names[-1]
+    axes = [None] * leaf.ndim
+    if leaf_name in _MODEL_AXIS:
+        axes[_MODEL_AXIS[leaf_name]] = "model"
+    elif leaf_name == "scale" and len(names) >= 2 \
+            and names[-2] in _SHARDED_NORM_PARENTS:
+        axes[-1] = "model"
+    # MoE expert weights additionally FSDP-shard over 'data' (tens of
+    # billions of expert params cannot be replicated across the data axis).
+    # Prefer the expert axis; fall back to d_model if E doesn't divide.
+    if len(names) >= 2 and names[-2] == "moe" and leaf.ndim >= 3 \
+            and leaf_name in ("w_gate", "w_up", "w_down"):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        d = sizes.get("data", 1)
+        e_ax = leaf.ndim - 3
+        d_ax = leaf.ndim - 2 if leaf_name != "w_down" else leaf.ndim - 1
+        if d > 1 and leaf.shape[e_ax] % d == 0:
+            axes[e_ax] = "data"
+        elif d > 1 and leaf.shape[d_ax] % d == 0:
+            axes[d_ax] = "data"
+    return _guard(axes, leaf.shape, mesh)
+
+
+def opt_spec(path, leaf, mesh) -> P:
+    """ZeRO-1: optimizer moments additionally shard over 'data' on the
+    first free axis that divides it (≥1 MiB leaves only).  At 16×16 this
+    cuts per-chip f32 moment storage 16× — required to fit the 20B+ models."""
+    base = tuple(param_spec(path, leaf, mesh))
+    axes = list(base) + [None] * (leaf.ndim - len(base))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    d = sizes.get("data", 1)
+    name = _path_names(path)[-1]
+    already_data = any(ax == "data" or (isinstance(ax, tuple)
+                                        and "data" in ax) for ax in axes)
+    if d > 1 and leaf.size >= (1 << 20) and not already_data \
+            and name not in ("step",):
+        for i, ax in enumerate(axes):
+            if ax is None and leaf.shape[i] % d == 0 and leaf.shape[i] > 0:
+                axes[i] = "data"
+                break
+    return P(*axes)
+
+
+def tree_shardings(tree, mesh, spec_fn):
+    """Map a pytree of arrays/ShapeDtypeStructs to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = [NamedSharding(mesh, spec_fn(path, leaf, mesh))
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh):
+    return tree_shardings(params, mesh, param_spec)
+
+
+def _batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(path, leaf, mesh, *, seq_shard: bool = False) -> P:
+    """Model inputs: batch on ('pod','data'); optionally sequence on 'data'
+    when the batch axis cannot shard (long-context decode)."""
+    name = _path_names(path)[-1]
+    b_ax = _batch_axes(mesh)
+    axes: list = [None] * leaf.ndim
+    if leaf.ndim >= 1 and name in ("tokens", "labels", "token",
+                                   "patch_embeds", "frames"):
+        axes[0] = b_ax
+        if name in ("tokens", "labels") and seq_shard and leaf.ndim >= 2:
+            axes[1] = "data"
+    return _guard(axes, leaf.shape, mesh)
+
+
+def batch_shardings(batch, mesh, seq_shard: bool = False):
+    return tree_shardings(
+        batch, mesh,
+        lambda p, l, m: batch_spec(p, l, m, seq_shard=seq_shard))
+
+
+def cache_spec(path, leaf, mesh, *, seq_shard: bool = False) -> P:
+    """Decode caches.  Conventions (leading L/group axis unsharded):
+      k/v/xk/xv/attn_k/attn_v: (L, B, S, KV, hd) — batch on data, KV on
+        model; S on 'data' instead when seq_shard (batch=1 long decode).
+      conv_x: (L,B,k,di) di on model;  conv_bc: replicated channels;
+      state: (L,B,H,N,P) H on model.
+    """
+    name = _path_names(path)[-1]
+    b_ax = _batch_axes(mesh)
+    axes: list = [None] * leaf.ndim
+    if name in ("k", "v", "xk", "xv", "attn_k", "attn_v"):
+        axes[1] = b_ax
+        axes[3] = "model"
+        if seq_shard:
+            axes[2] = "data"
+    elif name == "conv_x":
+        axes[1] = b_ax
+        axes[-1] = "model"
+    elif name == "conv_bc":
+        axes[1] = b_ax
+    elif name == "state":
+        axes[1] = b_ax
+        axes[2] = "model"
+    return _guard(axes, leaf.shape, mesh)
+
+
+def cache_shardings(cache, mesh, seq_shard: bool = False):
+    return tree_shardings(
+        cache, mesh,
+        lambda p, l, m: cache_spec(p, l, m, seq_shard=seq_shard))
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,6 @@
+# 10-architecture model zoo: dense GQA transformers, Mamba-2 SSD, Zamba-2
+# hybrid, Whisper enc-dec, LLaVA backbone, Mixtral / Llama-4 MoE.
+from .dims import Dims
+from .model import Model
+
+__all__ = ["Dims", "Model"]

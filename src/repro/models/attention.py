@@ -1,0 +1,240 @@
+"""GQA attention: training/prefill (blocked flash, memory-bounded) + decode
+(KV-cache, full or ring-buffer).
+
+Locality variants cover the whole zoo:
+  * causal                — dense LMs
+  * sliding window (W)    — Mixtral, Zamba2 shared block
+  * chunked-local (C)     — Llama-4 local layers (iRoPE: global layers NoPE)
+  * bidirectional / cross — Whisper encoder / decoder cross-attention
+
+The full-sequence path is a streaming-softmax (flash) formulation scanned
+over KV blocks, so the 32k prefill never materializes an S×S score matrix.
+On TPU the Pallas kernel in ``repro.kernels.flash_attention`` implements the
+same tiling in VMEM; this pure-JAX path is the oracle and the dry-run path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+from .layers import DTYPE, _normal, apply_rope
+
+K_BLOCK = 1024
+
+
+class AttnSpec(NamedTuple):
+    n_heads: int
+    n_kv: int
+    hd: int
+    causal: bool = True
+    window: Optional[int] = None     # sliding-window size
+    chunk: Optional[int] = None      # chunked-local size
+    use_rope: bool = True
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+
+
+def init(key, d: int, spec: AttnSpec) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _normal(ks[0], (d, spec.n_heads, spec.hd), d ** -0.5),
+        "wk": _normal(ks[1], (d, spec.n_kv, spec.hd), d ** -0.5),
+        "wv": _normal(ks[2], (d, spec.n_kv, spec.hd), d ** -0.5),
+        "wo": _normal(ks[3], (spec.n_heads, spec.hd, d),
+                      (spec.n_heads * spec.hd) ** -0.5),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((spec.n_heads, spec.hd), DTYPE)
+        p["bk"] = jnp.zeros((spec.n_kv, spec.hd), DTYPE)
+        p["bv"] = jnp.zeros((spec.n_kv, spec.hd), DTYPE)
+    return p
+
+
+def project_qkv(p: dict, x: jnp.ndarray, spec: AttnSpec,
+                positions: jnp.ndarray, is_global=None):
+    """x: (B,S,D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope applied.
+
+    ``is_global`` (traced bool or None) implements Llama-4 iRoPE: global
+    layers skip rope (NoPE) — selected at runtime so a heterogeneous layer
+    stack still scans as one compiled block.
+    """
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"])
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"])
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if spec.use_rope:
+        qr = apply_rope(q, positions, spec.rope_theta)
+        kr = apply_rope(k, positions, spec.rope_theta)
+        if is_global is None:
+            q, k = qr, kr
+        else:
+            q = jnp.where(is_global, q, qr)
+            k = jnp.where(is_global, k, kr)
+    q = sh.shard(q, sh.BATCH, None, sh.MODEL, None)
+    k = sh.shard(k, sh.BATCH, None, sh.MODEL if spec.n_kv > 1 else None, None)
+    v = sh.shard(v, sh.BATCH, None, sh.MODEL if spec.n_kv > 1 else None, None)
+    return q, k, v
+
+
+def _tile_mask(q_pos, k_pos, spec: AttnSpec, is_global=None):
+    """Validity mask for a (q_block, k_block) tile from position vectors.
+
+    ``is_global`` (traced bool): lifts the chunk-locality constraint for
+    Llama-4 global layers at runtime.
+    """
+    d = q_pos[:, None] - k_pos[None, :]
+    m = k_pos[None, :] >= 0          # padded key slots carry position -1
+    if spec.causal:
+        m &= d >= 0
+    if spec.window is not None:
+        m &= d < spec.window
+    if spec.chunk is not None:
+        same = (q_pos[:, None] // spec.chunk) == (k_pos[None, :] // spec.chunk)
+        m &= same if is_global is None else (same | is_global)
+    return m
+
+
+def flash_attention(q, k, v, spec: AttnSpec,
+                    q_pos=None, k_pos=None, k_block: int = K_BLOCK,
+                    is_global=None):
+    """Streaming-softmax attention scanned over KV blocks.
+
+    q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd).  Returns (B,Sq,H,hd).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(sk)
+
+    kb = min(k_block, sk)
+    n_blocks = (sk + kb - 1) // kb
+    pad = n_blocks * kb - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    k = k.reshape(b, n_blocks, kb, kv, hd)
+    v = v.reshape(b, n_blocks, kb, kv, hd)
+    k_posb = k_pos.reshape(n_blocks, kb)
+    scale = hd ** -0.5
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kblk, vblk, kp = xs                       # (B,kb,KV,hd) x2, (kb,)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kblk.astype(jnp.float32))
+        s = s * scale
+        mask = _tile_mask(q_pos, kp, spec, is_global)    # (Sq, kb)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (m_new == -inf).
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p_ = jnp.exp(s - m_safe[..., None])
+        p_ = jnp.where(mask[None, :, None, None, :], p_, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+        l_new = l_run * alpha + jnp.sum(p_, axis=-1)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", p_, vblk.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    init_carry = (
+        jnp.full((b, sq, kv, g), -jnp.inf, jnp.float32),
+        jnp.zeros((b, sq, kv, g), jnp.float32),
+        jnp.zeros((b, sq, kv, g, hd), jnp.float32),
+    )
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, init_carry,
+        (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), k_posb))
+    out = acc / jnp.maximum(l_f[..., None], 1e-20)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def reference_attention(q, k, v, spec: AttnSpec, q_pos=None, k_pos=None):
+    """O(S²)-memory oracle for tests (small shapes only)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if q_pos is None:
+        q_pos = jnp.arange(sq)
+    if k_pos is None:
+        k_pos = jnp.arange(k.shape[1])
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k.astype(jnp.float32)) * hd ** -0.5
+    mask = _tile_mask(q_pos, k_pos, spec)
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, pos, spec: AttnSpec,
+                     ring: bool = False, is_global=None):
+    """Single-token attention against a KV cache.
+
+    q: (B,1,H,hd); cache_k/v: (B,S_cache,KV,hd); pos: scalar current index
+    (number of tokens already in the cache, including this one at pos-1).
+    For ring caches, slot validity covers the whole buffer once warm.
+    """
+    b, _, h, hd = q.shape
+    s_cache, kv = cache_k.shape[1], cache_k.shape[2]
+    g = h // kv
+    if cache_k.dtype == jnp.int8:
+        cache_k = dequantize_kv(cache_k)
+        cache_v = dequantize_kv(cache_v)
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   cache_k.astype(jnp.float32)) * hd ** -0.5
+    idx = jnp.arange(s_cache)
+    if ring:
+        valid = idx < jnp.minimum(pos, s_cache)
+    else:
+        valid = idx < pos
+        if spec.window is not None:
+            valid &= idx >= pos - spec.window
+    if spec.chunk is not None:
+        cur = (pos - 1) // spec.chunk
+        same = (idx // spec.chunk) == cur
+        valid &= same if is_global is None else (same | is_global)
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+KV_QUANT_SCALE = 32.0     # symmetric int8 KV quantization (§Perf variant)
+
+
+def quantize_kv(x: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.round(x.astype(jnp.float32) * KV_QUANT_SCALE)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def dequantize_kv(q: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * (1.0 / KV_QUANT_SCALE)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, pos, ring_size=None):
+    """Write one step's K/V at position ``pos`` (mod ring_size if ring).
+    Quantizes the incoming K/V when the cache is int8."""
+    if cache_k.dtype == jnp.int8:
+        k_new, v_new = quantize_kv(k_new), quantize_kv(v_new)
+    slot = pos if ring_size is None else pos % ring_size
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    return ck, cv
+
+
+def output_proj(p: dict, attn_out: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.einsum("bshe,hed->bsd", attn_out, p["wo"])
+    return sh.shard(out, sh.BATCH, None, None)

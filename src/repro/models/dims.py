@@ -1,0 +1,71 @@
+"""Padded model dimensions for tensor-parallel sharding.
+
+The production mesh has a 16-way 'model' axis.  Heads/vocab that do not
+divide it are padded, and GQA KV heads with n_kv < model_size are
+*replicated* up to the axis size (each KV head stored model_size/n_kv
+times) so the KV cache shards cleanly — the standard Megatron treatment.
+Padding waste is reported by the roofline's useful-FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ArchConfig
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    cfg: ArchConfig
+    model_size: int = 1          # size of the 'model' mesh axis
+
+    @property
+    def n_heads(self) -> int:
+        if self.cfg.n_heads == 0:
+            return 0
+        return _pad_to(self.cfg.n_heads, self.model_size)
+
+    @property
+    def n_kv(self) -> int:
+        """KV heads after replication/padding (divides n_heads, shards)."""
+        kv = self.cfg.n_kv_heads
+        if kv == 0:
+            return 0
+        if kv >= self.model_size:
+            return kv            # already shards (kv % model checked below)
+        # Replicate KV heads up to the model axis; n_heads padding keeps
+        # q-groups aligned (n_heads % n_kv == 0 by construction).
+        return self.model_size
+
+    @property
+    def kv_repeat(self) -> int:
+        return self.n_kv // max(self.cfg.n_kv_heads, 1) if self.cfg.n_kv_heads else 1
+
+    @property
+    def vocab(self) -> int:
+        return _pad_to(self.cfg.vocab, self.model_size)
+
+    @property
+    def hd(self) -> int:
+        return self.cfg.hd
+
+    @property
+    def d_ff(self) -> int:
+        return _pad_to(self.cfg.d_ff, self.model_size) if self.cfg.d_ff else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.cfg.ssm_heads
+
+    def check(self) -> None:
+        m = self.model_size
+        if self.n_heads and self.n_heads % m:
+            raise ValueError(f"heads {self.n_heads} !% model {m}")
+        if self.n_kv and self.n_kv % min(m, self.n_kv):
+            raise ValueError(f"kv {self.n_kv} vs model {m}")
+        if self.n_kv and self.n_heads % self.n_kv:
+            raise ValueError(f"heads {self.n_heads} !% kv {self.n_kv}")

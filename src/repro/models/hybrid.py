@@ -1,0 +1,157 @@
+"""Zamba2-style hybrid: a Mamba-2 backbone with ONE shared attention block
+applied every ``attn_every`` layers (parameter sharing across invocations).
+
+Simplification vs. the released Zamba2 (noted in DESIGN.md): the shared
+block consumes the running hidden state directly (no concat-with-embeddings
+projector).  The shared block uses sliding-window attention so the
+``long_500k`` cell stays sub-quadratic — long-range state is carried by the
+SSM path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import sharding as sh
+from . import ssm
+from .attention import AttnSpec
+from .dims import Dims
+from .layers import DTYPE, embed, embed_init, mlp, mlp_init, rmsnorm, \
+    rmsnorm_init, unembed
+
+
+def _attn_spec(dims: Dims) -> AttnSpec:
+    cfg = dims.cfg
+    return AttnSpec(n_heads=dims.n_heads, n_kv=dims.n_kv, hd=dims.hd,
+                    causal=True, window=cfg.sliding_window,
+                    rope_theta=cfg.rope_theta)
+
+
+def init_params(key, dims: Dims) -> dict:
+    cfg = dims.cfg
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    blocks = [ssm.init(keys[i], dims) for i in range(cfg.n_layers)]
+    ka, km = keys[-4], keys[-3]
+    return {
+        "embed": embed_init(keys[-1], dims.vocab, cfg.d_model),
+        "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "shared_attn": {
+            "ln_attn": rmsnorm_init(cfg.d_model),
+            "attn": attn.init(ka, cfg.d_model, _attn_spec(dims)),
+            "ln_mlp": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(km, cfg.d_model, dims.d_ff, cfg.mlp),
+        },
+        "ln_f": rmsnorm_init(cfg.d_model),
+    }
+
+
+def _shared_attn_apply(p, dims, x, positions):
+    cfg = dims.cfg
+    spec = _attn_spec(dims)
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    q, k, v = attn.project_qkv(p["attn"], h, spec, positions)
+    o = attn.flash_attention(q, k, v, spec, q_pos=positions, k_pos=positions)
+    x = x + attn.output_proj(p["attn"], o)
+    h = rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    return x + mlp(p["mlp"], h, cfg.mlp)
+
+
+def forward(params, dims: Dims, tokens, remat: bool = True):
+    cfg = dims.cfg
+    k = cfg.attn_every
+    x = embed(params["embed"], tokens).astype(DTYPE)
+    x = sh.shard(x, sh.BATCH, sh.SEQ, None)
+    positions = jnp.arange(x.shape[1])
+
+    n_groups, tail = divmod(cfg.n_layers, k)
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * k].reshape(k, n_groups, *a.shape[1:]),
+        params["blocks"])
+    tail_p = jax.tree.map(lambda a: a[n_groups * k:], params["blocks"])
+
+    def inner(x, layer):
+        return ssm.block_apply(layer, dims, x) + x, None
+
+    inner_r = jax.checkpoint(inner, policy=sh.remat_policy()) \
+        if remat else inner
+
+    def group(x, gparams):
+        x, _ = jax.lax.scan(inner_r, x, gparams, unroll=sh.scan_unroll())
+        x = _shared_attn_apply(params["shared_attn"], dims, x, positions)
+        return x, None
+
+    # grouped leaves are (k, n_groups, ...): scan over groups (axis 1).
+    gsw = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), grouped)
+    x, _ = jax.lax.scan(group, x, gsw, unroll=sh.scan_unroll())
+    for i in range(tail):
+        layer = jax.tree.map(lambda a: a[i], tail_p)
+        x, _ = inner(x, layer)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed_padded(params, dims, x)
+
+
+def unembed_padded(params, dims, x):
+    logits = unembed(params["embed"], x)
+    if dims.vocab != dims.cfg.vocab:
+        logits = jnp.where(jnp.arange(dims.vocab) < dims.cfg.vocab,
+                           logits, -1e9)
+    return logits
+
+
+def init_cache(dims: Dims, batch: int, max_len: int) -> dict:
+    cfg = dims.cfg
+    w = min(max_len, cfg.sliding_window or max_len)
+    n_groups = cfg.n_layers // cfg.attn_every
+    return {
+        "ssm": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)),
+            ssm.init_ssm_cache(dims, batch))._asdict(),
+        "attn_k": jnp.zeros((n_groups, batch, w, dims.n_kv, dims.hd), DTYPE),
+        "attn_v": jnp.zeros((n_groups, batch, w, dims.n_kv, dims.hd), DTYPE),
+    }
+
+
+def decode_step(params, dims: Dims, token, cache, pos):
+    cfg = dims.cfg
+    k = cfg.attn_every
+    x = embed(params["embed"], token[:, None]).astype(DTYPE)
+    n_groups, tail = divmod(cfg.n_layers, k)
+    spec = _attn_spec(dims)
+    sp = params["shared_attn"]
+
+    ssm_cache = cache["ssm"]
+    new_ssm = []
+    ak, av = cache["attn_k"], cache["attn_v"]
+    new_ak, new_av = [], []
+    for li in range(cfg.n_layers):
+        layer = jax.tree.map(lambda a: a[li], params["blocks"])
+        lc = ssm.SsmCache(**{k: ssm_cache[k][li] for k in
+                             ("conv_x", "conv_bc", "state")})
+        y, nc = ssm.block_decode(layer, dims, x, lc)
+        x = x + y
+        new_ssm.append(nc)
+        g, r = divmod(li + 1, k)
+        if r == 0 and g <= n_groups:
+            gi = g - 1
+            h = rmsnorm(sp["ln_attn"], x, cfg.norm_eps)
+            q, kk_, vv = attn.project_qkv(sp["attn"], h, spec, pos[None])
+            ck, cv = attn.update_cache(ak[gi], av[gi], kk_, vv, pos,
+                                       ring_size=ak.shape[2])
+            o = attn.decode_attention(q, ck, cv, pos + 1, spec, ring=True)
+            x = x + attn.output_proj(sp["attn"], o)
+            h = rmsnorm(sp["ln_mlp"], x, cfg.norm_eps)
+            x = x + mlp(sp["mlp"], h, cfg.mlp)
+            new_ak.append(ck)
+            new_av.append(cv)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_padded(params, dims, x)[:, 0]
+    new_cache = {
+        "ssm": {k: jnp.stack([getattr(c, k) for c in new_ssm])
+                for k in ("conv_x", "conv_bc", "state")},
+        "attn_k": jnp.stack(new_ak), "attn_v": jnp.stack(new_av),
+    }
+    return logits, new_cache

@@ -1,0 +1,125 @@
+"""Shared building blocks: norms, MLPs, embeddings, rotary positions.
+
+Parameters are plain dicts of jnp arrays; every init function is
+shape-deterministic so the dry-run can ``eval_shape`` it without allocating.
+Compute dtype is bf16 with f32 accumulation in norms/softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+
+DTYPE = jnp.bfloat16
+
+
+def _normal(key, shape, scale, dtype=DTYPE):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# --- RMSNorm ---------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), DTYPE)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+# --- LayerNorm (Whisper) -----------------------------------------------------
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), DTYPE), "bias": jnp.zeros((d,), DTYPE)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+# --- MLPs -------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, kind: str) -> dict:
+    ks = jax.random.split(key, 3)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+    if kind == "swiglu":
+        return {"w_gate": _normal(ks[0], (d, f), scale_in),
+                "w_up": _normal(ks[1], (d, f), scale_in),
+                "w_down": _normal(ks[2], (f, d), scale_out)}
+    return {"w_up": _normal(ks[0], (d, f), scale_in),
+            "b_up": jnp.zeros((f,), DTYPE),
+            "w_down": _normal(ks[1], (f, d), scale_out),
+            "b_down": jnp.zeros((d,), DTYPE)}
+
+
+def mlp(p: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = sh.shard(h, sh.BATCH, None, sh.MODEL)
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    h = sh.shard(h, sh.BATCH, None, sh.MODEL)
+    return h @ p["w_down"] + p["b_down"]
+
+
+# --- Embedding / LM head -----------------------------------------------------
+
+def embed_init(key, vocab: int, d: int) -> dict:
+    return {"embedding": _normal(key, (vocab, d), d ** -0.5)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    logits = x @ p["embedding"].T
+    return sh.shard(logits, sh.BATCH, None, sh.MODEL)
+
+
+# --- Rotary position embedding ----------------------------------------------
+
+def rope_frequencies(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token cross entropy; logits (B,S,V), labels (B,S).
+
+    Written as fusable reductions over the (sharded) vocab axis: no f32
+    logits materialization, and the gold-logit pick is a masked sum (a
+    local reduce + tiny all-reduce) instead of take_along_axis (which would
+    all-gather a vocab-sharded tensor).
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    mx = jnp.max(lf, axis=-1)
+    logz = mx + jnp.log(jnp.sum(jnp.exp(lf - mx[..., None]), axis=-1))
+    onehot = (jnp.arange(v)[None, None, :] == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

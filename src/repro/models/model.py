@@ -1,0 +1,171 @@
+"""Unified model API over the 10-architecture zoo.
+
+``Model(cfg, model_size)`` dispatches on the family and exposes:
+  init_params / loss / forward / init_decode_state / decode_step /
+  input_specs(shape) — ShapeDtypeStruct stand-ins for the dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec, hybrid, sharding, ssm, transformer
+from .dims import Dims
+from .layers import DTYPE, cross_entropy, embed, rmsnorm, rmsnorm_init, \
+    unembed
+from . import sharding as sh
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, model_size: int = 1):
+        self.cfg = cfg
+        self.dims = Dims(cfg, model_size)
+        self.dims.check()
+
+    # --- parameters ----------------------------------------------------------
+    def init_params(self, key) -> dict:
+        f = self.cfg.family
+        if f in ("dense", "vlm", "moe"):
+            return transformer.init_params(key, self.dims)
+        if f == "ssm":
+            return self._ssm_init(key)
+        if f == "hybrid":
+            return hybrid.init_params(key, self.dims)
+        if f == "audio":
+            return encdec.init_params(key, self.dims)
+        raise ValueError(f)
+
+    def _ssm_init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 2)
+        blocks = [ssm.init(keys[i], self.dims) for i in range(cfg.n_layers)]
+        from .layers import embed_init
+        return {
+            "embed": embed_init(keys[-1], self.dims.vocab, cfg.d_model),
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+
+    # --- training / prefill ---------------------------------------------------
+    def forward(self, params, batch: dict, remat: bool = True) -> jnp.ndarray:
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return transformer.forward(params, self.dims, batch["tokens"],
+                                       remat=remat)
+        if f == "vlm":
+            return transformer.forward(params, self.dims, batch["tokens"],
+                                       extra_embeds=batch["patch_embeds"],
+                                       remat=remat)
+        if f == "ssm":
+            return self._ssm_forward(params, batch["tokens"], remat)
+        if f == "hybrid":
+            return hybrid.forward(params, self.dims, batch["tokens"], remat)
+        if f == "audio":
+            return encdec.forward(params, self.dims, batch["tokens"],
+                                  batch["frames"], remat)
+        raise ValueError(f)
+
+    def _ssm_forward(self, params, tokens, remat=True):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens).astype(DTYPE)
+        x = sh.shard(x, sh.BATCH, sh.SEQ, None)
+
+        def body(x, layer):
+            return x + ssm.block_apply(layer, self.dims, x), None
+
+        body = jax.checkpoint(body, policy=sh.remat_policy()) \
+            if remat else body
+        x, _ = jax.lax.scan(body, x, params["blocks"],
+                            unroll=sh.scan_unroll())
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return hybrid.unembed_padded(params, self.dims, x)
+
+    def loss(self, params, batch: dict) -> jnp.ndarray:
+        logits = self.forward(params, batch)
+        if self.cfg.family == "vlm":
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        return cross_entropy(logits, batch["labels"])
+
+    # --- decode -----------------------------------------------------------------
+    def init_decode_state(self, params, batch: dict, max_len: int) -> dict:
+        f = self.cfg.family
+        b = batch["tokens"].shape[0]
+        if f in ("dense", "moe", "vlm"):
+            return transformer.init_cache(self.dims, b, max_len)
+        if f == "ssm":
+            c = ssm.init_ssm_cache(self.dims, b)
+            return {k: jnp.broadcast_to(v, (self.cfg.n_layers, *v.shape))
+                    for k, v in c._asdict().items()}
+        if f == "hybrid":
+            return hybrid.init_cache(self.dims, b, max_len)
+        if f == "audio":
+            return encdec.init_cache(params, self.dims, batch["frames"],
+                                     max_len)
+        raise ValueError(f)
+
+    def decode_step(self, params, token, cache, pos):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.decode_step(params, self.dims, token, cache,
+                                           pos)
+        if f == "ssm":
+            return self._ssm_decode(params, token, cache, pos)
+        if f == "hybrid":
+            return hybrid.decode_step(params, self.dims, token, cache, pos)
+        if f == "audio":
+            return encdec.decode_step(params, self.dims, token, cache, pos)
+        raise ValueError(f)
+
+    def _ssm_decode(self, params, token, cache, pos):
+        cfg = self.cfg
+        x = embed(params["embed"], token[:, None]).astype(DTYPE)
+
+        def body(x, layer):
+            lc = ssm.SsmCache(conv_x=layer["conv_x"],
+                              conv_bc=layer["conv_bc"],
+                              state=layer["state"])
+            y, nc = ssm.block_decode(layer["p"], self.dims, x, lc)
+            return x + y, nc._asdict()
+
+        xs = {"p": params["blocks"], **{k: cache[k] for k in
+                                        ("conv_x", "conv_bc", "state")}}
+        x, new = jax.lax.scan(body, x, xs, unroll=sh.scan_unroll())
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = hybrid.unembed_padded(params, self.dims, x)[:, 0]
+        return logits, new
+
+    # --- dry-run inputs -----------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+        bf16 = functools.partial(jax.ShapeDtypeStruct, dtype=DTYPE)
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "vlm":
+                p = cfg.n_patches
+                return {"tokens": i32((b, s - p)),
+                        "labels": i32((b, s - p)),
+                        "patch_embeds": bf16((b, p, cfg.d_model))}
+            if cfg.family == "audio":
+                return {"tokens": i32((b, s)), "labels": i32((b, s)),
+                        "frames": bf16((b, cfg.enc_len, cfg.d_model))}
+            return {"tokens": i32((b, s)), "labels": i32((b, s))}
+        # decode: one new token against a cache of length s
+        spec = {"token": i32((b,)), "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+        if cfg.family == "audio":
+            spec["frames"] = bf16((b, cfg.enc_len, cfg.d_model))
+        if cfg.family == "vlm":
+            spec["patch_embeds"] = bf16((b, cfg.n_patches, cfg.d_model))
+        return spec
+
+    def supports(self, shape: ShapeConfig) -> bool:
+        """Shape applicability (see DESIGN.md §Arch-applicability)."""
+        if shape.name == "long_500k":
+            return self.cfg.sub_quadratic
+        return True

@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN (Mixtral 8e top-2, Llama-4-Scout 16e top-1).
+
+Dispatch is gather-based (sort-free): for each expert we build a (C,) index
+vector of the tokens routed to it (capacity C = cf·T·k/E), gather, run the
+expert FFN as one batched einsum over the expert dimension (MXU-friendly
+(E,C,D)×(E,D,F)), and scatter-add back weighted by the router gates.
+Overflowed tokens are dropped (standard capacity-factor semantics); the
+shared expert (Llama-4) is a plain dense SwiGLU applied to every token.
+
+Baseline sharding is tensor-parallel experts: expert weights (E, D, F) with
+F on the model axis, routing entirely local.  Expert-parallel (E on the
+model axis + all-to-all) is evaluated in the §Perf pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+from .dims import Dims
+from .layers import DTYPE, _normal
+
+
+def init(key, dims: Dims) -> dict:
+    cfg = dims.cfg
+    d, f, e = cfg.d_model, dims.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _normal(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "w_gate": _normal(ks[1], (e, d, f), d ** -0.5),
+        "w_up": _normal(ks[2], (e, d, f), d ** -0.5),
+        "w_down": _normal(ks[3], (e, f, d), f ** -0.5),
+    }
+    if cfg.shared_expert:
+        sk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": _normal(sk[0], (d, f), d ** -0.5),
+                       "w_up": _normal(sk[1], (d, f), d ** -0.5),
+                       "w_down": _normal(sk[2], (f, d), f ** -0.5)}
+    return p
+
+
+def _dispatch_indices(expert_of: jnp.ndarray, e: int, cap: int):
+    """expert_of: (A,) assignment per (token, k-slot).  Returns
+    idx (E, C) positions into the flat assignment array and valid (E, C)."""
+    a = expert_of.shape[0]
+    onehot = jax.nn.one_hot(expert_of, e, dtype=jnp.int32)       # (A, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1           # (A, E)
+    slot = jnp.sum(pos_in_e * onehot, axis=1)                    # (A,)
+    keep = (slot >= 0) & (slot < cap)
+    # Scatter flat positions into the (E, C) table.
+    flat = jnp.full((e * cap,), a, jnp.int32)                    # a == OOB
+    tgt = jnp.where(keep, expert_of * cap + slot, e * cap)
+    flat = flat.at[tgt.clip(0, e * cap)].set(
+        jnp.where(keep, jnp.arange(a, dtype=jnp.int32), a),
+        mode="drop")
+    idx = flat.reshape(e, cap)
+    return idx, idx < a
+
+
+def _row_moe(p, cfg, xt, logits, cap):
+    """MoE over one token group.  xt: (T,D); logits: (T,E)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gates, exp_idx = jax.lax.top_k(logits, k)                    # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    expert_of = exp_idx.reshape(-1)                              # (T*k,)
+    idx, valid = _dispatch_indices(expert_of, e, cap)            # (E, C)
+
+    token_of = idx // k                                          # (E, C)
+    xe = jnp.take(xt, token_of.clip(0, t - 1).reshape(-1),
+                  axis=0).reshape(e, cap, d)
+    xe = jnp.where(valid[..., None], xe, 0.0)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    h = sh.shard(h, None, None, sh.MODEL)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])              # (E, C, D)
+
+    gate_of = jnp.take(gates.reshape(-1),
+                       idx.clip(0, t * k - 1).reshape(-1)).reshape(e, cap)
+    gate_of = jnp.where(valid, gate_of, 0.0)
+    out = jnp.zeros((t, d), jnp.float32).at[token_of.reshape(-1)].add(
+        (ye * gate_of[..., None]).reshape(-1, d).astype(jnp.float32),
+        mode="drop")
+    return out
+
+
+def apply(p: dict, dims: Dims, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,D) -> (B,S,D).
+
+    Training/prefill dispatches PER SEQUENCE (vmap over the batch row):
+    capacity counts, cumsums and gathers stay local to the data shard that
+    owns the row, so routing needs no cross-device traffic under the
+    batch-over-'data' sharding.  Decode (S == 1) dispatches globally over
+    the tiny token batch instead — per-row capacity would degenerate to
+    all-experts-per-token compute.
+    """
+    cfg = dims.cfg
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+
+    if s > 1:
+        cap = int(cfg.capacity_factor * s * k / e)
+        cap = max(8, min(cap, s * k))
+        out = jax.vmap(lambda xt, lg: _row_moe(p, cfg, xt, lg, cap))(
+            x, logits)
+        out = out.reshape(b, s, d)
+    else:
+        t = b * s
+        cap = max(1, min(int(cfg.capacity_factor * t * k / e), t))
+        out = _row_moe(p, cfg, x.reshape(t, d),
+                       logits.reshape(t, e), cap).reshape(b, s, d)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        hs = sh.shard(hs, None, None, sh.MODEL)
+        out = out + (hs @ sp["w_down"]).astype(jnp.float32)
+
+    return out.astype(x.dtype)
+
+
+def aux_loss(logits: jnp.ndarray, exp_idx: jnp.ndarray, e: int):
+    """Standard load-balancing auxiliary loss (not used by dry-run)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(exp_idx[..., 0], e), axis=0)
+    return e * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -1,0 +1,100 @@
+"""Activation-sharding annotations for the model zoo.
+
+Models call ``shard(x, *axes)`` at key activation boundaries; outside a mesh
+context (CPU smoke tests) this is the identity, and inside the dry-run /
+launcher meshes it becomes ``with_sharding_constraint``.
+
+Logical axes (resolved against the ambient mesh's axis names):
+  BATCH  -> ('pod', 'data') if the mesh has a 'pod' axis, else ('data',)
+  MODEL  -> ('model',)
+  SEQ    -> sequence-parallel axis; the perf pass maps it to ('data',) for
+            long-context decode where batch cannot shard.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH, MODEL, SEQ, NONE = "batch", "model", "seq", None
+
+# Module-level switches, configured by the launcher (default: smoke mode).
+_ENABLED = False
+_SEQ_SHARDED = False
+_SCAN_UNROLL: int | bool = False
+_REMAT = "nothing"
+
+
+def configure(enabled: bool, seq_sharded: bool = False,
+              scan_unroll: int | bool = False,
+              remat: str = "nothing") -> None:
+    global _ENABLED, _SEQ_SHARDED, _SCAN_UNROLL, _REMAT
+    _ENABLED = enabled
+    _SEQ_SHARDED = seq_sharded
+    _SCAN_UNROLL = scan_unroll
+    _REMAT = remat
+
+
+def scan_unroll() -> int | bool:
+    """Scan unroll factor (True for the dry-run's depth probes, where the
+    unrolled HLO makes cost_analysis count every layer)."""
+    return _SCAN_UNROLL
+
+
+def remat_policy():
+    """Activation-checkpoint policy for the layer scan.
+
+    'nothing' (default): recompute the whole block in backward — only the
+    residual-stream carry is live per layer (memory-optimal; ~+fwd FLOPs).
+    'dots': save dot outputs — faster backward, but with blocked flash
+    attention this also pins every score tile, which blows past HBM on the
+    4k-train cells (the §Perf log quantifies the trade).
+    """
+    if _REMAT == "dots":
+        return jax.checkpoint_policies.dots_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _mesh_axes():
+    mesh = jax.sharding.get_abstract_mesh()
+    return mesh.axis_names if mesh is not None else ()
+
+
+def resolve(axis):
+    names = _mesh_axes()
+    if axis == BATCH:
+        return tuple(a for a in ("pod", "data") if a in names) or None
+    if axis == MODEL:
+        return "model" if "model" in names else None
+    if axis == SEQ:
+        return "data" if (_SEQ_SHARDED and "data" in names) else None
+    return None
+
+
+def spec(*axes) -> P:
+    return P(*[resolve(a) for a in axes])
+
+
+def shard(x, *axes):
+    """Constrain activation ``x`` (one logical axis name per dim).
+
+    Divisibility-guarded: any tensor axis that does not divide its mesh
+    factor falls back to replication instead of failing to lower.
+    """
+    if not _ENABLED:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    sizes = dict(mesh.shape)
+    resolved = []
+    for dim, ax in zip(x.shape, [resolve(a) for a in axes]):
+        if ax is None:
+            resolved.append(None)
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        factor = 1
+        for n in names:
+            factor *= sizes[n]
+        resolved.append(ax if dim % factor == 0 and dim > 0 else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

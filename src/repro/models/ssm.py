@@ -1,0 +1,225 @@
+"""Mamba-2 (SSD — state-space duality) blocks, TPU-adapted.
+
+The GPU reference implements SSD with a warp-level associative scan; the
+TPU-native formulation is the *chunked block decomposition* (the paper's own
+"matmul form"): within chunks of length Q the recurrence is a dense
+(Q×Q)-masked matmul that maps onto the MXU, and across chunks a short
+`lax.scan` carries the (H, d_state, head_dim) state.  The Pallas kernel in
+``repro.kernels.ssd_scan`` tiles the same decomposition into VMEM.
+
+Sharding: projections are stored *split* (z/x/dt head-sharded on the model
+axis; the shared B/C projections replicated — they are (d_state,)-sized and
+every head needs them), so the whole SSD scan is local per device and the
+block needs exactly one all-reduce (the row-parallel out_proj), mirroring
+the attention block's communication pattern.
+
+Decode is the O(1) recurrence: h ← h·exp(Δ·A) + Δ·B⊗x, y = C·h + D·x.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+from .dims import Dims
+from .layers import DTYPE, _normal, rmsnorm, rmsnorm_init
+
+
+def init(key, dims: Dims) -> dict:
+    cfg = dims.cfg
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "z_proj": _normal(ks[0], (d, di), d ** -0.5),
+        "x_proj": _normal(ks[1], (d, di), d ** -0.5),
+        "b_proj": _normal(ks[2], (d, n), d ** -0.5),
+        "c_proj": _normal(ks[3], (d, n), d ** -0.5),
+        "dt_proj": _normal(ks[4], (d, h), d ** -0.5),
+        "conv_x": _normal(ks[5], (cfg.ssm_conv, di), 0.3),
+        "conv_bc": _normal(ks[6], (cfg.ssm_conv, 2 * n), 0.3),
+        "conv_bias_x": jnp.zeros((di,), DTYPE),
+        "conv_bias_bc": jnp.zeros((2 * n,), DTYPE),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gnorm": rmsnorm_init(di),
+        "out_proj": _normal(ks[5], (di, d), di ** -0.5),
+    }
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """seq: (B,S,C); w: (k,C) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:pad.shape[1] - (k - 1 - i)] * w[i] for i in range(k))
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., Q).  L[i,j] = Σ_{j<m<=i} a[m] for i ≥ j else -inf."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """SSD in chunked (matmul) form.
+
+    x:  (B, S, H, P) values;  dt: (B, S, H) positive steps
+    a_log: (H,) so A = -exp(a_log) < 0;  b, c: (B, S, N) shared (ngroups=1)
+    Returns y: (B, S, H, P), final_state: (B, H, N, P).
+    """
+    bsz, s, h, p_ = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0, (s, q)
+
+    a = (-jnp.exp(a_log))[None, None, :] * dt                  # (B,S,H) ≤ 0
+    xc = x.reshape(bsz, nc, q, h, p_).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h)
+    ac = a.reshape(bsz, nc, q, h)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    # ---- intra-chunk (dense, MXU): Y_ij = C_i·B_j · exp(Σa) · dt_j · X_j
+    lmat = _segsum(jnp.moveaxis(ac, -1, -2))                   # (B,nc,H,Q,Q)
+    lmat = jnp.exp(lmat)
+    cb = jnp.einsum("bnqs,bnks->bnqk", cc, bc)                 # (B,nc,Q,Q)
+    w = cb[:, :, None] * lmat                                  # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bnhqk,bnkh,bnkhp->bnqhp", w, dtc, xc)
+
+    # ---- chunk states: S_c = Σ_j exp(a_end - a_j) dt_j B_j ⊗ X_j
+    a_cum = jnp.cumsum(ac, axis=2)
+    a_end = a_cum[:, :, -1:]                                   # (B,nc,1,H)
+    decay_to_end = jnp.exp(a_end - a_cum)                      # (B,nc,Q,H)
+    sc = jnp.einsum("bnqm,bnqh,bnqhp->bnhmp",
+                    bc, dtc * decay_to_end, xc)                # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over nc
+    lam = jnp.exp(a_end[:, :, 0])                              # (B,nc,H)
+
+    def step(state, inp):
+        lam_c, sc_c = inp
+        new = state * lam_c[..., None, None] + sc_c
+        return new, state                                       # emit S_{c-1}
+
+    init_s = jnp.zeros((bsz, h, n, p_), jnp.float32)
+    final, s_prev = jax.lax.scan(
+        step, init_s,
+        (jnp.moveaxis(lam, 1, 0), jnp.moveaxis(sc, 1, 0)))
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                        # (B,nc,H,N,P)
+
+    # ---- inter-chunk output: Y_i += C_i · S_prev · exp(a_cum_i)
+    y_inter = jnp.einsum("bnqm,bnhmp->bnqhp", cc, s_prev) \
+        * jnp.exp(a_cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p_)
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x, dt, a_log, b, c):
+    """O(S) sequential-scan oracle for tests."""
+    bsz, s, h, p_ = x.shape
+    a = (-jnp.exp(a_log))[None, :]                              # (1,H)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        lam = jnp.exp(a * dtt)                                  # (B,H)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        state = state * lam[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    init_s = jnp.zeros((bsz, h, b.shape[-1], p_), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    final, ys = jax.lax.scan(step, init_s, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+class SsmCache(NamedTuple):
+    conv_x: jnp.ndarray   # (B, k-1, di)   head-sharded
+    conv_bc: jnp.ndarray  # (B, k-1, 2N)   replicated
+    state: jnp.ndarray    # (B, H, N, P)   head-sharded
+
+
+def _project(p, cfg, x):
+    """x: (..., D) -> z, xin, b, c, dt (pre-conv)."""
+    z = x @ p["z_proj"]
+    xin = x @ p["x_proj"]
+    b = x @ p["b_proj"]
+    c = x @ p["c_proj"]
+    dt = x @ p["dt_proj"]
+    return z, xin, b, c, dt
+
+
+def block_apply(p: dict, dims: Dims, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence Mamba-2 block (training/prefill).  x: (B,S,D)."""
+    cfg = dims.cfg
+    z, xin, b, c, dt = _project(p, cfg, x)
+    xin = sh.shard(xin, sh.BATCH, sh.SEQ, sh.MODEL)
+    z = sh.shard(z, sh.BATCH, sh.SEQ, sh.MODEL)
+
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"], p["conv_bias_x"]))
+    bc = jax.nn.silu(_causal_conv(jnp.concatenate([b, c], -1),
+                                  p["conv_bc"], p["conv_bias_bc"]))
+    n = cfg.ssm_state
+    b, c = bc[..., :n], bc[..., n:]
+
+    xh = xin.reshape(*x.shape[:2], cfg.ssm_heads, cfg.ssm_head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    y, _ = ssd_chunked(xh, dtp, p["a_log"], b, c, cfg.ssm_chunk)
+    y = y + xh * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(*x.shape[:2], cfg.d_inner)
+    y = rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return sh.shard(out, sh.BATCH, sh.SEQ, None)
+
+
+def init_ssm_cache(dims: Dims, batch: int) -> SsmCache:
+    cfg = dims.cfg
+    return SsmCache(
+        conv_x=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), DTYPE),
+        conv_bc=jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                          DTYPE),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                         cfg.ssm_head_dim), jnp.float32))
+
+
+def block_decode(p: dict, dims: Dims, x: jnp.ndarray, cache: SsmCache):
+    """One-token step.  x: (B,1,D) -> (B,1,D), new cache."""
+    cfg = dims.cfg
+    z, xin, b, c, dt = _project(p, cfg, x[:, 0])
+
+    hist_x = jnp.concatenate([cache.conv_x, xin[:, None]], axis=1)
+    hist_bc = jnp.concatenate(
+        [cache.conv_bc, jnp.concatenate([b, c], -1)[:, None]], axis=1)
+    conv_x = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist_x, p["conv_x"]) + p["conv_bias_x"])
+    conv_bc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist_bc, p["conv_bc"]) + p["conv_bias_bc"])
+
+    n = cfg.ssm_state
+    bb = conv_bc[:, :n].astype(jnp.float32)
+    cc = conv_bc[:, n:].astype(jnp.float32)
+    xh = conv_x.reshape(-1, cfg.ssm_heads, cfg.ssm_head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+
+    lam = jnp.exp((-jnp.exp(p["a_log"]))[None] * dtp)             # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bb, dtp, xh.astype(jnp.float32))
+    state = cache.state * lam[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cc, state).astype(x.dtype)
+    y = y + xh * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(-1, cfg.d_inner)
+    y = rmsnorm(p["gnorm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, SsmCache(conv_x=hist_x[:, 1:], conv_bc=hist_bc[:, 1:],
+                         state=state)

@@ -1,0 +1,211 @@
+"""Dense decoder-only transformer (internlm2 / granite / stablelm / qwen /
+llava backbone) with scan-over-layers, remat, KV-cache decode, and MoE hooks.
+
+Layout: block params are stacked along a leading L axis and consumed by
+``lax.scan`` — one compiled block regardless of depth (fast compiles at 512
+devices, and the idiomatic TPU training structure).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_lib
+from . import sharding as sh
+from .attention import AttnSpec
+from .dims import Dims
+from .layers import (DTYPE, cross_entropy, embed, embed_init, mlp, mlp_init,
+                     rmsnorm, rmsnorm_init, unembed)
+
+
+def attn_spec(dims: Dims) -> AttnSpec:
+    cfg = dims.cfg
+    return AttnSpec(
+        n_heads=dims.n_heads, n_kv=dims.n_kv, hd=dims.hd,
+        causal=True,
+        window=cfg.sliding_window,
+        chunk=cfg.attn_chunk,
+        use_rope=True,
+        rope_theta=cfg.rope_theta, qkv_bias=cfg.qkv_bias)
+
+
+# --- one dense block ---------------------------------------------------------
+
+def block_init(key, dims: Dims) -> dict:
+    cfg = dims.cfg
+    ka, km = jax.random.split(key)
+    p = {
+        "ln_attn": rmsnorm_init(cfg.d_model),
+        "attn": attn.init(ka, cfg.d_model, attn_spec(dims)),
+        "ln_mlp": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init(km, dims)
+    else:
+        p["mlp"] = mlp_init(km, cfg.d_model, dims.d_ff, cfg.mlp)
+    return p
+
+
+def block_apply(p: dict, dims: Dims, x: jnp.ndarray, positions: jnp.ndarray,
+                is_global=None) -> jnp.ndarray:
+    cfg = dims.cfg
+    spec = attn_spec(dims)
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    q, k, v = attn.project_qkv(p["attn"], h, spec, positions, is_global)
+    o = attn.flash_attention(q, k, v, spec, q_pos=positions, k_pos=positions,
+                             is_global=is_global)
+    attn_out = attn.output_proj(p["attn"], o)
+
+    if cfg.parallel_block:
+        # §Perf variant (PaLM): attention and MLP read the same normed
+        # input and their outputs sum into ONE residual add — the two
+        # row-parallel all-reduces per layer fuse into one.
+        m = (moe_lib.apply(p["moe"], dims, h) if cfg.family == "moe"
+             else mlp(p["mlp"], h, cfg.mlp))
+        x = x + attn_out + m
+    else:
+        x = x + attn_out
+        h = rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+        if cfg.family == "moe":
+            x = x + moe_lib.apply(p["moe"], dims, h)
+        else:
+            x = x + mlp(p["mlp"], h, cfg.mlp)
+    return sh.shard(x, sh.BATCH, sh.SEQ, None)
+
+
+def block_decode(p: dict, dims: Dims, x: jnp.ndarray, cache: dict,
+                 pos: jnp.ndarray, is_global=None):
+    """x: (B,1,D); cache: {'k','v'} (B,S_c,KV,hd).  Returns (x, cache)."""
+    cfg = dims.cfg
+    spec = attn_spec(dims)
+    ring = is_ring(cfg)
+    h = rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    q, k, v = attn.project_qkv(p["attn"], h, spec, pos[None], is_global)
+    ring_size = cache["k"].shape[1] if ring else None
+    ck, cv = attn.update_cache(cache["k"], cache["v"], k, v, pos,
+                               ring_size=ring_size)
+    o = attn.decode_attention(q, ck, cv, pos + 1, spec, ring=ring,
+                              is_global=is_global)
+    x = x + attn.output_proj(p["attn"], o)
+    h = rmsnorm(p["ln_mlp"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_lib.apply(p["moe"], dims, h)
+    else:
+        x = x + mlp(p["mlp"], h, cfg.mlp)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ck, cv
+    return x, new_cache
+
+
+# --- full model ---------------------------------------------------------------
+
+def init_params(key, dims: Dims) -> dict:
+    cfg = dims.cfg
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = [block_init(keys[i], dims) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    p = {
+        "embed": embed_init(keys[-1], dims.vocab, cfg.d_model),
+        "blocks": stacked,
+        "ln_f": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(keys[-2], dims.vocab, cfg.d_model)
+    return p
+
+
+def layer_kinds(cfg) -> Optional[jnp.ndarray]:
+    """Per-layer kind ids for heterogeneous stacks (Llama-4): 0=causal/local,
+    1=global-NoPE.  None for homogeneous stacks."""
+    if cfg.attn_chunk and cfg.global_every:
+        ids = [(1 if (i + 1) % cfg.global_every == 0 else 0)
+               for i in range(cfg.n_layers)]
+        return jnp.asarray(ids)
+    return None
+
+
+def forward(params: dict, dims: Dims, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> jnp.ndarray:
+    """Training/prefill forward: tokens (B,S[-P]) -> logits (B,S,V)."""
+    cfg = dims.cfg
+    x = embed(params["embed"], tokens).astype(DTYPE)
+    if extra_embeds is not None:          # VLM: prepend stub patch embeds
+        x = jnp.concatenate([extra_embeds.astype(DTYPE), x], axis=1)
+    x = sh.shard(x, sh.BATCH, sh.SEQ, None)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    kinds = layer_kinds(cfg)
+
+    def body(x, layer):
+        is_g = (layer["kind"] == 1) if kinds is not None else None
+        y = block_apply(layer["p"], dims, x, positions, is_g)
+        return y, None
+
+    body = jax.checkpoint(body, policy=sh.remat_policy()) if remat else body
+    xs = {"p": params["blocks"]}
+    if kinds is not None:
+        xs["kind"] = kinds
+    x, _ = jax.lax.scan(body, x, xs, unroll=sh.scan_unroll())
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params.get("head", params["embed"])
+    logits = unembed(head, x)
+    if dims.vocab != cfg.vocab:           # mask padded vocab columns
+        pad_mask = jnp.arange(dims.vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, -1e9)
+    return logits
+
+
+def is_ring(cfg) -> bool:
+    """Window archs keep a ring-buffer cache (static per architecture)."""
+    return cfg.sliding_window is not None and cfg.attn_chunk is None
+
+
+def init_cache(dims: Dims, batch: int, max_len: int) -> dict:
+    """Stacked (L-leading) KV caches.  Window archs get ring buffers;
+    kv_dtype == 'int8' stores quantized K/V (§Perf variant)."""
+    cfg = dims.cfg
+    s_c = min(max_len, cfg.sliding_window) if is_ring(cfg) else max_len
+    shape = (cfg.n_layers, batch, s_c, dims.n_kv, dims.hd)
+    dt = jnp.int8 if cfg.kv_dtype == "int8" else DTYPE
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step(params: dict, dims: Dims, token: jnp.ndarray,
+                cache: dict, pos: jnp.ndarray):
+    """One decode step: token (B,) int32 -> logits (B,V), updated cache."""
+    cfg = dims.cfg
+    x = embed(params["embed"], token[:, None]).astype(DTYPE)
+    x = sh.shard(x, sh.BATCH, None, None)
+    kinds = layer_kinds(cfg)
+
+    def body(x, layer):
+        lc = {"k": layer["k"], "v": layer["v"]}
+        is_g = (layer["kind"] == 1) if kinds is not None else None
+        y, nc = block_decode(layer["p"], dims, x, lc, pos, is_g)
+        return y, {"k": nc["k"], "v": nc["v"]}
+
+    xs = {"p": params["blocks"], "k": cache["k"], "v": cache["v"]}
+    if kinds is not None:
+        xs["kind"] = kinds
+    x, new_kv = jax.lax.scan(body, x, xs, unroll=sh.scan_unroll())
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params.get("head", params["embed"])
+    logits = unembed(head, x)[:, 0]
+    if dims.vocab != cfg.vocab:
+        logits = jnp.where(jnp.arange(dims.vocab) < cfg.vocab, logits, -1e9)
+    return logits, {"k": new_kv["k"], "v": new_kv["v"]}
+
+
+def loss_fn(params, dims, tokens, labels, extra_embeds=None):
+    logits = forward(params, dims, tokens, extra_embeds)
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    return cross_entropy(logits, labels)

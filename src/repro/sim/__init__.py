@@ -1,0 +1,9 @@
+# §V testbed: discrete-time cloud simulator, the 30-workload suite,
+# Lambda billing model and the spot-market trace generator.
+from . import lambda_model, market, runner, workloads
+from .runner import SimConfig, SimTrace, run
+from .workloads import Schedule, paper_schedule, uniform_schedule
+
+__all__ = ["lambda_model", "market", "runner", "workloads", "SimConfig",
+           "SimTrace", "run", "Schedule", "paper_schedule",
+           "uniform_schedule"]

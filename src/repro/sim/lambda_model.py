@@ -1,0 +1,32 @@
+"""AWS Lambda billing comparator (paper §V.D, Table IV).
+
+2015 Lambda pricing: $0.00001667 per GB-second, billed in 100 ms increments,
+plus $0.20 per 1M requests.  The paper uses the 1024 MB configuration for
+every function, so GB-s == wall-seconds.
+"""
+
+from __future__ import annotations
+
+import math
+
+GBS_RATE = 1.667e-5        # $ per GB-second
+REQUEST_RATE = 2.0e-7      # $ per invocation
+BILL_INCREMENT = 0.1       # seconds
+MEM_GB = 1.0               # paper: 1024 MB for all functions
+
+
+def lambda_cost_per_item(item_seconds: float, mem_gb: float = MEM_GB) -> float:
+    """Billed cost of one Lambda invocation of the given duration."""
+    billed = math.ceil(item_seconds / BILL_INCREMENT) * BILL_INCREMENT
+    return billed * mem_gb * GBS_RATE + REQUEST_RATE
+
+
+# The three ImageMagick functions of Table IV with calibrated mean runtimes
+# (chosen to land on the paper's reported Lambda unit costs; the *platform*
+# side is simulated end-to-end, not assumed).
+IMAGEMAGICK = {
+    "blur": 2.80,        # most compute-intensive
+    "convolve": 0.98,
+    "rotate": 0.31,      # fastest
+}
+N_IMAGES = 25_000

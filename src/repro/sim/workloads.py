@@ -1,0 +1,165 @@
+"""The paper's §V.A workload suite, as a deterministic synthetic schedule.
+
+Thirty workloads, submitted one every five minutes, in four families:
+
+  * 8 × Viola-Jones face detection  — 1..1000 images
+  * 8 × FFMPEG transcoding          — 1..20 videos, plus TWO large spikes
+                                      (200 and 300 videos) inside the eight
+  * 7 × OpenCV BRISK features       — images
+  * 7 × SIFT (compiled Matlab)      — images
+
+We cannot run FFMPEG/SIFT binaries here, so each family gets a calibrated
+per-item CUS model (see DESIGN.md §7).  The controller only ever observes
+noisy window-averaged measurements, exactly as the real platform would.
+
+Measurement/progress model: items inside a workload are heterogeneous and
+the cheap ones complete first (download-then-process pipelines drain small
+files early), so the window-averaged measured CUS *ramps up* with completed
+fraction p, mildly overshoots, then settles on the true mean with noise
+whose std shrinks with the number of completions in the window.  This is
+what produces the underdamped estimator trajectories of the paper's Fig. 3
+and the minutes-scale time-to-reliable-prediction of Table II.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAMILIES = ("face", "transcode", "brisk", "sift")
+FACE, TRANSCODE, BRISK, SIFT = range(4)
+
+# Per-family calibration: (mean item CUS, item lognormal σ, ramp floor c0,
+# ramp knee p_r, overshoot).  Means chosen so Σ CUS over the 30 workloads
+# ≈ 97e3 CU-s → LB ≈ $0.22 at the 2015 m3.medium spot price (paper Table III).
+FAMILY_PARAMS = {
+    # σ is the *per-item* lognormal spread: images vary in size (face/brisk/
+    # sift) and videos vary enormously in length/codec (transcode), which is
+    # what makes window-averaged CUS measurements noisy in the real platform.
+    FACE:      dict(mean_cus=1.5, sigma=0.35, c0=0.45, p_r=0.25, overshoot=0.12),
+    TRANSCODE: dict(mean_cus=130.0, sigma=1.00, c0=0.40, p_r=0.20, overshoot=0.15),
+    BRISK:     dict(mean_cus=2.0, sigma=0.30, c0=0.50, p_r=0.25, overshoot=0.10),
+    SIFT:      dict(mean_cus=3.0, sigma=0.35, c0=0.45, p_r=0.30, overshoot=0.12),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Static (numpy) description of a workload arrival schedule."""
+
+    t_arrive: np.ndarray   # (W,) arrival tick per workload
+    family: np.ndarray     # (W,) family id
+    m0: np.ndarray         # (W, K) items per type (K=1 here)
+    b_true: np.ndarray     # (W, K) true mean CUS per item
+    sigma: np.ndarray      # (W,) per-item measurement noise σ
+    c0: np.ndarray         # (W,) ramp floor
+    p_r: np.ndarray        # (W,) ramp knee (completed fraction)
+    overshoot: np.ndarray  # (W,)
+    d_requested: np.ndarray  # (W,) requested TTC (s)
+
+    @property
+    def n(self) -> int:
+        return len(self.t_arrive)
+
+    @property
+    def total_cus(self) -> float:
+        return float(np.sum(self.m0[:, 0] * self.b_true[:, 0]))
+
+    def as_jax(self) -> dict:
+        return {f.name: jnp.asarray(getattr(self, f.name))
+                for f in dataclasses.fields(self)}
+
+
+def paper_schedule(ttc: float = 7620.0,
+                   arrival_gap_ticks: int = 5,
+                   seed: int = 0) -> Schedule:
+    """The 30-workload §V.A suite.
+
+    ttc: fixed TTC per workload in seconds (paper: 2h07m = 7620 s, or
+         1h37m = 5820 s).
+    arrival_gap_ticks: one workload every 5 monitoring ticks (= 5 min at
+         1-min monitoring, as in the paper).
+    """
+    rng = np.random.default_rng(seed)
+    fam, counts = [], []
+    # 8 face-detection workloads, 1..1000 images.
+    for c in [40, 120, 300, 500, 700, 850, 950, 1000]:
+        fam.append(FACE); counts.append(c)
+    # 8 transcodes: six small (1..20 videos) + the 200/300-video spikes.
+    for c in [3, 8, 12, 20, 200, 15, 300, 6]:
+        fam.append(TRANSCODE); counts.append(c)
+    # 7 BRISK + 7 SIFT feature-extraction workloads.
+    for c in [80, 150, 260, 420, 600, 380, 220]:
+        fam.append(BRISK); counts.append(c)
+    for c in [60, 120, 350, 500, 280, 170, 90]:
+        fam.append(SIFT); counts.append(c)
+
+    # Interleave families like the paper's Fig. 2 (mixed order, spikes at
+    # submissions #11 and #17 to probe responsiveness mid-experiment).
+    order = [0, 8, 16, 23, 1, 9, 17, 24, 2, 10, 12, 18, 25, 3, 11, 19, 14,
+             26, 4, 13, 20, 27, 5, 21, 28, 6, 15, 22, 29, 7]
+    fam = [fam[i] for i in order]
+    counts = [counts[i] for i in order]
+
+    w = len(fam)
+    b_true = np.zeros((w, 1))
+    sigma = np.zeros(w)
+    c0 = np.zeros(w)
+    p_r = np.zeros(w)
+    ov = np.zeros(w)
+    for i, f in enumerate(fam):
+        prm = FAMILY_PARAMS[f]
+        # Per-workload mean CUS jitters around the family mean (different
+        # codecs / image sizes across workloads of the same family).
+        b_true[i, 0] = prm["mean_cus"] * float(rng.lognormal(0.0, 0.15))
+        sigma[i] = prm["sigma"]
+        c0[i] = prm["c0"]
+        p_r[i] = prm["p_r"]
+        ov[i] = prm["overshoot"]
+        # The two spike workloads are long-form video (paper Fig. 2: 5.5 GB
+        # and 8 GB inputs — far heavier per item than the small transcodes).
+        # Their demand r/d rides the per-workload cap N_{w,max} for most of
+        # their TTC, which is what paces the experiment tail.
+        if f == TRANSCODE and counts[i] == 200:
+            b_true[i, 0] = 150.0
+        elif f == TRANSCODE and counts[i] == 300:
+            b_true[i, 0] = 150.0
+
+    return Schedule(
+        t_arrive=np.arange(w) * arrival_gap_ticks,
+        family=np.asarray(fam),
+        m0=np.asarray(counts, np.float64).reshape(w, 1),
+        b_true=b_true,
+        sigma=sigma, c0=c0, p_r=p_r, overshoot=ov,
+        d_requested=np.full(w, ttc),
+    )
+
+
+def uniform_schedule(n: int, family: int, items: int, item_cus: float,
+                     ttc: float, arrival_gap_ticks: int = 0,
+                     seed: int = 0) -> Schedule:
+    """N identical workloads of one family (Lambda comparison, unit tests)."""
+    prm = FAMILY_PARAMS[family]
+    return Schedule(
+        t_arrive=np.arange(n) * arrival_gap_ticks,
+        family=np.full(n, family),
+        m0=np.full((n, 1), float(items)),
+        b_true=np.full((n, 1), item_cus),
+        sigma=np.full(n, prm["sigma"]),
+        c0=np.full(n, prm["c0"]),
+        p_r=np.full(n, prm["p_r"]),
+        overshoot=np.full(n, prm["overshoot"]),
+        d_requested=np.full(n, ttc),
+    )
+
+
+def ramp(p: jnp.ndarray, c0: jnp.ndarray, p_r: jnp.ndarray,
+         overshoot: jnp.ndarray) -> jnp.ndarray:
+    """Measured-CUS bias vs completed fraction p (rise → overshoot → settle)."""
+    rising = c0 + (1.0 - c0 + overshoot) * jnp.minimum(
+        p / jnp.maximum(p_r, 1e-6), 1.0)
+    settled = 1.0 + overshoot * jnp.exp(-(p - p_r) / 0.15)
+    return jnp.where(p <= p_r, rising, settled)

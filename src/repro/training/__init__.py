@@ -1,0 +1,4 @@
+from . import optimizer
+from .train_loop import TrainState, init_state, make_train_step
+
+__all__ = ["optimizer", "TrainState", "init_state", "make_train_step"]

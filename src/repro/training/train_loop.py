@@ -1,0 +1,71 @@
+"""Training step factory: loss → grad → clip → AdamW, with optional
+gradient accumulation (scan over microbatches) — the unit the dry-run
+lowers and the elastic runtime drives.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from . import optimizer
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: optimizer.OptState
+
+
+def init_state(model: Model, key, opt_cfg=None) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def make_train_step(model: Model, opt_cfg: optimizer.OptConfig,
+                    grad_accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With grad_accum > 1 the global batch is split along axis 0 into
+    microbatches consumed by a lax.scan (activation memory ∝ 1/grad_accum,
+    gradients accumulated in f32).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: dict):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            # Microbatches via dynamic_slice on the (data-sharded) batch
+            # axis — a reshape would re-layout the sharded axis and insert
+            # collectives.  Gradients accumulate in the param dtype.
+            def micro(carry, i):
+                acc, loss_acc = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // grad_accum),
+                        x.shape[0] // grad_accum, 0), batch)
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
+                                   acc, g)
+                return (acc, loss_acc + l), None
+
+            from ..models import sharding as sh
+            zero = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, 0.0), jnp.arange(grad_accum),
+                unroll=sh.scan_unroll())
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+
+        params, opt, metrics = optimizer.update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step

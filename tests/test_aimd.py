@@ -1,0 +1,72 @@
+"""AIMD scaling + baseline policies (paper §IV Fig. 1, §V.C)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aimd
+from repro.core.types import ControlParams
+
+P = ControlParams()
+
+
+def test_additive_increase():
+    s = aimd.aimd_init(10.0)
+    s = aimd.aimd_step(s, jnp.asarray(10.0), jnp.asarray(20.0), P)
+    assert float(s.n_target) == pytest.approx(15.0)
+
+
+def test_multiplicative_decrease():
+    s = aimd.aimd_init(50.0)
+    s = aimd.aimd_step(s, jnp.asarray(50.0), jnp.asarray(10.0), P)
+    assert float(s.n_target) == pytest.approx(45.0)
+
+
+def test_bounds():
+    s = aimd.aimd_step(aimd.aimd_init(10.0), jnp.asarray(99.0),
+                       jnp.asarray(1e9), P)
+    assert float(s.n_target) == P.n_max
+    s = aimd.aimd_step(aimd.aimd_init(10.0), jnp.asarray(10.5),
+                       jnp.asarray(0.0), P)
+    assert float(s.n_target) == P.n_min
+
+
+@given(st.floats(1.0, 100.0), st.floats(0.0, 200.0))
+@settings(max_examples=100, deadline=None)
+def test_fig1_invariant(n, n_star):
+    """One AIMD step moves N by at most +α or shrinks by exactly ×β
+    (within [N_min, N_max])."""
+    s = aimd.aimd_step(aimd.aimd_init(n), jnp.asarray(n), jnp.asarray(n_star), P)
+    t = float(s.n_target)
+    if n <= n_star:
+        assert t == pytest.approx(min(n + P.alpha, P.n_max))
+    else:
+        assert t == pytest.approx(max(P.beta * n, P.n_min))
+
+
+def test_mwa_is_mean_of_history():
+    s = aimd.policy_init()
+    for v in [10.0, 20.0, 30.0]:
+        s = aimd.policy_push(s, jnp.asarray(v))
+    assert float(aimd.mwa_target(s, P)) == pytest.approx(20.0)
+
+
+def test_lr_extrapolates_line():
+    s = aimd.policy_init()
+    for v in [10.0, 12.0, 14.0, 16.0, 18.0, 20.0]:  # slope +2/tick
+        s = aimd.policy_push(s, jnp.asarray(v))
+    assert float(aimd.lr_target(s, P)) == pytest.approx(22.0, abs=1e-3)
+
+
+def test_reactive_follows_latest():
+    s = aimd.policy_init()
+    s = aimd.policy_push(s, jnp.asarray(33.0))
+    assert float(aimd.reactive_target(s, P)) == pytest.approx(33.0)
+
+
+def test_termination_order_smallest_remaining_first():
+    a = jnp.asarray([300.0, 10.0, 2000.0, 50.0])
+    active = jnp.asarray([True, True, False, True])
+    order = np.asarray(aimd.termination_order(a, active))
+    assert list(order[:3]) == [1, 3, 0]

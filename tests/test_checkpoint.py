@@ -1,0 +1,58 @@
+"""Checkpointing: atomic commit, roundtrip, topology-agnostic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                       "blocks": {"a": jnp.ones((2, 2), jnp.bfloat16)}},
+            "step": jnp.asarray(7)}
+
+
+def test_roundtrip(tmp_path, tree):
+    d = str(tmp_path)
+    checkpointer.save(d, 7, tree)
+    assert checkpointer.latest_step(d) == 7
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+    out = checkpointer.restore(d, 7, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_invisible(tmp_path, tree):
+    d = str(tmp_path)
+    checkpointer.save(d, 3, tree)
+    os.remove(os.path.join(d, "step_00000003.done"))
+    assert checkpointer.latest_step(d) is None
+
+
+def test_prune_keeps_newest(tmp_path, tree):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        checkpointer.save(d, s, tree)
+    checkpointer.prune(d, keep=2)
+    assert checkpointer.latest_step(d) == 5
+    steps = sorted(int(n[5:13]) for n in os.listdir(d)
+                   if n.endswith(".done"))
+    assert steps == [4, 5]
+
+
+def test_shape_mismatch_rejected(tmp_path, tree):
+    d = str(tmp_path)
+    checkpointer.save(d, 1, tree)
+    bad = {"params": {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                      "blocks": {"a": jax.ShapeDtypeStruct((2, 2),
+                                                           jnp.bfloat16)}},
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.raises(ValueError):
+        checkpointer.restore(d, 1, bad)

@@ -1,0 +1,91 @@
+"""Proportional-fair allocation (paper §III, eqs. 10-14)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fairshare
+from repro.core.types import ControlParams
+
+P = ControlParams()
+
+
+def test_eq11_is_argmax_of_eq10():
+    r, d = 120.0, 40.0
+    s_star = r / d
+    f = lambda s: r * np.log(s) - d * s
+    grid = np.linspace(0.1, 10.0, 2000)
+    assert f(s_star) >= f(grid).max() - 1e-9
+
+
+@given(st.floats(1.0, 1e4), st.floats(10.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_optimal_rate_property(r, d):
+    """f'(s*) == 0 and f''(s*) < 0 for every (r, d)."""
+    s = r / d
+    grad = r / s - d
+    assert abs(grad) < 1e-6 * max(d, 1.0)
+
+
+def test_band_scaling_down_eq13():
+    r = jnp.asarray([100.0, 200.0])
+    d = jnp.asarray([10.0, 10.0])
+    active = jnp.ones(2, bool)
+    n_tot = jnp.asarray(10.0)           # demand 30 > 10 + α
+    a = fairshare.allocate(r, d, active, n_tot, P)
+    # every rate scaled by (N+α)/N*
+    np.testing.assert_allclose(
+        np.asarray(a.s), np.asarray([10.0, 20.0]) * (15.0 / 30.0), rtol=1e-6)
+
+
+def test_band_scaling_up_eq14():
+    r = jnp.asarray([10.0])
+    d = jnp.asarray([10.0])
+    active = jnp.ones(1, bool)
+    n_tot = jnp.asarray(10.0)           # demand 1 < β·10
+    a = fairshare.allocate(r, d, active, n_tot, P)
+    assert float(a.s[0]) == pytest.approx(1.0 * (9.0 / 1.0), rel=1e-6)
+
+
+def test_inside_band_unscaled():
+    r = jnp.asarray([100.0])
+    d = jnp.asarray([10.0])
+    a = fairshare.allocate(r, d, jnp.ones(1, bool), jnp.asarray(10.0), P)
+    assert float(a.s[0]) == pytest.approx(10.0, rel=1e-6)
+
+
+def test_per_workload_cap():
+    r = jnp.asarray([1e6])
+    d = jnp.asarray([1.0])
+    a = fairshare.allocate(r, d, jnp.ones(1, bool), jnp.asarray(100.0), P)
+    assert float(a.s[0]) <= P.n_w_max + 1e-6
+
+
+def test_surge_ceiling_bounds_demand():
+    r = jnp.asarray([1e9])
+    d = jnp.asarray([1e-3])
+    a = fairshare.allocate(r, d, jnp.ones(1, bool), jnp.asarray(10.0), P)
+    assert float(a.n_star) <= P.surge_mult * P.n_w_max + 1e-6
+
+
+def test_confirm_ttc_extends_infeasible():
+    r = jnp.asarray([1000.0])
+    d_req = jnp.asarray([10.0])         # would need s = 100 > N_w_max
+    out = fairshare.confirm_ttc(r, d_req, jnp.ones(1, bool), P)
+    assert float(out[0]) == pytest.approx(100.0)
+
+
+@given(st.lists(st.tuples(st.floats(1.0, 1e4), st.floats(60.0, 1e4)),
+                min_size=1, max_size=8),
+       st.floats(1.0, 200.0))
+@settings(max_examples=50, deadline=None)
+def test_allocation_invariants(pairs, n_tot):
+    """Rates are non-negative, capped, zero for inactive workloads."""
+    r = jnp.asarray([p[0] for p in pairs])
+    d = jnp.asarray([p[1] for p in pairs])
+    active = jnp.arange(len(pairs)) % 2 == 0
+    a = fairshare.allocate(r, d, active, jnp.asarray(n_tot), P)
+    s = np.asarray(a.s)
+    assert (s >= 0).all() and (s <= P.n_w_max + 1e-5).all()
+    assert (s[~np.asarray(active)] == 0).all()

@@ -1,0 +1,77 @@
+"""Unit tests for the Kalman CUS predictor (paper §II.A, eqs. 4-9)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kalman
+from repro.core.types import ControlParams
+
+P = ControlParams()
+
+
+def _run(meas, w=1, k=1, params=P):
+    st = kalman.init(w, k)
+    hist = []
+    for m in meas:
+        st = kalman.step(st, jnp.full((w, k), m),
+                         jnp.ones((w, k), bool), params)
+        hist.append(float(st.b_hat[0, 0]))
+    return st, hist
+
+
+def test_bootstrap_uses_first_measurement():
+    st, hist = _run([42.0])
+    assert hist[0] == pytest.approx(42.0)
+
+
+def test_converges_to_constant_signal():
+    st, hist = _run([10.0] * 30)
+    assert hist[-1] == pytest.approx(10.0, rel=1e-3)
+
+
+def test_gain_reaches_golden_fixed_point():
+    # π* solves π = (1-κ)(π+σz²) with κ = (π+σz²)/(π+σz²+σv²);
+    # for σz²=σv²=0.5 the stationary gain is (√5-1)/2 ≈ 0.618.
+    st = kalman.init(1, 1)
+    for i in range(200):
+        st = kalman.step(st, jnp.ones((1, 1)), jnp.ones((1, 1), bool), P)
+    pi_minus = float(st.pi[0, 0]) + P.sigma_z2
+    kappa = pi_minus / (pi_minus + P.sigma_v2)
+    assert kappa == pytest.approx((np.sqrt(5) - 1) / 2, abs=1e-3)
+
+
+def test_eq8_uses_lagged_measurement():
+    # After bootstrap at m0, the next update moves toward m0 (the lagged
+    # measurement), not toward the new m1.
+    st = kalman.init(1, 1)
+    st = kalman.step(st, jnp.full((1, 1), 10.0), jnp.ones((1, 1), bool), P)
+    st = kalman.step(st, jnp.full((1, 1), 99.0), jnp.ones((1, 1), bool), P)
+    assert float(st.b_hat[0, 0]) == pytest.approx(10.0)
+
+
+def test_masked_rows_frozen():
+    st = kalman.init(2, 1)
+    st = kalman.step(st, jnp.full((2, 1), 5.0), jnp.ones((2, 1), bool), P)
+    mask = jnp.asarray([[True], [False]])
+    st2 = kalman.step(st, jnp.full((2, 1), 50.0), mask, P)
+    assert float(st2.b_hat[1, 0]) == float(st.b_hat[1, 0])
+    assert float(st2.pi[1, 0]) == float(st.pi[1, 0])
+
+
+def test_reliable_on_first_negative_slope():
+    # Rising measurements keep slope positive; a drop flips reliability.
+    st = kalman.init(1, 1)
+    for m in [1.0, 2.0, 3.0, 4.0]:
+        st = kalman.step(st, jnp.full((1, 1), m), jnp.ones((1, 1), bool), P)
+        assert not bool(st.reliable[0, 0])
+    for m in [4.0, 1.0, 1.0]:   # eq. 8 lag: the drop lands two steps later
+        st = kalman.step(st, jnp.full((1, 1), m), jnp.ones((1, 1), bool), P)
+    assert bool(st.reliable[0, 0])
+
+
+def test_reset_rows_clears_state():
+    st, _ = _run([10.0] * 5, w=2)
+    st = kalman.reset_rows(st, jnp.asarray([True, False]))
+    assert float(st.b_hat[0, 0]) == 0.0 and not bool(st.has_meas[0, 0])
+    assert float(st.b_hat[1, 0]) == pytest.approx(10.0, rel=1e-2)

@@ -1,0 +1,71 @@
+"""Ad-hoc + ARMA baseline estimators (paper §V.B)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predictors
+from repro.core.types import ControlParams
+
+P = ControlParams()
+
+
+def test_adhoc_fixed_gain():
+    st = predictors.adhoc_init(1, 1)
+    st = predictors.adhoc_step(st, jnp.full((1, 1), 10.0),
+                               jnp.ones((1, 1), bool), P)
+    st = predictors.adhoc_step(st, jnp.full((1, 1), 20.0),
+                               jnp.ones((1, 1), bool), P)
+    st = predictors.adhoc_step(st, jnp.full((1, 1), 20.0),
+                               jnp.ones((1, 1), bool), P)
+    # second update moves toward lagged 20 with κ=0.1 from 10
+    assert float(st.b_hat[0, 0]) == pytest.approx(11.0)
+
+
+def test_adhoc_slower_than_kalman():
+    from repro.core import kalman
+    ka = kalman.init(1, 1)
+    ah = predictors.adhoc_init(1, 1)
+    for m in [10.0, 10.0, 10.0, 10.0]:
+        mm = jnp.full((1, 1), m)
+        ones = jnp.ones((1, 1), bool)
+        ka = kalman.step(ka, mm, ones, P)
+        ah = predictors.adhoc_step(ah, mm, ones, P)
+    # both bootstrap at 10; inject a drop and see who tracks faster
+    for m in [2.0, 2.0, 2.0]:
+        mm = jnp.full((1, 1), m)
+        ones = jnp.ones((1, 1), bool)
+        ka = kalman.step(ka, mm, ones, P)
+        ah = predictors.adhoc_step(ah, mm, ones, P)
+    assert abs(float(ka.b_hat[0, 0]) - 2.0) < abs(float(ah.b_hat[0, 0]) - 2.0)
+
+
+def test_arma_eq15_weights():
+    st = predictors.arma_init(1, 1)
+    m0 = jnp.asarray([[10.0]])
+    # three ticks, each completing 1 of 10 items in 4/5/6 seconds
+    for t_exec in [4.0, 5.0, 6.0]:
+        st = predictors.arma_step(st, jnp.asarray([[t_exec]]),
+                                  jnp.asarray([[1.0]]), m0, P)
+    # b_norm values (per item): after t3: total=15, frac=0.3 -> 5.0;
+    # after t2: total=9, frac=0.2 -> 4.5; after t1: 4.0
+    exp = 0.8 * 5.0 + 0.15 * 4.5 + 0.05 * 4.0
+    assert float(st.b_hat[0, 0]) == pytest.approx(exp, rel=1e-5)
+
+
+def test_arma_reliability_window():
+    st = predictors.arma_init(1, 1)
+    m0 = jnp.asarray([[100.0]])
+    for _ in range(6):
+        st = predictors.arma_step(st, jnp.asarray([[5.0]]),
+                                  jnp.asarray([[1.0]]), m0, P)
+    assert bool(st.reliable[0, 0])      # flat history is within 20%
+
+
+def test_arma_no_reliability_when_volatile():
+    st = predictors.arma_init(1, 1)
+    m0 = jnp.asarray([[100.0]])
+    for t_exec in [1.0, 30.0, 2.0, 40.0]:
+        st = predictors.arma_step(st, jnp.asarray([[t_exec]]),
+                                  jnp.asarray([[1.0]]), m0, P)
+    assert not bool(st.reliable[0, 0])

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import billing, kalman
+from repro.core.types import BillingParams, ControlParams
+from repro.models.layers import cross_entropy
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+P = ControlParams()
+
+
+@given(st.lists(st.floats(0.5, 500.0), min_size=3, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_kalman_estimate_stays_in_measurement_hull(meas):
+    """b̂ is a convex combination of past measurements: never leaves
+    [min(meas), max(meas)] after bootstrap."""
+    stt = kalman.init(1, 1)
+    lo, hi = min(meas), max(meas)
+    for m in meas:
+        stt = kalman.step(stt, jnp.full((1, 1), m), jnp.ones((1, 1), bool), P)
+        b = float(stt.b_hat[0, 0])
+        assert lo - 1e-4 <= b <= hi + 1e-4
+
+
+@given(st.floats(0.01, 10.0), st.floats(0.01, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_kalman_gain_in_unit_interval(sz, sv):
+    import dataclasses
+    p = dataclasses.replace(P, sigma_z2=sz, sigma_v2=sv)
+    stt = kalman.init(1, 1)
+    for _ in range(20):
+        stt = kalman.step(stt, jnp.ones((1, 1)), jnp.ones((1, 1), bool), p)
+        pi = float(stt.pi[0, 0])
+        assert 0.0 <= pi <= sz + sv + 1.0
+
+
+@given(st.integers(1, 3), st.integers(2, 5), st.integers(1, 4),
+       st.sampled_from([16, 32]), st.sampled_from([8, 16]),
+       st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_ssd_chunked_equals_sequential(b, nc, h, p_, n, seed):
+    """State-space duality: the chunked matmul form equals the sequential
+    recurrence for any shape/chunking."""
+    chunk = 16
+    s = nc * chunk
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p_), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bb = jax.random.normal(ks[3], (b, s, n))
+    cc = jax.random.normal(ks[4], (b, s, n))
+    y1, s1 = ssd_chunked(x, dt, a_log, bb, cc, chunk)
+    y2, s2 = ssd_reference(x, dt, a_log, bb, cc)
+    np.testing.assert_allclose(y1, y2, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(s1, s2, atol=2e-3, rtol=2e-3)
+
+
+@given(st.integers(2, 6), st.integers(3, 30), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_cross_entropy_matches_naive(b, v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    logits = jax.random.normal(ks[0], (b, 4, v), jnp.float32)
+    labels = jax.random.randint(ks[1], (b, 4), 0, v)
+    got = float(cross_entropy(logits, labels))
+    # naive
+    p = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.mean(jnp.take_along_axis(p, labels[..., None],
+                                               -1)[..., 0]))
+    assert abs(got - want) < 1e-4
+
+
+@given(st.lists(st.tuples(st.integers(0, 14), st.floats(30.0, 900.0)),
+                min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_billing_no_free_capacity(steps):
+    """Paid quanta always cover the capacity-time delivered: you can never
+    have used more instance-seconds than you paid for."""
+    bp = BillingParams(boot_delay=0.0)
+    c = billing.init(16)
+    used = 0.0
+    for target, dt in steps:
+        c = billing.scale_to(c, jnp.asarray(float(target)), bp)
+        used += float(billing.capacity(c)) * dt
+        c = billing.advance(c, dt, bp)
+        paid = float(c.cum_cost) / bp.price_per_quantum * bp.quantum
+        assert used <= paid + 1e-3
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_data_pipeline_deterministic_and_in_range(step):
+    from repro.data.pipeline import DataConfig, batch_at
+    cfg = DataConfig(vocab=977, seq_len=32, global_batch=4, seed=1)
+    a = batch_at(cfg, step)
+    b = batch_at(cfg, step)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert int(a["tokens"].max()) < 977 and int(a["tokens"].min()) >= 0

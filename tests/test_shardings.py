@@ -1,0 +1,99 @@
+"""Sharding rules: model-axis assignment, divisibility guards, ZeRO."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings as shr
+
+
+class FakeMesh:
+    """Duck-typed mesh: axis names + shape, no devices needed."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        import numpy as np
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def _spec(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {"/".join(str(getattr(p, "key", p)) for p in path):
+            shr.param_spec(path, leaf, MESH) for path, leaf in flat}
+
+
+def test_attention_param_specs():
+    tree = {"blocks": {"attn": {
+        "wq": jax.ShapeDtypeStruct((48, 2048, 32, 64), jnp.bfloat16),
+        "wo": jax.ShapeDtypeStruct((48, 32, 64, 2048), jnp.bfloat16),
+    }}}
+    s = _spec(tree)
+    assert s["blocks/attn/wq"] == P(None, None, "model", None)
+    assert s["blocks/attn/wo"] == P(None, "model", None, None)
+
+
+def test_divisibility_guard_falls_back():
+    tree = {"attn": {"wq": jax.ShapeDtypeStruct((2048, 56, 128),
+                                                jnp.bfloat16)}}
+    s = _spec(tree)
+    assert s["attn/wq"] == P(None, None, None)     # 56 % 16 != 0 -> replicate
+
+
+def test_moe_expert_fsdp():
+    tree = {"blocks": {"moe": {
+        "w_gate": jax.ShapeDtypeStruct((48, 16, 5120, 8192), jnp.bfloat16),
+        "w_down": jax.ShapeDtypeStruct((48, 16, 8192, 5120), jnp.bfloat16),
+    }}}
+    s = _spec(tree)
+    assert s["blocks/moe/w_gate"] == P(None, "data", None, "model")
+    assert s["blocks/moe/w_down"] == P(None, "data", "model", None)
+
+
+def test_moe_expert_fsdp_fallback_to_dmodel():
+    # 8 experts don't divide data=16 -> shard d_model instead
+    tree = {"blocks": {"moe": {
+        "w_gate": jax.ShapeDtypeStruct((32, 8, 4096, 14336), jnp.bfloat16),
+    }}}
+    s = _spec(tree)
+    assert s["blocks/moe/w_gate"] == P(None, None, "data", "model")
+
+
+def test_zero_opt_sharding_adds_data_axis():
+    path_tree = {"mu": {"blocks": {"mlp": {
+        "w_up": jax.ShapeDtypeStruct((48, 2048, 8192), jnp.float32)}}}}
+    flat, _ = jax.tree_util.tree_flatten_with_path(path_tree)
+    (path, leaf), = flat
+    spec = shr.opt_spec(path, leaf, MESH)
+    assert spec == P("data", None, "model")
+
+
+def test_small_leaves_not_zero_sharded():
+    path_tree = {"mu": {"ln": {
+        "scale": jax.ShapeDtypeStruct((2048,), jnp.float32)}}}
+    flat, _ = jax.tree_util.tree_flatten_with_path(path_tree)
+    (path, leaf), = flat
+    assert shr.opt_spec(path, leaf, MESH) == P(None)
+
+
+def test_cache_specs():
+    tree = {"k": jax.ShapeDtypeStruct((48, 128, 32768, 16, 128),
+                                      jnp.bfloat16)}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    (path, leaf), = flat
+    assert shr.cache_spec(path, leaf, MESH) == \
+        P(None, ("data",), None, "model", None)
+    assert shr.cache_spec(path, leaf, MESH, seq_shard=True) == \
+        P(None, ("data",), "data", "model", None)
+
+
+def test_batch_specs():
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32),
+            "token": jax.ShapeDtypeStruct((1,), jnp.int32)}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {str(path[0].key): shr.batch_spec(path, leaf, MESH)
+           for path, leaf in flat}
+    assert out["tokens"] == P(("data",), None)
+    assert out["token"] == P(None)      # batch 1 cannot shard -> guard
