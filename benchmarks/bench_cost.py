@@ -83,19 +83,28 @@ def _run_table3(seeds, terminate) -> dict:
 
 
 def write_curves(path: str, seeds=(0,)) -> None:
-    """Fig. 4/5-style cumulative-cost curves (CSV per TTC)."""
+    """Fig. 4/5-style cumulative-cost curves (CSV per TTC), plus a summary
+    CSV carrying each policy's final cost *and TTC violation count* — a run
+    that never finishes its workloads must read as broken, not as cheap."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     for ttc, as_step, tag in ((TTC_CONSERVATIVE, 1.0, "fig4"),
                               (TTC_FAST, 10.0, "fig5")):
-        rows = {}
+        rows, summary = {}, {}
         for policy in POLICIES:
             r = run_policy(policy, ttc, seed=seeds[0], as_step=as_step)
             rows[policy] = np.asarray(r["trace"].cum_cost)
+            summary[policy] = (r["cost"], r["violations"])
         with open(f"{path}_{tag}.csv", "w", newline="") as f:
             w = csv.writer(f)
             w.writerow(["tick"] + list(POLICIES))
             for t in range(len(rows["aimd"])):
                 w.writerow([t] + [f"{rows[p][t]:.4f}" for p in POLICIES])
+        with open(f"{path}_{tag}_summary.csv", "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["policy", "cost", "violations"])
+            for policy in POLICIES:
+                cost, viol = summary[policy]
+                w.writerow([policy, f"{cost:.4f}", viol])
 
 
 def main(emit) -> None:

@@ -9,6 +9,8 @@ artifact; ``derived`` packs the secondary columns).
   bench_lambda       -> Table IV   (per-image cost vs AWS Lambda)
   bench_kernels      -> kernel micro-benchmarks (host timings)
   bench_roofline     -> §Roofline summary over the dry-run sweep
+  bench_spot         -> Appendix A (spot market: headline saving, bid sweep,
+                        instance-granularity frontier)
 """
 
 import sys
@@ -18,7 +20,8 @@ import time
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from . import (bench_convergence, bench_cost, bench_kernels,
-                   bench_lambda, bench_prediction, bench_roofline)
+                   bench_lambda, bench_prediction, bench_roofline,
+                   bench_spot)
     suites = {
         "prediction": bench_prediction,
         "convergence": bench_convergence,
@@ -26,6 +29,7 @@ def main() -> None:
         "lambda": bench_lambda,
         "kernels": bench_kernels,
         "roofline": bench_roofline,
+        "spot": bench_spot,
     }
     print("name,value,derived")
 

@@ -1,15 +1,21 @@
 """Instance lifecycle + quantized billing (paper §II.C, §IV, Appendix A).
 
 The fleet is a fixed pool of ``I`` potential instances (``I`` ≥ N_max) whose
-lifecycle is driven by two pure functions:
+lifecycle is driven by three pure functions:
 
   * ``advance``   — one monitoring interval of wall-clock: boot progress and
                     billing-quantum renewal (a_{i,j} countdown, eq. 3).
   * ``scale_to``  — start/drain instances to hit a target count.
+  * ``preempt``   — spot-market reclamation: slots whose recorded bid is
+                    below the current spot price are lost immediately.
 
-Billing model (Appendix A): a CU is billed ``price_per_quantum`` for each
+Billing model (Appendix A): a CU is billed one quantum's price for each
 *started* ``quantum`` (EC2 2015: $0.0081/hour for m3.medium spot), beginning
 at the start request (boot time is paid, as on EC2).  There are no refunds.
+The price may be the static ``BillingParams.price_per_quantum`` or, when the
+spot market is live (``sim.spot``), the *current* spot price — pass it as
+the ``price`` argument of ``advance``/``scale_to`` (scalar, or per-slot for
+heterogeneous fleets).
 
 Termination (§IV): "the prudent action is always to terminate spot instances
 with the smallest remaining time before renewal" — i.e. AWS's
@@ -19,6 +25,12 @@ and is reclaimed exactly at its quantum boundary instead of renewing.
 Scaling up first cancels pending drains (free capacity) before paying for
 new starts.  The control plane counts only non-draining instances; the
 execution plane happily uses draining ones — they are paid for.
+
+Preemption (Appendix A) is the involuntary counterpart: the market, not the
+controller, takes the instance *now*, mid-quantum, and the already-billed
+remainder is forfeited.  ``scale_to`` also refuses to start new slots while
+``allow_start`` is False — on EC2 a request bidding below the clearing
+price is simply not fulfilled.
 """
 
 from __future__ import annotations
@@ -38,31 +50,46 @@ def init(pool: int) -> ClusterState:
         draining=jnp.zeros((pool,), bool),
         cum_cost=jnp.asarray(0.0, jnp.float32),
         busy_frac=jnp.zeros((pool,), jnp.float32),
+        itype=jnp.zeros((pool,), jnp.int32),
+        bid=jnp.full((pool,), jnp.inf, jnp.float32),
+        n_preempt=jnp.asarray(0.0, jnp.float32),
     )
 
 
-def committed(cluster: ClusterState) -> jnp.ndarray:
-    """Control-plane fleet size: paid-for instances not marked to drain."""
+def committed(cluster: ClusterState, cores: float | jnp.ndarray = 1.0
+              ) -> jnp.ndarray:
+    """Control-plane fleet size in CUs: paid-for, not marked to drain."""
     on = (cluster.phase >= BOOTING) & ~cluster.draining
-    return jnp.sum(on.astype(jnp.float32))
+    return jnp.sum(on.astype(jnp.float32) * cores)
 
 
-def usable(cluster: ClusterState) -> jnp.ndarray:
+def usable(cluster: ClusterState, cores: float | jnp.ndarray = 1.0
+           ) -> jnp.ndarray:
     """Control-plane usable CUs (paper N_tot, eq. 2): active, not draining."""
     on = (cluster.phase == ACTIVE) & ~cluster.draining
-    return jnp.sum(on.astype(jnp.float32))
+    return jnp.sum(on.astype(jnp.float32) * cores)
 
 
-def capacity(cluster: ClusterState) -> jnp.ndarray:
-    """Execution capacity: every booted instance, drained or not, is paid
-    for and is given tasks until its quantum expires."""
-    return jnp.sum((cluster.phase == ACTIVE).astype(jnp.float32))
+def capacity(cluster: ClusterState, cores: float | jnp.ndarray = 1.0
+             ) -> jnp.ndarray:
+    """Execution capacity in CUs: every booted instance, drained or not, is
+    paid for and is given tasks until its quantum expires."""
+    return jnp.sum((cluster.phase == ACTIVE).astype(jnp.float32) * cores)
 
 
-def advance(cluster: ClusterState, dt: float,
-            billing: BillingParams) -> ClusterState:
+def advance(cluster: ClusterState, dt: float, billing: BillingParams,
+            price: jnp.ndarray | None = None) -> ClusterState:
     """Advance wall-clock ``dt`` seconds: boots finish, quanta renew, and
-    draining instances are reclaimed at their billing boundary."""
+    draining instances are reclaimed at their billing boundary.
+
+    ``price`` is the $/quantum charged for renewals crossed in this window —
+    scalar or per-slot; defaults to the static ``billing.price_per_quantum``.
+    """
+    if price is None:
+        price = billing.price_per_quantum
+    price = jnp.broadcast_to(jnp.asarray(price, jnp.float32),
+                             cluster.a.shape)
+
     on = cluster.phase >= BOOTING
     boot_left = jnp.where(on, jnp.maximum(cluster.boot_left - dt, 0.0),
                           cluster.boot_left)
@@ -78,25 +105,61 @@ def advance(cluster: ClusterState, dt: float,
     # per-minute billing): charge as many as the clock crossed.
     k = jnp.where(renew, jnp.floor(-a / billing.quantum) + 1.0, 0.0)
     a = a + k * billing.quantum
-    cum_cost = cluster.cum_cost + jnp.sum(k) * billing.price_per_quantum
+    cum_cost = cluster.cum_cost + jnp.sum(k * price)
 
     phase = jnp.where(reclaim, jnp.int8(OFF), phase)
     a = jnp.where(reclaim, 0.0, a)
     draining = cluster.draining & ~reclaim
+    bid = jnp.where(reclaim, jnp.inf, cluster.bid)
 
-    return ClusterState(phase=phase, a=a, boot_left=boot_left,
-                        draining=draining, cum_cost=cum_cost,
-                        busy_frac=cluster.busy_frac)
+    return cluster._replace(phase=phase, a=a, boot_left=boot_left,
+                            draining=draining, cum_cost=cum_cost, bid=bid)
+
+
+def preempt(cluster: ClusterState, price: jnp.ndarray
+            ) -> tuple[ClusterState, jnp.ndarray]:
+    """Spot reclamation: the market takes every slot outbid by ``price``.
+
+    Unlike the controller's polite drain, this is involuntary and immediate:
+    the slot goes OFF mid-quantum and the rest of its paid time is forfeited
+    (no refunds on EC2).  Returns the new state and the number of instances
+    lost — the capacity-loss signal the controller's AIMD loop reacts to on
+    its next step, and the event ``ft.elastic`` treats as a node failure.
+    """
+    price = jnp.broadcast_to(jnp.asarray(price, jnp.float32),
+                             cluster.bid.shape)
+    on = cluster.phase >= BOOTING
+    hit = on & (price > cluster.bid)
+    n_hit = jnp.sum(hit.astype(jnp.float32))
+    return cluster._replace(
+        phase=jnp.where(hit, jnp.int8(OFF), cluster.phase),
+        a=jnp.where(hit, 0.0, cluster.a),
+        boot_left=jnp.where(hit, 0.0, cluster.boot_left),
+        draining=cluster.draining & ~hit,
+        bid=jnp.where(hit, jnp.inf, cluster.bid),
+        n_preempt=cluster.n_preempt + n_hit,
+    ), n_hit
 
 
 def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
-             billing: BillingParams) -> ClusterState:
-    """Drive the control-plane fleet size toward ``n_target``.
+             billing: BillingParams,
+             price: jnp.ndarray | None = None,
+             bid: jnp.ndarray | None = None,
+             itype: jnp.ndarray | None = None,
+             allow_start: jnp.ndarray | bool = True) -> ClusterState:
+    """Drive the control-plane fleet size toward ``n_target`` instances.
 
     Growth: cancel drains first (the capacity is already paid for), then
-    start OFF slots, paying a full quantum each.  Shrink: mark the instances
-    with the *smallest remaining paid time* (§IV) as draining.
+    start OFF slots, paying a full quantum each at ``price`` ($/quantum;
+    defaults to the static list price).  New slots record ``bid`` and
+    ``itype`` for the spot market's ``preempt``; ``allow_start=False``
+    models an unfulfilled spot request (price above our bid) — growth by
+    undraining still works, new money does not enter the market.
+    Shrink: mark the instances with the *smallest remaining paid time*
+    (§IV) as draining.
     """
+    if price is None:
+        price = billing.price_per_quantum
     pool = cluster.phase.shape[0]
     n_target = jnp.round(n_target)
     n_live = committed(cluster)
@@ -111,16 +174,30 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
     draining = cluster.draining & ~do_undrain
 
     n_start = jnp.maximum(n_grow - n_undrained, 0.0)
+    n_start = jnp.where(jnp.asarray(allow_start), n_start, 0.0)
     off = cluster.phase == OFF
     start_rank = _rank(jnp.where(off, jnp.arange(pool, dtype=jnp.float32),
                                  jnp.inf))
     do_start = off & (start_rank <= n_start)
-    n_started = jnp.sum(do_start.astype(jnp.float32))
 
     phase = jnp.where(do_start, jnp.int8(BOOTING), cluster.phase)
     a = jnp.where(do_start, billing.quantum, cluster.a)
     boot_left = jnp.where(do_start, billing.boot_delay, cluster.boot_left)
-    cum_cost = cluster.cum_cost + n_started * billing.price_per_quantum
+    start_price = jnp.broadcast_to(jnp.asarray(price, jnp.float32),
+                                   cluster.a.shape)
+    cum_cost = cluster.cum_cost + jnp.sum(
+        jnp.where(do_start, start_price, 0.0))
+    new_bid = (jnp.full_like(cluster.bid, jnp.inf) if bid is None
+               else jnp.broadcast_to(jnp.asarray(bid, jnp.float32),
+                                     cluster.bid.shape))
+    bid_arr = jnp.where(do_start, new_bid, cluster.bid)
+    itype_arr = cluster.itype
+    if itype is not None:
+        itype_arr = jnp.where(
+            do_start,
+            jnp.broadcast_to(jnp.asarray(itype, jnp.int32),
+                             cluster.itype.shape),
+            cluster.itype)
 
     # ---- shrink: smallest-remaining-time instances first (§IV) -----------
     n_shrink = jnp.maximum(-delta, 0.0)
@@ -137,13 +214,14 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
         phase = jnp.where(do_shed, jnp.int8(OFF), phase)
         a = jnp.where(do_shed, 0.0, a)
         boot_left = jnp.where(do_shed, 0.0, boot_left)
+        bid_arr = jnp.where(do_shed, jnp.inf, bid_arr)
     else:
         # Beyond-paper: drain and reclaim at the billing boundary.
         draining = draining | do_shed
 
-    return ClusterState(phase=phase, a=a, boot_left=boot_left,
-                        draining=draining, cum_cost=cum_cost,
-                        busy_frac=cluster.busy_frac)
+    return cluster._replace(phase=phase, a=a, boot_left=boot_left,
+                            draining=draining, cum_cost=cum_cost,
+                            bid=bid_arr, itype=itype_arr)
 
 
 def _rank(key: jnp.ndarray) -> jnp.ndarray:

@@ -93,8 +93,17 @@ def step(state: ControllerState,
          exec_time: jnp.ndarray,     # (W, K) CU-seconds consumed in window
          items_done: jnp.ndarray,    # (W, K) completions in window
          cfg: ControllerConfig,
+         cores: jnp.ndarray | float | None = None,  # CUs per instance
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
+    # CUs per instance — a traced scalar when the spot fleet's granularity
+    # is a sweep axis (sim.sweep vmaps over it); the caller owns keeping it
+    # consistent with the execution and scaling planes.  All control
+    # arithmetic below is in CU space, so a preemption that knocks out one
+    # m4.10xlarge is seen as a 40-CU capacity loss and AIMD re-grows the
+    # fleet additively, exactly as it reacts to any shortfall.
+    if cores is None:
+        cores = 1.0
 
     # -- 1. predictor update ------------------------------------------------
     if cfg.predictor == "kalman":
@@ -122,7 +131,7 @@ def step(state: ControllerState,
     work = work._replace(d=d, confirmed=confirmed)
 
     # -- 3. proportional-fair service rates (eqs. 11-14) ---------------------
-    n_usable = billing_lib.usable(cluster)
+    n_usable = billing_lib.usable(cluster, cores)
     sched = work.active & confirmed
     alloc = fairshare.allocate(r, d, sched, n_usable, p)
     # Pre-confirmation bootstrap: run a trickle so measurements arrive.
@@ -133,8 +142,8 @@ def step(state: ControllerState,
 
     # -- 4. scaling policy ---------------------------------------------------
     pol = aimd_lib.policy_push(state.pol, n_star)
-    n_base = (billing_lib.committed(cluster) if cfg.aimd_base == "committed"
-              else n_usable)
+    n_base = (billing_lib.committed(cluster, cores)
+              if cfg.aimd_base == "committed" else n_usable)
     aimd_state = aimd_lib.aimd_step(state.aimd, n_base, n_star, p)
     if cfg.policy == "aimd":
         n_target = aimd_state.n_target
@@ -148,7 +157,7 @@ def step(state: ControllerState,
         active_mask = (cluster.phase == billing_lib.ACTIVE)
         n_act = jnp.maximum(jnp.sum(active_mask.astype(jnp.float32)), 1.0)
         util = jnp.sum(cluster.busy_frac * active_mask) / n_act
-        n_now = billing_lib.committed(cluster)
+        n_now = billing_lib.committed(cluster, cores)
         any_work = jnp.any(work.active)
         n_target = jnp.where(util > cfg.as_threshold,
                              n_now + cfg.as_step, n_now - cfg.as_step)

@@ -117,6 +117,13 @@ class ClusterState(NamedTuple):
 
     phase: 0 = off, 1 = booting, 2 = active.
     ``a`` is the paper's a_{i,j}[t]: seconds left in the current paid quantum.
+
+    Spot-market fields (Appendix A; see ``sim.spot``): each slot records the
+    instance type it was started as and the $/quantum bid attached to its
+    spot request.  A slot whose bid falls below the current spot price is
+    reclaimed by ``billing.preempt`` — the same event the elastic runtime in
+    ``repro.ft`` treats as a node failure.  On-demand fleets keep the
+    defaults (bid = +inf: never preempted).
     """
 
     phase: jnp.ndarray        # (I,) int8
@@ -125,6 +132,9 @@ class ClusterState(NamedTuple):
     draining: jnp.ndarray     # (I,) bool: reclaim at next quantum boundary
     cum_cost: jnp.ndarray     # ()   cumulative $ billed
     busy_frac: jnp.ndarray    # (I,) fraction of last interval spent computing
+    itype: jnp.ndarray        # (I,) int32: instance-type id (sim.spot table)
+    bid: jnp.ndarray          # (I,) $ / quantum bid of the slot's request
+    n_preempt: jnp.ndarray    # ()   cumulative instances reclaimed by market
 
 
 class AimdState(NamedTuple):

@@ -1,9 +1,13 @@
-# §V testbed: discrete-time cloud simulator, the 30-workload suite,
-# Lambda billing model and the spot-market trace generator.
-from . import lambda_model, market, runner, workloads
+# §V testbed: discrete-time cloud simulator, the 30-workload suite, the
+# Lambda billing model, the JAX spot market and its vmapped sweep harness
+# (``market`` is the numpy facade kept for ft/failures compat).
+from . import lambda_model, market, runner, spot, sweep, workloads
 from .runner import SimConfig, SimTrace, run
+from .spot import SpotConfig
+from .sweep import SweepAxes, make_axes, run_single, run_sweep
 from .workloads import Schedule, paper_schedule, uniform_schedule
 
-__all__ = ["lambda_model", "market", "runner", "workloads", "SimConfig",
-           "SimTrace", "run", "Schedule", "paper_schedule",
-           "uniform_schedule"]
+__all__ = ["lambda_model", "market", "runner", "spot", "sweep", "workloads",
+           "SimConfig", "SimTrace", "run", "SpotConfig", "SweepAxes",
+           "make_axes", "run_single", "run_sweep", "Schedule",
+           "paper_schedule", "uniform_schedule"]

@@ -1,48 +1,35 @@
-"""Spot-market price traces (paper Appendix A, Fig. 6 / Table V).
+"""Numpy compatibility facade over the JAX spot market (``sim.spot``).
 
-The paper's empirical findings, encoded as a generative trace model:
-  * spot price scales ~linearly with the CU count of the instance type;
-  * price *volatility* also grows with CU count — the single-CU m3.medium
-    never exceeded $0.01 over three months, while m4.10xlarge spiked hard.
-
-The model supports the paper's design decision (use many single-CU
-instances) and the simulator's optional preemption ablation: when the
-bid < spot price, instances are reclaimed (the same event the elastic
-runtime in ``repro.ft`` treats as a node failure).
+The hourly Appendix-A trace generator used by ``ft.failures`` lives on,
+but the Python AR(1) loop is gone: traces are produced by the jitted
+``lax.scan`` process in :mod:`repro.sim.spot` and materialised to numpy
+here.  Anything new should use ``sim.spot`` directly — this module exists
+so host-side consumers (the failure injector, notebooks) keep a plain
+numpy API and so the historical ``INSTANCE_TYPES`` import path survives.
 """
 
 from __future__ import annotations
 
+import jax
 import numpy as np
 
-# Appendix A, Table V (North Virginia, 2015-07-10).
-INSTANCE_TYPES = {
-    #                cores  on_demand   spot
-    "m3.medium":    (1,     0.067,      0.0081),
-    "m3.large":     (2,     0.133,      0.0173),
-    "m3.xlarge":    (4,     0.266,      0.0333),
-    "m3.2xlarge":   (8,     0.532,      0.0660),
-    "m4.4xlarge":   (16,    1.008,      0.1097),
-    "m4.10xlarge":  (40,    2.520,      0.5655),
-}
+from . import spot
+
+# Re-exported: Appendix A, Table V (North Virginia, 2015-07-10).
+INSTANCE_TYPES = spot.INSTANCE_TYPES
 
 
 def spot_trace(instance: str, hours: int, seed: int = 0) -> np.ndarray:
     """Hourly spot-price trace with CU-proportional volatility (Fig. 6)."""
-    cores, _, base = INSTANCE_TYPES[instance]
-    rng = np.random.default_rng(seed + cores)
-    # Log-AR(1) around the base price; volatility grows with core count.
-    vol = 0.01 + 0.035 * np.log2(max(cores, 1) + 1)
-    x = np.zeros(hours)
-    for t in range(1, hours):
-        x[t] = 0.97 * x[t - 1] + vol * rng.standard_normal()
-    # Sparse demand spikes, increasingly frequent for big instances.
-    p_spike = 0.002 * cores
-    spikes = rng.random(hours) < p_spike
-    mult = np.where(spikes, rng.uniform(2.0, 8.0, hours), 1.0)
-    return base * np.exp(x) * mult
+    cores, _, _ = INSTANCE_TYPES[instance]
+    rt = spot.make_runtime(spot.SpotConfig(instance=instance))
+    # Fold the core count into the key (rather than the legacy seed+cores
+    # offset, where (seed=1, 1-core) and (seed=0, 2-core) collided) so every
+    # (seed, instance type) pair gets an independent noise stream.
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), cores)
+    return np.asarray(spot.price_trace(rt, hours, key))
 
 
 def preemptions(trace: np.ndarray, bid: float) -> np.ndarray:
     """Boolean mask of hours in which a bid at ``bid`` would be reclaimed."""
-    return trace > bid
+    return np.asarray(trace) > bid

@@ -2,13 +2,16 @@
 
 One `lax.scan` step = one monitoring instant:
 
-  arrivals → wall-clock advance (boot/billing) → task execution with the
-  rates decided last instant → workload/SLA bookkeeping → controller step
-  (predict, confirm, allocate, scale) → instance start/terminate.
+  arrivals → spot-price step → wall-clock advance (boot/billing at the
+  current price) → market preemption of outbid slots → task execution with
+  the rates decided last instant → workload/SLA bookkeeping → controller
+  step (predict, confirm, allocate, scale) → instance start/terminate
+  (spot requests go unfulfilled while the fleet is outbid).
 
 Everything is fixed-shape and jitted; a full 30-workload × 300-tick
 experiment runs in milliseconds, so the benchmark suite sweeps predictors,
-policies and monitoring intervals cheaply.
+policies and monitoring intervals cheaply — and ``sim.sweep`` vmaps the
+*whole* run over seeds × bid levels × instance granularities in one call.
 """
 
 from __future__ import annotations
@@ -22,6 +25,7 @@ import jax.numpy as jnp
 from ..core import billing as billing_lib
 from ..core import controller as ctrl
 from ..core.types import ClusterState, WorkloadState
+from . import spot as spot_lib
 from . import workloads as wl
 
 
@@ -36,6 +40,11 @@ class SimConfig:
     efficiency: float = 1.0
     exec_noise: float = 0.08      # window-level execution-time noise
     seed: int = 0
+    # Appendix-A spot market; disabled by default (static list price,
+    # nothing is ever preempted) so the paper's §V experiments are
+    # untouched.  Enable to bill at the live spot price and lose slots
+    # whose bid the market clears above.
+    spot: spot_lib.SpotConfig = spot_lib.SpotConfig()
 
     @property
     def dt(self) -> float:
@@ -50,6 +59,7 @@ class SimState(NamedTuple):
     done_acc: jnp.ndarray   # (W,) cumulative (fractional) completions
     key: jax.Array
     t: jnp.ndarray          # () tick counter
+    spot: spot_lib.SpotState
 
 
 class SimTrace(NamedTuple):
@@ -65,6 +75,8 @@ class SimTrace(NamedTuple):
     confirmed: jnp.ndarray   # (T, W)
     active: jnp.ndarray      # (T, W)
     remaining: jnp.ndarray   # (T, W)  Σ_k m
+    spot_price: jnp.ndarray  # (T,)  $/quantum the market charged this tick
+    n_preempted: jnp.ndarray # (T,)  cumulative instances lost to the market
     t_done: jnp.ndarray      # (W,)  completion tick (final)
     work_final: WorkloadState
     violations: jnp.ndarray  # ()  TTC violations (final)
@@ -72,10 +84,10 @@ class SimTrace(NamedTuple):
 
 def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
              cluster: ClusterState, done_acc: jnp.ndarray,
-             cfg: SimConfig, key: jax.Array):
+             cfg: SimConfig, key: jax.Array, cores):
     """Consume CUS on the fleet for one interval; emit measurements."""
     dt = cfg.dt
-    n_act = billing_lib.capacity(cluster)   # paid capacity incl. draining
+    n_act = billing_lib.capacity(cluster, cores)  # paid CUs incl. draining
     # Grants beyond physical capacity are scaled back proportionally.
     want = jnp.sum(s)
     cap = n_act * 1.0
@@ -115,6 +127,7 @@ def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
 
 def make_step(schedule: wl.Schedule, cfg: SimConfig):
     sched = schedule.as_jax()
+    use_spot = cfg.spot.enabled
 
     def step(state: SimState, _):
         t = state.t
@@ -130,13 +143,32 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
         )
         c_state = ctrl.reset_rows(state.c, arrive)
 
+        # --- spot market: new clearing price for [t, t+1) -------------------
+        if use_spot:
+            spot_state = spot_lib.step(state.spot, cfg.spot, cfg.dt)
+            price = spot_state.price
+            cores = spot_state.rt.cores
+        else:
+            spot_state = state.spot
+            price = None
+            cores = 1.0
+
+        # --- market preemption: outbid slots are taken the instant the new
+        # price clears above their bid — *before* billing advances, so a
+        # reclaimed slot never renews a quantum at the very price that
+        # killed it ---------------------------------------------------------
+        cluster = state.cluster
+        if use_spot:
+            cluster, _ = billing_lib.preempt(cluster, price)
         # --- wall clock: boots complete, billing quanta renew ---------------
-        cluster = billing_lib.advance(state.cluster, cfg.dt, cfg.ctrl.billing)
+        cluster = billing_lib.advance(cluster, cfg.dt, cfg.ctrl.billing,
+                                      price=price)
 
         # --- execute with last instant's rates ------------------------------
         (new_m, b_meas, meas_mask, exec_time, items_done, util,
          done_acc) = _execute(
-            work, sched, state.s, cluster, state.done_acc, cfg, k_exec)
+            work, sched, state.s, cluster, state.done_acc, cfg, k_exec,
+            cores)
         done_acc = jnp.where(arrive, 0.0, done_acc)
         work = work._replace(m=new_m)
         busy = jnp.where(cluster.phase == billing_lib.ACTIVE, util, 0.0)
@@ -154,13 +186,23 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
         # --- control --------------------------------------------------------
         c_state, work, dec = ctrl.step(
             c_state, work, cluster, b_meas, meas_mask, exec_time, items_done,
-            cfg.ctrl)
-        cluster = billing_lib.scale_to(cluster, dec.n_target, cfg.ctrl.billing)
+            cfg.ctrl, cores=cores)
+        if use_spot:
+            rt = spot_state.rt
+            # CU target → instance count at this granularity; requests are
+            # only fulfilled while the market clears at or below our bid.
+            n_inst = jnp.ceil(dec.n_target / rt.cores)
+            cluster = billing_lib.scale_to(
+                cluster, n_inst, cfg.ctrl.billing, price=price, bid=rt.bid,
+                itype=rt.itype, allow_start=price <= rt.bid)
+        else:
+            cluster = billing_lib.scale_to(cluster, dec.n_target,
+                                           cfg.ctrl.billing)
 
         out = dict(
             cum_cost=cluster.cum_cost,
-            n_usable=billing_lib.usable(cluster),
-            n_committed=billing_lib.committed(cluster),
+            n_usable=billing_lib.usable(cluster, cores),
+            n_committed=billing_lib.committed(cluster, cores),
             n_star=dec.n_star,
             n_target=dec.n_target,
             util=util,
@@ -170,14 +212,25 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
             confirmed=work.confirmed,
             active=work.active,
             remaining=jnp.sum(work.m, -1),
+            spot_price=(spot_state.price if use_spot
+                        else jnp.asarray(cfg.ctrl.billing.price_per_quantum,
+                                         jnp.float32)),
+            n_preempted=cluster.n_preempt,
         )
         return SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
-                        done_acc=done_acc, key=key, t=t + 1), out
+                        done_acc=done_acc, key=key, t=t + 1,
+                        spot=spot_state), out
 
     return step
 
 
-def init_state(schedule: wl.Schedule, cfg: SimConfig) -> SimState:
+def init_state(schedule: wl.Schedule, cfg: SimConfig,
+               seed: jnp.ndarray | int | None = None,
+               spot_rt: spot_lib.SpotRuntime | None = None) -> SimState:
+    """Build the t=0 state.  ``seed`` and ``spot_rt`` may be traced values —
+    the axes ``sim.sweep`` vmaps the whole simulation over."""
+    if seed is None:
+        seed = cfg.seed
     w, k = schedule.m0.shape
     sched = schedule.as_jax()
     work = WorkloadState(
@@ -191,10 +244,23 @@ def init_state(schedule: wl.Schedule, cfg: SimConfig) -> SimState:
         t_submit=jnp.full((w,), -1),
         t_done=jnp.full((w,), -1),
     )
+    if spot_rt is None:
+        spot_rt = spot_lib.make_runtime(cfg.spot)
+    # The market gets its own PRNG chain so enabling it never perturbs the
+    # execution-noise stream of the workload simulator.
+    spot_state = spot_lib.init(
+        spot_rt, jax.random.PRNGKey(jnp.asarray(seed) + 7919))
+
     cluster = billing_lib.init(cfg.pool)
     # The platform idles at N_min pre-warmed instances (paper: N_min = 10).
-    cluster = billing_lib.scale_to(
-        cluster, jnp.asarray(cfg.ctrl.params.n_min), cfg.ctrl.billing)
+    if cfg.spot.enabled:
+        n0 = jnp.ceil(cfg.ctrl.params.n_min / spot_rt.cores)
+        cluster = billing_lib.scale_to(
+            cluster, n0, cfg.ctrl.billing, price=spot_rt.base_price,
+            bid=spot_rt.bid, itype=spot_rt.itype)
+    else:
+        cluster = billing_lib.scale_to(
+            cluster, jnp.asarray(cfg.ctrl.params.n_min), cfg.ctrl.billing)
     cluster = cluster._replace(
         boot_left=jnp.zeros_like(cluster.boot_left),
         phase=jnp.where(cluster.phase > 0, jnp.int8(billing_lib.ACTIVE),
@@ -205,30 +271,63 @@ def init_state(schedule: wl.Schedule, cfg: SimConfig) -> SimState:
         cluster=cluster,
         s=jnp.zeros((w,)),
         done_acc=jnp.zeros((w,)),
-        key=jax.random.PRNGKey(cfg.seed),
+        key=jax.random.PRNGKey(seed),
         t=jnp.asarray(0),
+        spot=spot_state,
     )
 
 
-def run(schedule: wl.Schedule, cfg: SimConfig) -> SimTrace:
+def scan_run(schedule: wl.Schedule, cfg: SimConfig,
+             seed: jnp.ndarray | int | None = None,
+             spot_rt: spot_lib.SpotRuntime | None = None):
+    """The raw jittable simulation: (final state, per-tick outputs).
+
+    No ``jax.jit`` inside — callers decide the compilation boundary, which
+    lets ``sim.sweep`` vmap this whole function over batched seeds, bids
+    and granularities in a single compile.
+    """
     step = make_step(schedule, cfg)
+    state = init_state(schedule, cfg, seed=seed, spot_rt=spot_rt)
+    return jax.lax.scan(step, state, None, length=cfg.ticks)
 
-    def _run(state):
-        return jax.lax.scan(step, state, None, length=cfg.ticks)
 
-    state = init_state(schedule, cfg)
-    final, ys = jax.jit(_run)(state)
+def cost_at_completion(work_final: WorkloadState, cum_cost: jnp.ndarray
+                       ) -> jnp.ndarray:
+    """$ billed when the last workload completes, jnp-pure (shared by
+    ``total_cost`` and ``sim.sweep``).  A run in which submitted work never
+    finishes has no such endpoint: it is billed to the full horizon, so an
+    incomplete run can never masquerade as a cheap one."""
+    submitted = work_final.t_submit >= 0
+    finished = work_final.t_done >= 0
+    unfinished = jnp.any(submitted & ~finished)
+    t_end = jnp.max(work_final.t_done)
+    idx = jnp.clip(t_end + 1, 0, cum_cost.shape[0] - 1)
+    return jnp.where(unfinished | (t_end < 0), cum_cost[-1], cum_cost[idx])
 
+
+def count_violations(work_final: WorkloadState, schedule: wl.Schedule,
+                     cfg: SimConfig) -> jnp.ndarray:
+    """TTC violations, jnp-pure (shared by ``run`` and ``sim.sweep``)."""
     d_req = jnp.asarray(schedule.d_requested)
     ticks_allowed = jnp.ceil(d_req / cfg.dt)
-    submitted = final.work.t_submit >= 0
-    finished = final.work.t_done >= 0
-    # Confirmed TTC may have been extended (infeasible request); violations
-    # are judged against the *confirmed* deadline, as in the paper's SLA.
-    lateness = (final.work.t_done - final.work.t_submit) - ticks_allowed
-    violations = jnp.sum((submitted & finished & (lateness > 1)) |
-                         (submitted & ~finished))
+    submitted = work_final.t_submit >= 0
+    finished = work_final.t_done >= 0
+    # Judged against the TTC *requested* at submission (with one tick of
+    # grace).  A confirmed-but-extended deadline (infeasible request) is
+    # therefore still counted as a violation of the original ask.
+    lateness = (work_final.t_done - work_final.t_submit) - ticks_allowed
+    return jnp.sum((submitted & finished & (lateness > 1)) |
+                   (submitted & ~finished))
 
+
+def run(schedule: wl.Schedule, cfg: SimConfig,
+        seed: int | None = None,
+        spot_rt: spot_lib.SpotRuntime | None = None) -> SimTrace:
+    final, ys = jax.jit(
+        lambda s: scan_run(schedule, cfg, seed=s, spot_rt=spot_rt)
+    )(cfg.seed if seed is None else seed)
+
+    violations = count_violations(final.work, schedule, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,
                     violations=violations, **{k: ys[k] for k in ys})
 
@@ -238,9 +337,8 @@ def total_cost(trace: SimTrace) -> float:
 
     The paper's Figs. 4-5 track cost over the experiment; the experiment
     ends when all workloads are done (the platform then sheds to N_min and
-    would otherwise keep renewing idle base instances forever).
+    would otherwise keep renewing idle base instances forever).  Incomplete
+    runs bill to the full horizon (see ``cost_at_completion``) — check
+    ``trace.violations`` alongside this number.
     """
-    t_end = int(jnp.max(trace.t_done))
-    if t_end < 0:
-        return float(trace.cum_cost[-1])
-    return float(trace.cum_cost[min(t_end + 1, trace.cum_cost.shape[0] - 1)])
+    return float(cost_at_completion(trace.work_final, trace.cum_cost))

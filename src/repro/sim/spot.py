@@ -1,0 +1,200 @@
+"""JAX-native spot-market dynamics (paper Appendix A, Fig. 6 / Table V).
+
+The paper's empirical findings, as a generative price process:
+
+  * spot price scales ~linearly with the CU count of the instance type;
+  * price *volatility* also grows with CU count — the single-CU m3.medium
+    never exceeded $0.01 over three months, while m4.10xlarge spiked hard;
+  * sparse demand spikes multiply the price several-fold, increasingly
+    often for large instances.
+
+Price model: log-AR(1) around the Table-V base price, advanced one
+monitoring interval per step under ``lax.scan``.  The AR coefficient and
+innovation are rescaled with the step size so the stationary log-price
+distribution is invariant to the monitoring interval, and demand spikes
+are a two-state process — arriving at ``p_spike`` per hour, lasting one
+hour in expectation — so the spiked-time fraction is interval-invariant
+too (at an hourly step it degenerates to the original per-hour Bernoulli
+draw).  An hourly trace and a 1-minute trace therefore agree in marginal
+distribution, which keeps the hourly numpy wrapper in ``sim.market`` and
+the per-tick simulator consistent.
+
+Everything here is pure jnp on fixed shapes: a full price path is one
+``lax.scan``, and every function is ``vmap``-able over ``SpotRuntime`` —
+which is how ``sim.sweep`` batches Monte-Carlo sweeps over seeds × bids ×
+instance granularities in a single jitted call.
+
+Bid semantics (EC2 2015): while spot price ≤ bid you hold the instance and
+pay the *current* spot price per started quantum; the instant price > bid
+the instance is reclaimed (``core.billing.preempt``) and new requests at
+that bid go unfulfilled until the price falls back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Appendix A, Table V (North Virginia, 2015-07-10).
+#                  cores  on_demand   spot
+INSTANCE_TYPES = {
+    "m3.medium":    (1,     0.067,      0.0081),
+    "m3.large":     (2,     0.133,      0.0173),
+    "m3.xlarge":    (4,     0.266,      0.0333),
+    "m3.2xlarge":   (8,     0.532,      0.0660),
+    "m4.4xlarge":   (16,    1.008,      0.1097),
+    "m4.10xlarge":  (40,    2.520,      0.5655),
+}
+INSTANCE_NAMES = tuple(INSTANCE_TYPES)
+
+# Same table as jnp constants, indexable by a *traced* instance-type id —
+# the axis sim.sweep vmaps over.
+CORES_TABLE = jnp.asarray([v[0] for v in INSTANCE_TYPES.values()],
+                          jnp.float32)
+ON_DEMAND_TABLE = jnp.asarray([v[1] for v in INSTANCE_TYPES.values()],
+                              jnp.float32)
+SPOT_BASE_TABLE = jnp.asarray([v[2] for v in INSTANCE_TYPES.values()],
+                              jnp.float32)
+
+BID_POLICIES = ("multiple", "on_demand")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotConfig:
+    """Static knobs of the market process (closed over at trace time)."""
+
+    enabled: bool = False
+    instance: str = "m3.medium"   # fleet instance type (granularity axis)
+    bid_policy: str = "multiple"  # 'multiple' of spot base, or 'on_demand'
+    bid_mult: float = 1.5         # bid = bid_mult × base spot price
+    rho: float = 0.97             # hourly AR(1) coefficient (market.py legacy)
+    vol0: float = 0.01            # hourly log-volatility floor ...
+    vol_scale: float = 0.035      # ... + vol_scale · log2(cores + 1)
+    p_spike_per_core: float = 0.002   # hourly demand-spike probability / core
+    spike_lo: float = 2.0         # spike multiplier ~ U[spike_lo, spike_hi]
+    spike_hi: float = 8.0
+
+    def __post_init__(self):
+        assert self.bid_policy in BID_POLICIES, self.bid_policy
+        assert self.instance in INSTANCE_TYPES, self.instance
+
+
+class SpotRuntime(NamedTuple):
+    """Per-run market constants as traced scalars (the vmap axes)."""
+
+    itype: jnp.ndarray       # () int32 index into the Table-V arrays
+    cores: jnp.ndarray       # () CUs per instance
+    base_price: jnp.ndarray  # () $ / instance-quantum, spot baseline
+    on_demand: jnp.ndarray   # () $ / instance-quantum, on-demand
+    vol: jnp.ndarray         # () hourly log-volatility
+    p_spike: jnp.ndarray     # () hourly spike probability
+    bid: jnp.ndarray         # () $ / instance-quantum the fleet bids
+
+
+class SpotState(NamedTuple):
+    """Market state carried through the simulator scan."""
+
+    x: jnp.ndarray           # () log-deviation of the AR(1)
+    price: jnp.ndarray       # () current $ / instance-quantum
+    spike_mult: jnp.ndarray  # () active demand-spike multiplier (1 = calm)
+    key: jax.Array           # market-private PRNG chain (keeps the
+                             # simulator's execution-noise stream untouched)
+    rt: SpotRuntime
+
+
+def instance_index(instance: str) -> int:
+    if instance not in INSTANCE_TYPES:
+        raise ValueError(f"unknown instance type {instance!r}; "
+                         f"Table V has {INSTANCE_NAMES}")
+    return INSTANCE_NAMES.index(instance)
+
+
+def make_runtime(cfg: SpotConfig,
+                 itype: jnp.ndarray | int | None = None,
+                 bid_mult: jnp.ndarray | float | None = None) -> SpotRuntime:
+    """Resolve the market constants for one run.
+
+    ``itype`` and ``bid_mult`` may be traced scalars — this is the hook
+    ``sim.sweep`` uses to vmap one jitted simulation over instance
+    granularities and bid levels.
+    """
+    if itype is None:
+        itype = instance_index(cfg.instance)
+    itype = jnp.asarray(itype, jnp.int32)
+    cores = CORES_TABLE[itype]
+    base = SPOT_BASE_TABLE[itype]
+    on_demand = ON_DEMAND_TABLE[itype]
+    vol = cfg.vol0 + cfg.vol_scale * jnp.log2(cores + 1.0)
+    p_spike = cfg.p_spike_per_core * cores
+    if cfg.bid_policy == "on_demand":
+        bid = on_demand * jnp.ones_like(base)
+    else:
+        if bid_mult is None:
+            bid_mult = cfg.bid_mult
+        bid = jnp.asarray(bid_mult, jnp.float32) * base
+    return SpotRuntime(itype=itype, cores=cores, base_price=base,
+                       on_demand=on_demand, vol=vol, p_spike=p_spike,
+                       bid=bid)
+
+
+def init(rt: SpotRuntime, key: jax.Array) -> SpotState:
+    """Market at its baseline: zero log-deviation, price = Table-V base."""
+    return SpotState(x=jnp.zeros(()), price=rt.base_price * 1.0,
+                     spike_mult=jnp.ones(()), key=key, rt=rt)
+
+
+def step(state: SpotState, cfg: SpotConfig, dt: float) -> SpotState:
+    """Advance the price one monitoring interval of ``dt`` seconds.
+
+    The hourly AR(1) (rho, vol) is rescaled so the stationary log-price
+    variance vol²/(1-rho²) is preserved at any dt.  Demand spikes are a
+    two-state process: from calm, one arrives with probability p_spike·h;
+    once active it ends with probability h per step (mean duration one
+    hour).  Both the spiked-time fraction and the marginal price
+    distribution are therefore invariant to dt, and at an hourly step the
+    process reduces exactly to the legacy per-hour Bernoulli spike.
+    """
+    key, k_eps, k_enter, k_exit, k_mult = jax.random.split(state.key, 5)
+    rt = state.rt
+    h = dt / 3600.0
+    rho_dt = cfg.rho ** h
+    vol_dt = rt.vol * jnp.sqrt((1.0 - rho_dt ** 2) /
+                               (1.0 - cfg.rho ** 2))
+    x = rho_dt * state.x + vol_dt * jax.random.normal(k_eps)
+
+    in_spike = state.spike_mult > 1.0
+    ends = jax.random.uniform(k_exit) < jnp.minimum(h, 1.0)
+    arrives = jax.random.uniform(k_enter) < jnp.minimum(rt.p_spike * h, 1.0)
+    fresh = jax.random.uniform(k_mult, minval=cfg.spike_lo,
+                               maxval=cfg.spike_hi)
+    # A step that is calm — or whose spike just ended — may see a fresh
+    # arrival, so at h = 1 every hour is an independent Bernoulli(p_spike)
+    # draw, exactly the legacy hourly generator.
+    calm = ~in_spike | ends
+    spike_mult = jnp.where(calm, jnp.where(arrives, fresh, 1.0),
+                           state.spike_mult)
+    price = rt.base_price * jnp.exp(x) * spike_mult
+    return SpotState(x=x, price=price, spike_mult=spike_mult, key=key, rt=rt)
+
+
+def price_trace(rt: SpotRuntime, steps: int, key: jax.Array,
+                cfg: SpotConfig = SpotConfig(), dt: float = 3600.0
+                ) -> jnp.ndarray:
+    """A full (steps,)-shaped price path in one ``lax.scan``.
+
+    vmap over ``rt`` (and/or ``key``) for batched multi-type traces.
+    """
+    def body(s, _):
+        s = step(s, cfg, dt)
+        return s, s.price
+
+    _, prices = jax.lax.scan(body, init(rt, key), None, length=steps)
+    return prices
+
+
+def preemptions(trace: jnp.ndarray, bid: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask of steps in which a bid at ``bid`` is outbid."""
+    return trace > bid

@@ -1,0 +1,122 @@
+"""Vmapped Monte-Carlo experiment harness over the spot-market simulator.
+
+The entire simulation — market process, billing, preemption, controller,
+workload execution — is one pure ``lax.scan`` (``runner.scan_run``), so a
+cost sweep over seeds × bid levels × instance granularities is a single
+``jax.jit(jax.vmap(...))`` call: one compile, one device dispatch, every
+grid point in parallel.  A 3 × 5 × 6 grid of full 130-tick experiments
+costs about as much wall-clock as three sequential runs.
+
+Axes:
+  * ``seed``      — Monte-Carlo replication (market + execution noise);
+  * ``bid_mult``  — bid as a multiple of the instance's base spot price
+                    (ignored under the ``on_demand`` bid policy);
+  * ``itype``     — instance granularity (Appendix A Table V): many
+                    m3.medium vs few m4.10xlarge for the same CU target.
+
+Summaries are per-run scalars, so the vmapped output is a struct of
+(B,)-shaped arrays — ready for the preemption/cost frontier plots in
+``benchmarks.bench_spot``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import runner, spot
+from . import workloads as wl
+
+
+class SweepAxes(NamedTuple):
+    """The flattened experiment grid (B = len of every field)."""
+
+    seed: jnp.ndarray      # (B,) int32
+    bid_mult: jnp.ndarray  # (B,) float32
+    itype: jnp.ndarray     # (B,) int32 index into the Table-V arrays
+
+
+class RunSummary(NamedTuple):
+    """Per-run scalars (each (B,)-shaped after the vmap)."""
+
+    cost: jnp.ndarray          # $ at last completion; full horizon if
+                               # submitted work never finished
+    cost_horizon: jnp.ndarray  # $ at the end of the simulation window
+    violations: jnp.ndarray    # TTC violations (incl. unfinished workloads)
+    preemptions: jnp.ndarray   # instances reclaimed by the market
+    finished: jnp.ndarray      # workloads completed
+    max_committed: jnp.ndarray # peak control-plane fleet, in CUs
+    mean_price: jnp.ndarray    # mean $/quantum the market charged
+    max_price: jnp.ndarray     # worst $/quantum seen
+
+
+def summarize(final, ys, schedule: wl.Schedule,
+              cfg: runner.SimConfig) -> RunSummary:
+    """Collapse one run's scan outputs to scalars, jnp-pure (vmappable)."""
+    work = final.work
+    finished = work.t_done >= 0
+    return RunSummary(
+        cost=runner.cost_at_completion(work, ys["cum_cost"]),
+        cost_horizon=ys["cum_cost"][-1],
+        violations=runner.count_violations(work, schedule, cfg),
+        preemptions=ys["n_preempted"][-1],
+        finished=jnp.sum(finished.astype(jnp.int32)),
+        max_committed=jnp.max(ys["n_committed"]),
+        mean_price=jnp.mean(ys["spot_price"]),
+        max_price=jnp.max(ys["spot_price"]),
+    )
+
+
+def make_axes(seeds: Sequence[int],
+              bid_mults: Sequence[float],
+              instances: Sequence[str | int] = ("m3.medium",)) -> SweepAxes:
+    """Cartesian-product grid, flattened to (B,) arrays."""
+    itypes = [spot.instance_index(i) if isinstance(i, str) else int(i)
+              for i in instances]
+    s, b, i = np.meshgrid(np.asarray(seeds), np.asarray(bid_mults, float),
+                          np.asarray(itypes), indexing="ij")
+    return SweepAxes(seed=jnp.asarray(s.ravel(), jnp.int32),
+                     bid_mult=jnp.asarray(b.ravel(), jnp.float32),
+                     itype=jnp.asarray(i.ravel(), jnp.int32))
+
+
+def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
+              axes: SweepAxes) -> RunSummary:
+    """Every grid point as one jitted ``vmap`` of the full simulation.
+
+    The *axes* choose each run's instance type and bid multiple;
+    ``cfg.spot.instance``/``bid_mult`` are not consulted (they only apply
+    to single, non-swept runs)."""
+    assert cfg.spot.enabled, "run_sweep needs SimConfig.spot.enabled=True"
+    # Guard a silent trap: a config that names a non-default instance while
+    # the axes (which win) never visit it almost certainly means make_axes
+    # was left at its m3.medium default.
+    cfg_itype = spot.instance_index(cfg.spot.instance)
+    if cfg_itype != 0 and not np.any(np.asarray(axes.itype) == cfg_itype):
+        raise ValueError(
+            f"SpotConfig.instance={cfg.spot.instance!r} never appears in "
+            "the sweep axes, which override the config — pass "
+            "instances=[...] to make_axes")
+
+    def one(seed, bid_mult, itype):
+        rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult)
+        final, ys = runner.scan_run(schedule, cfg, seed=seed, spot_rt=rt)
+        return summarize(final, ys, schedule, cfg)
+
+    return jax.jit(jax.vmap(one))(axes.seed, axes.bid_mult, axes.itype)
+
+
+def run_single(schedule: wl.Schedule, cfg: runner.SimConfig,
+               seed: int, bid_mult: float,
+               instance: str | int = "m3.medium") -> RunSummary:
+    """One grid point as a standalone jitted run — the reference the
+    vmapped sweep is tested against (and a handy debug entry point)."""
+    itype = (spot.instance_index(instance) if isinstance(instance, str)
+             else int(instance))
+    rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult)
+    final, ys = jax.jit(
+        lambda s: runner.scan_run(schedule, cfg, seed=s, spot_rt=rt))(seed)
+    return summarize(final, ys, schedule, cfg)

@@ -1,0 +1,42 @@
+"""Optional-``hypothesis`` shim.
+
+The property tests use ``hypothesis`` when it is installed; without it the
+suite must still collect and run green (the plain example-based tests carry
+the load).  Importing ``given``/``settings``/``strategies`` from here gives
+each test module that behaviour: with hypothesis present these are the real
+objects, otherwise ``@given(...)`` turns the test into a skip and the
+strategy expressions evaluate to inert placeholders.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies:
+        """Absorbs any strategy construction (st.floats(...), st.lists(...))
+        at module-import time; the values are never drawn because ``given``
+        skips the test."""
+
+        def __getattr__(self, _name):
+            def _placeholder(*_args, **_kwargs):
+                return None
+            return _placeholder
+
+    strategies = _Strategies()

@@ -5,7 +5,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st
 
 from repro.core import billing
 from repro.core.types import BillingParams

@@ -1,0 +1,200 @@
+"""Spot-market subsystem: price process, preemptive billing, vmapped sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import billing
+from repro.core.types import BillingParams, ControlParams
+from repro.core.controller import ControllerConfig
+from repro.sim import (SimConfig, SpotConfig, make_axes, market,
+                       paper_schedule, run, run_single, run_sweep, spot)
+
+PARAMS = ControlParams(monitor_dt=300.0)
+BILL = BillingParams(terminate="immediate")
+
+
+def _spot_cfg(**kw):
+    return SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+        ticks=130, spot=SpotConfig(enabled=True, **kw))
+
+
+# ---------------------------------------------------------------- process --
+
+def test_price_trace_constant_without_noise():
+    cfg = SpotConfig(vol0=0.0, vol_scale=0.0, p_spike_per_core=0.0)
+    rt = spot.make_runtime(cfg)
+    tr = spot.price_trace(rt, 24, jax.random.PRNGKey(0), cfg)
+    np.testing.assert_allclose(np.asarray(tr),
+                               market.INSTANCE_TYPES["m3.medium"][2],
+                               rtol=1e-6)
+
+
+def test_runtime_resolves_table_v():
+    rt = spot.make_runtime(SpotConfig(instance="m4.10xlarge"))
+    cores, on_demand, base = market.INSTANCE_TYPES["m4.10xlarge"]
+    assert float(rt.cores) == cores
+    assert float(rt.on_demand) == pytest.approx(on_demand)
+    assert float(rt.base_price) == pytest.approx(base)
+    assert float(rt.bid) == pytest.approx(1.5 * base)
+
+
+def test_on_demand_bid_policy():
+    rt = spot.make_runtime(SpotConfig(bid_policy="on_demand"))
+    assert float(rt.bid) == pytest.approx(
+        market.INSTANCE_TYPES["m3.medium"][1])
+
+
+def test_trace_preemption_mask_monotone_in_bid():
+    """For a fixed price path, raising the bid can only shrink the set of
+    outbid steps."""
+    rt = spot.make_runtime(SpotConfig(instance="m4.10xlarge"))
+    tr = spot.price_trace(rt, 500, jax.random.PRNGKey(3))
+    base = float(rt.base_price)
+    counts = [int(spot.preemptions(tr, b * base).sum())
+              for b in (0.9, 1.0, 1.2, 1.5, 3.0, 10.0)]
+    assert counts == sorted(counts, reverse=True)
+    assert counts[0] > 0
+
+
+def test_market_wrapper_matches_jax_process():
+    """ft/failures' numpy facade is the same generator, materialised."""
+    tr = market.spot_trace("m3.large", 48, seed=7)
+    assert tr.shape == (48,) and (tr > 0).all()
+    np.testing.assert_array_equal(tr, market.spot_trace("m3.large", 48, 7))
+    assert market.preemptions(tr, np.inf).sum() == 0
+    assert market.preemptions(tr, 0.0).sum() == 48
+
+
+# ---------------------------------------------------------------- billing --
+
+def test_spot_cost_accounting_hand_trace():
+    """Start, renew and preempt at known prices; compare $ by hand."""
+    bp = BillingParams(boot_delay=0.0, terminate="immediate")
+    c = billing.init(4)
+    # Start 2 instances at $0.010/quantum each.
+    c = billing.scale_to(c, jnp.asarray(2.0), bp, price=0.010, bid=0.012)
+    assert float(c.cum_cost) == pytest.approx(0.020)
+    # Cross one quantum boundary while the price sits at $0.015: both renew.
+    c = billing.advance(c, bp.quantum + 1.0, bp, price=0.015)
+    assert float(c.cum_cost) == pytest.approx(0.020 + 2 * 0.015)
+    # Market clears above the recorded bid: both slots are taken, no charge,
+    # no refund for the just-renewed quanta.
+    c, n = billing.preempt(c, jnp.asarray(0.013))
+    assert float(n) == 2 and float(c.n_preempt) == 2
+    assert float(billing.capacity(c)) == 0
+    assert float(c.cum_cost) == pytest.approx(0.020 + 2 * 0.015)
+
+
+def test_preempt_spares_bids_above_price():
+    bp = BillingParams(boot_delay=0.0)
+    c = billing.init(4)
+    c = billing.scale_to(c, jnp.asarray(3.0), bp, price=0.01, bid=0.02)
+    c, n = billing.preempt(c, jnp.asarray(0.015))
+    assert float(n) == 0 and float(billing.committed(c)) == 3
+
+
+def test_outbid_requests_not_fulfilled():
+    bp = BillingParams(boot_delay=0.0)
+    c = billing.init(4)
+    c = billing.scale_to(c, jnp.asarray(3.0), bp, price=0.03, bid=0.02,
+                         allow_start=jnp.asarray(False))
+    assert float(billing.committed(c)) == 0
+    assert float(c.cum_cost) == 0.0
+
+
+def test_cores_scale_cu_accounting():
+    bp = BillingParams(boot_delay=0.0)
+    c = billing.scale_to(billing.init(4), jnp.asarray(2.0), bp)
+    c = billing.advance(c, 1.0, bp)
+    assert float(billing.capacity(c, 40.0)) == 80.0
+    assert float(billing.usable(c, 40.0)) == 80.0
+
+
+# ------------------------------------------------------------- simulation --
+
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+
+
+def test_sim_outage_monotone_and_low_bid_preempts():
+    """End-to-end monotonicity: the market's price path depends only on the
+    seed, so the number of ticks the fleet is *outbid* can only shrink as
+    the bid rises.  (Preemption *event* counts are not per-seed monotone:
+    a rock-bottom bid annihilates the fleet at the first spike and an empty
+    fleet has nothing left to preempt — so the guaranteed quantity is
+    outage time, with event counts compared at the bid extremes.)"""
+    cfg = _spot_cfg()
+    bids = [1.02, 1.5, 8.0]
+    base = market.INSTANCE_TYPES["m3.medium"][2]
+    for seed in (0, 1):
+        outages = []
+        for b in bids:
+            rt = spot.make_runtime(cfg.spot, bid_mult=b)
+            tr = run(SCHED, cfg, seed=seed, spot_rt=rt)
+            outages.append(int((np.asarray(tr.spot_price) > b * base).sum()))
+        assert outages == sorted(outages, reverse=True)
+    axes = make_axes(seeds=[0, 1, 2, 3], bid_mults=bids)
+    s = run_sweep(SCHED, cfg, axes)
+    pre = np.asarray(s.preemptions).reshape(4, 3)
+    assert pre[:, 0].sum() > 0             # lowest bid actually gets hit
+    assert pre[:, 0].sum() > pre[:, -1].sum()
+    assert pre[:, -1].sum() == 0           # 8x base is never outbid here
+
+
+def test_sim_completes_despite_preemptions():
+    """AIMD re-grows the fleet after market reclamations: the full suite
+    still finishes inside its SLA at a bid barely above base price."""
+    r = run_single(SCHED, _spot_cfg(), seed=3, bid_mult=1.02)
+    assert float(r.preemptions) > 0
+    assert int(r.finished) == SCHED.n
+    assert int(r.violations) == 0
+
+
+def test_sim_hopeless_bid_reads_as_broken_not_cheap():
+    """A bid the market immediately clears above kills the fleet for the
+    spike's whole duration; the run must surface that as violations and a
+    full-horizon bill, not as a cheap success (total_cost satellite fix)."""
+    r = run_single(SCHED, _spot_cfg(), seed=0, bid_mult=0.5)
+    assert int(r.finished) < SCHED.n
+    assert int(r.violations) > 0
+    assert float(r.cost) == pytest.approx(float(r.cost_horizon))
+
+
+def test_vmapped_sweep_equals_python_loop():
+    """One jitted vmap over the grid == looping single jitted runs."""
+    cfg = _spot_cfg()
+    seeds, bids = [0, 1], [1.02, 2.0]
+    axes = make_axes(seeds=seeds, bid_mults=bids)
+    batched = run_sweep(SCHED, cfg, axes)
+    i = 0
+    for seed in seeds:
+        for bid in bids:
+            single = run_single(SCHED, cfg, seed=seed, bid_mult=bid)
+            for field in single._fields:
+                np.testing.assert_allclose(
+                    np.asarray(getattr(batched, field))[i],
+                    np.asarray(getattr(single, field)),
+                    rtol=1e-5, err_msg=f"{field} @ seed={seed} bid={bid}")
+            i += 1
+
+
+def test_spot_disabled_path_never_preempts():
+    cfg = SimConfig(ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+                    ticks=130)
+    tr = run(SCHED, cfg)
+    assert float(tr.n_preempted[-1]) == 0.0
+    np.testing.assert_allclose(np.asarray(tr.spot_price),
+                               BILL.price_per_quantum, rtol=1e-6)
+
+
+def test_granularity_large_instances_cost_more():
+    """Appendix A Table V: per-CU spot price and volatility grow with
+    instance size, so coarse fleets are strictly worse on this schedule."""
+    cfg = _spot_cfg(bid_policy="on_demand")
+    axes = make_axes(seeds=[0], bid_mults=[1.5],
+                     instances=["m3.medium", "m4.10xlarge"])
+    s = run_sweep(SCHED, cfg, axes)
+    cost = np.asarray(s.cost)
+    assert cost[1] > 1.5 * cost[0]
