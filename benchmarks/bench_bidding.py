@@ -1,0 +1,296 @@
+"""Dynamic-bidding + mixed-granularity fleet benchmarks (policy frontier).
+
+The paper's spot experiments (Appendix A) fix one bid and one instance type
+per run.  This benchmark treats both as first-class axes on a *correlated*
+multi-type market (all Table-V types co-move through a shared factor), in
+two single ``jax.jit(jax.vmap(...))`` calls over full simulations:
+
+  * policy frontier — seeds x bid multiples x bid policies on a spiky
+    m3.xlarge market.  Static bids face the classic dilemma: bid low and
+    lose the fleet to drift/spikes (deadline violations), or bid high and
+    renew quanta at spiked prices.  The TTC-aware and market-aware (EMA)
+    policies resolve it state-dependently, and the acceptance check
+    requires one of them to reach the best static bid's violation level at
+    equal or lower cost.
+  * mix frontier — the same CU demand served by a fine fleet (m3.medium),
+    a coarse fleet (m4.10xlarge), and a heterogeneous fleet over all six
+    types in which every acquisition picks the cheapest-per-CU type the
+    market currently sells under our bid.
+
+Also re-runs the paper-headline AIMD-vs-Reactive comparison (via
+``bench_spot``) so one machine-readable artifact carries the whole story:
+``results/BENCH_spot.json``, the file the CI benchmark-regression gate
+(``benchmarks/check_bench_regression.py``) diffs against the committed
+baseline in ``benchmarks/baselines/``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_bidding [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import SimConfig, SpotConfig, make_axes, paper_schedule, run_sweep
+
+try:  # package-relative when run via ``-m benchmarks...``; standalone too
+    from . import bench_spot
+except ImportError:  # pragma: no cover
+    import bench_spot
+
+SCHEMA_VERSION = 1
+
+# A market where the bid actually matters: mid-size type (real volatility),
+# frequent multi-hour spikes (holding through one renews several quanta at
+# the spiked price), types coupled through the default shared factor.
+MARKET = dict(
+    instance="m3.xlarge",
+    p_spike_per_core=0.02,
+    spike_hours=3.0,
+    ema_alpha=0.15,
+)
+POLICIES = ("multiple", "ttc", "ema", "on_demand")
+STATIC_MULTS = (1.02, 1.1, 1.2, 1.5, 2.5, 4.0, 8.0)
+SMOKE_MULTS = (1.02, 1.5, 2.5, 8.0)
+MIXES = {
+    "fine": ("m3.medium",),
+    "coarse": ("m4.10xlarge",),
+    "mixed-all": (
+        "m3.medium",
+        "m3.large",
+        "m3.xlarge",
+        "m3.2xlarge",
+        "m4.4xlarge",
+        "m4.10xlarge",
+    ),
+}
+TICKS = 130
+MONITOR_DT = 300.0
+
+
+def _cfg(policy: str = "aimd", **spot_kw) -> SimConfig:
+    params = ControlParams(monitor_dt=MONITOR_DT)
+    return SimConfig(
+        ctrl=ControllerConfig(
+            policy=policy,
+            params=params,
+            billing=BillingParams(terminate="immediate"),
+        ),
+        ticks=TICKS,
+        spot=SpotConfig(enabled=True, **{**MARKET, **spot_kw}),
+    )
+
+
+def _lex_best(cost: np.ndarray, viol: np.ndarray) -> int:
+    """Index of the (violations, cost)-lexicographically best column."""
+    order = sorted(range(cost.shape[0]), key=lambda j: (viol[j], cost[j]))
+    return order[0]
+
+
+def run_policy_frontier(seeds, bid_mults) -> dict:
+    """seeds x bid multiples x bid policies, one jitted vmap."""
+    sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+    cfg = _cfg()
+    axes = make_axes(
+        seeds=list(seeds),
+        bid_mults=list(bid_mults),
+        instances=[MARKET["instance"]],
+        policies=list(POLICIES),
+    )
+    s = run_sweep(sched, cfg, axes)
+    shape = (len(seeds), len(bid_mults), len(POLICIES))
+    out = {
+        "bid_mults": list(bid_mults),
+        "cost": np.asarray(s.cost).reshape(shape),
+        "violations": np.asarray(s.violations).reshape(shape),
+        "preemptions": np.asarray(s.preemptions).reshape(shape),
+    }
+
+    # Reactive scaling at the never-preempted bid: the cost-delta reference.
+    r = run_sweep(
+        sched,
+        _cfg(policy="reactive", bid_policy="on_demand"),
+        make_axes(seeds=list(seeds), bid_mults=[1.0], instances=[MARKET["instance"]]),
+    )
+    out["reactive_cost"] = float(np.mean(np.asarray(r.cost)))
+    out["reactive_violations"] = int(np.sum(np.asarray(r.violations)))
+    return out
+
+
+def run_mix_frontier(seeds) -> dict:
+    """Fleet granularity on the correlated market, never-preempted bid."""
+    sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+    cfg = _cfg(bid_policy="on_demand", instance="m3.medium")
+    axes = make_axes(
+        seeds=list(seeds),
+        bid_mults=[1.5],
+        instances=list(MIXES.values()),
+        policies=["on_demand"],
+    )
+    s = run_sweep(sched, cfg, axes)
+    shape = (len(seeds), len(MIXES))
+    return {
+        "names": list(MIXES),
+        "cost": np.asarray(s.cost).reshape(shape),
+        "violations": np.asarray(s.violations).reshape(shape),
+        "preemptions": np.asarray(s.preemptions).reshape(shape),
+    }
+
+
+def summarize_policies(front: dict) -> dict:
+    """Per-policy lexicographic-best point + cost delta vs Reactive."""
+    policies = {}
+    for k, name in enumerate(POLICIES):
+        cost = front["cost"][:, :, k].mean(axis=0)
+        viol = front["violations"][:, :, k].sum(axis=0)
+        pre = front["preemptions"][:, :, k].sum(axis=0)
+        j = _lex_best(cost, viol)
+        policies[name] = {
+            "best_bid_mult": float(front["bid_mults"][j]),
+            "cost": float(cost[j]),
+            "violations": int(viol[j]),
+            "preemptions": float(pre[j]),
+            "delta_vs_reactive_pct": float(
+                100.0 * (front["reactive_cost"] - cost[j]) / front["reactive_cost"]
+            ),
+        }
+    return policies
+
+
+def acceptance(policies: dict) -> dict:
+    """ISSUE 2 criterion: a dynamic policy matches the best static bid's
+    violation level at equal or lower total billing cost."""
+    static = policies["multiple"]
+    dyn_name = min(
+        ("ttc", "ema"),
+        key=lambda n: (policies[n]["violations"], policies[n]["cost"]),
+    )
+    dyn = policies[dyn_name]
+    ok = dyn["violations"] <= static["violations"] and dyn["cost"] <= static["cost"]
+    return {
+        "dynamic_beats_static": bool(ok),
+        "best_dynamic_policy": dyn_name,
+        "best_static": static,
+        "best_dynamic": dyn,
+    }
+
+
+def write_outputs(report: dict, front: dict, outdir: str = "results") -> None:
+    os.makedirs(outdir, exist_ok=True)
+    with open(os.path.join(outdir, "bidding_frontier.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["policy", "bid_mult", "mean_cost", "violations", "preemptions"])
+        for k, name in enumerate(POLICIES):
+            for j, mult in enumerate(front["bid_mults"]):
+                w.writerow(
+                    [
+                        name,
+                        mult,
+                        f"{front['cost'][:, j, k].mean():.4f}",
+                        int(front["violations"][:, j, k].sum()),
+                        f"{front['preemptions'][:, j, k].sum():.0f}",
+                    ]
+                )
+    with open(os.path.join(outdir, "BENCH_spot.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def main(emit, smoke: bool = False) -> dict:
+    seeds = tuple(range(6))
+    bid_mults = SMOKE_MULTS if smoke else STATIC_MULTS
+
+    hl = bench_spot.run_headline(seeds=(0, 1) if smoke else (0, 1, 2))
+    emit("bidding_headline_saving_pct", hl["saving_pct"], "target>=27")
+
+    front = run_policy_frontier(seeds, bid_mults)
+    policies = summarize_policies(front)
+    for name, p in policies.items():
+        emit(
+            f"bidding_{name}_best_cost",
+            p["cost"],
+            f"mult={p['best_bid_mult']};viol={p['violations']};"
+            f"delta_vs_reactive={p['delta_vs_reactive_pct']:.1f}%",
+        )
+
+    mixes = run_mix_frontier(seeds)
+    mix_report = {}
+    for j, name in enumerate(mixes["names"]):
+        mix_report[name] = {
+            "cost": float(mixes["cost"][:, j].mean()),
+            "violations": int(mixes["violations"][:, j].sum()),
+            "preemptions": float(mixes["preemptions"][:, j].sum()),
+        }
+        emit(
+            f"bidding_mix_{name}_cost",
+            mix_report[name]["cost"],
+            f"viol={mix_report[name]['violations']};"
+            f"preempt={mix_report[name]['preemptions']:.0f}",
+        )
+
+    acc = acceptance(policies)
+    emit(
+        "bidding_acceptance_dynamic_beats_static",
+        float(acc["dynamic_beats_static"]),
+        "bool",
+    )
+
+    report = {
+        "schema_version": SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "config": {
+            "market": dict(MARKET),
+            "ticks": TICKS,
+            "monitor_dt": MONITOR_DT,
+            "seeds": list(seeds),
+            "bid_mults": list(bid_mults),
+        },
+        "headline": {
+            "aimd_cost": hl["aimd"]["cost"],
+            "reactive_cost": hl["reactive"]["cost"],
+            "saving_pct": hl["saving_pct"],
+            "aimd_violations": hl["aimd"]["violations"],
+            "reactive_violations": hl["reactive"]["violations"],
+        },
+        "reactive_ref": {
+            "cost": front["reactive_cost"],
+            "violations": front["reactive_violations"],
+        },
+        "policies": policies,
+        "mixes": mix_report,
+        "acceptance": acc,
+    }
+    write_outputs(report, front)
+
+    if not acc["dynamic_beats_static"]:
+        raise SystemExit(
+            "bidding acceptance not met: best dynamic "
+            f"{acc['best_dynamic']} vs best static {acc['best_static']}"
+        )
+    return report
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced bid grid for CI; same acceptance checks",
+    )
+    args = ap.parse_args()
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,value,derived")
+    main(emit, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -10,8 +10,6 @@ import os
 
 import numpy as np
 
-import dataclasses
-
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
 from repro.sim import SimConfig, paper_schedule, run

@@ -9,9 +9,7 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.flash_attention.ops import gqa_reference
 from repro.kernels.kalman_update.ref import kalman_fused_ref
 from repro.models.attention import AttnSpec, flash_attention
 from repro.models.ssm import ssd_chunked

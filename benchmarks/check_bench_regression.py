@@ -1,0 +1,118 @@
+"""CI benchmark-regression gate for the spot/bidding benchmarks.
+
+Compares the ``results/BENCH_spot.json`` a CI run just produced (via
+``bench_bidding --smoke``) against the committed baseline in
+``benchmarks/baselines/BENCH_spot.json`` and fails the job when the
+trajectory regresses:
+
+  * the AIMD-vs-Reactive headline saving drops below the paper's 27%
+    floor (hard threshold, independent of the baseline);
+  * any tracked violation count grows beyond its baseline value
+    (headline AIMD, per-policy best points, per-mix points);
+  * the dynamic-beats-static acceptance flag flips to false;
+  * a best-policy cost inflates beyond ``COST_TOLERANCE`` x baseline
+    (loose on purpose: CI floats drift, regressions explode).
+
+Exit code 0 = gate passed.  Anything else fails the job; the JSON is
+uploaded as an artifact either way so the trajectory stays inspectable.
+
+CLI:  python benchmarks/check_bench_regression.py \
+          results/BENCH_spot.json benchmarks/baselines/BENCH_spot.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SAVING_FLOOR_PCT = 27.0
+COST_TOLERANCE = 1.5
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    """Return a list of human-readable gate failures (empty = pass)."""
+    errors: list[str] = []
+
+    if current.get("schema_version") != baseline.get("schema_version"):
+        errors.append(
+            f"schema_version mismatch: current {current.get('schema_version')} "
+            f"vs baseline {baseline.get('schema_version')}"
+        )
+        return errors
+    if bool(current.get("smoke")) != bool(baseline.get("smoke")):
+        errors.append(
+            "smoke flag mismatch: gate must compare like with like "
+            f"(current smoke={current.get('smoke')}, "
+            f"baseline smoke={baseline.get('smoke')})"
+        )
+        return errors
+
+    saving = current["headline"]["saving_pct"]
+    if saving < SAVING_FLOOR_PCT:
+        errors.append(
+            f"headline AIMD-vs-Reactive saving {saving:.1f}% fell below the "
+            f"paper's {SAVING_FLOOR_PCT}% floor"
+        )
+
+    cur_hl_viol = current["headline"]["aimd_violations"]
+    base_hl_viol = baseline["headline"]["aimd_violations"]
+    if cur_hl_viol > base_hl_viol:
+        errors.append(
+            f"headline AIMD violations grew: {cur_hl_viol} > baseline {base_hl_viol}"
+        )
+
+    if not current["acceptance"]["dynamic_beats_static"]:
+        errors.append(
+            "acceptance flag dynamic_beats_static is false: no dynamic bid "
+            "policy matches the best static bid"
+        )
+
+    for section in ("policies", "mixes"):
+        for name, base_entry in baseline.get(section, {}).items():
+            cur_entry = current.get(section, {}).get(name)
+            if cur_entry is None:
+                errors.append(f"{section}[{name}] missing from current results")
+                continue
+            if cur_entry["violations"] > base_entry["violations"]:
+                errors.append(
+                    f"{section}[{name}] violations grew: "
+                    f"{cur_entry['violations']} > baseline {base_entry['violations']}"
+                )
+            if cur_entry["cost"] > COST_TOLERANCE * base_entry["cost"]:
+                errors.append(
+                    f"{section}[{name}] cost {cur_entry['cost']:.4f} exceeds "
+                    f"{COST_TOLERANCE}x baseline {base_entry['cost']:.4f}"
+                )
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="BENCH_spot.json produced by this run")
+    ap.add_argument("baseline", help="committed baseline BENCH_spot.json")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    errors = check(current, baseline)
+    saving = current.get("headline", {}).get("saving_pct", float("nan"))
+    accepted = current.get("acceptance", {}).get("dynamic_beats_static")
+    print(
+        f"bench gate: saving={saving:.1f}% "
+        f"(floor {SAVING_FLOOR_PCT}%), "
+        f"dynamic_beats_static={accepted}"
+    )
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print("bench gate passed: no benchmark regressions vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,6 +48,27 @@ def main() -> None:
     print("\nCSVs written to results/spot_bid_sweep.csv / "
           "results/spot_granularity.csv")
 
+    from benchmarks import bench_bidding
+
+    print("\n== Dynamic bid policies on the correlated multi-type market ==")
+    print("   (spiky m3.xlarge; static bids must pick cheap-but-violating")
+    print("    or safe-but-expensive — state-dependent bids get both)")
+    front = bench_bidding.run_policy_frontier(
+        seeds=range(6), bid_mults=bench_bidding.SMOKE_MULTS)
+    policies = bench_bidding.summarize_policies(front)
+    print(f"  {'policy':>10s} {'best bid':>9s} {'mean $':>8s} {'viol':>5s} "
+          f"{'vs Reactive':>12s}")
+    for name, p in policies.items():
+        print(f"  {name:>10s} {p['best_bid_mult']:>9.2f} {p['cost']:>8.3f} "
+              f"{p['violations']:>5d} {p['delta_vs_reactive_pct']:>11.1f}%")
+
+    print("\n== Fleet mixes (cheapest-per-CU acquisition, on-demand bid) ==")
+    mixes = bench_bidding.run_mix_frontier(seeds=range(6))
+    for j, name in enumerate(mixes["names"]):
+        print(f"  {name:>10s} ${mixes['cost'][:, j].mean():.3f}  "
+              f"violations={int(mixes['violations'][:, j].sum())}  "
+              f"preemptions={mixes['preemptions'][:, j].sum():.0f}")
+
 
 if __name__ == "__main__":
     main()

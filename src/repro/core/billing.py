@@ -5,7 +5,10 @@ lifecycle is driven by three pure functions:
 
   * ``advance``   — one monitoring interval of wall-clock: boot progress and
                     billing-quantum renewal (a_{i,j} countdown, eq. 3).
-  * ``scale_to``  — start/drain instances to hit a target count.
+  * ``scale_to``  — start/drain instances to hit a target count (or, for
+                    mixed-granularity spot fleets, a target *CU* capacity:
+                    pass per-slot ``cores`` weights and the chosen start
+                    type; see the function docstring).
   * ``preempt``   — spot-market reclamation: slots whose recorded bid is
                     below the current spot price are lost immediately.
 
@@ -146,8 +149,19 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
              price: jnp.ndarray | None = None,
              bid: jnp.ndarray | None = None,
              itype: jnp.ndarray | None = None,
-             allow_start: jnp.ndarray | bool = True) -> ClusterState:
-    """Drive the control-plane fleet size toward ``n_target`` instances.
+             allow_start: jnp.ndarray | bool = True,
+             cores: jnp.ndarray | None = None) -> ClusterState:
+    """Drive the control-plane fleet size toward ``n_target``.
+
+    ``n_target`` is an instance count for homogeneous fleets (``cores``
+    omitted).  For heterogeneous spot fleets, pass ``cores`` — per-slot CU
+    weights, with OFF slots carrying the CUs of the type a new start would
+    use (the caller's ``itype``) — and ``n_target`` becomes a *CU* target:
+    growth starts just enough instances of the chosen type to cover the
+    missing CUs, shrink sheds only whole instances that fit within the CU
+    excess (the fleet stays at or above its target, as under the
+    instance-count ``ceil`` semantics — a sub-instance excess never
+    forfeits a paid coarse instance).
 
     Growth: cancel drains first (the capacity is already paid for), then
     start OFF slots, paying a full quantum each at ``price`` ($/quantum;
@@ -161,24 +175,25 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
     if price is None:
         price = billing.price_per_quantum
     pool = cluster.phase.shape[0]
+    slot_cores = (jnp.ones((pool,), jnp.float32) if cores is None
+                  else jnp.broadcast_to(jnp.asarray(cores, jnp.float32),
+                                        (pool,)))
     n_target = jnp.round(n_target)
-    n_live = committed(cluster)
+    n_live = committed(cluster, slot_cores)
     delta = n_target - n_live
 
     # ---- grow: undrain cheapest-to-keep first (largest remaining time) ----
     n_grow = jnp.maximum(delta, 0.0)
     drain_key = jnp.where(cluster.draining, -cluster.a, jnp.inf)
-    undrain_rank = _rank(drain_key)
-    do_undrain = cluster.draining & (undrain_rank <= n_grow)
-    n_undrained = jnp.sum(do_undrain.astype(jnp.float32))
+    do_undrain = cluster.draining & _take(drain_key, slot_cores, n_grow)
+    n_undrained = jnp.sum(jnp.where(do_undrain, slot_cores, 0.0))
     draining = cluster.draining & ~do_undrain
 
     n_start = jnp.maximum(n_grow - n_undrained, 0.0)
     n_start = jnp.where(jnp.asarray(allow_start), n_start, 0.0)
     off = cluster.phase == OFF
-    start_rank = _rank(jnp.where(off, jnp.arange(pool, dtype=jnp.float32),
-                                 jnp.inf))
-    do_start = off & (start_rank <= n_start)
+    start_key = jnp.where(off, jnp.arange(pool, dtype=jnp.float32), jnp.inf)
+    do_start = off & _take(start_key, slot_cores, n_start)
 
     phase = jnp.where(do_start, jnp.int8(BOOTING), cluster.phase)
     a = jnp.where(do_start, billing.quantum, cluster.a)
@@ -206,8 +221,7 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
     shrink_key = jnp.where(live & (phase == ACTIVE), a,
                            jnp.where(live, a + 2.0 * billing.quantum,
                                      jnp.inf))
-    shrink_rank = _rank(shrink_key)
-    do_shed = live & (shrink_rank <= n_shrink)
+    do_shed = live & _take(shrink_key, slot_cores, n_shrink, cover=False)
 
     if billing.terminate == "immediate":
         # Paper semantics: release now, forfeit the rest of the quantum.
@@ -224,12 +238,27 @@ def scale_to(cluster: ClusterState, n_target: jnp.ndarray,
                             bid=bid_arr, itype=itype_arr)
 
 
-def _rank(key: jnp.ndarray) -> jnp.ndarray:
-    """1-based rank of each element under ascending sort of ``key``."""
+def _take(key: jnp.ndarray, weights: jnp.ndarray, budget: jnp.ndarray,
+          cover: bool = True) -> jnp.ndarray:
+    """Mark slots in ascending-``key`` order against a weight ``budget``.
+
+    ``cover=True`` (growth): take while the weight marked *before* each
+    slot stays below the budget — just enough slots to cover it,
+    overshooting by at most one (the CU analogue of ``ceil``).
+    ``cover=False`` (shrink): take only slots that fit *entirely* within
+    the budget, so the fleet never dips below its target — a sub-instance
+    CU excess must not shed (and forfeit) a whole coarse instance.
+    With unit weights and an integer budget both modes are exactly
+    ``rank ≤ budget``.  Callers mask the result: slots keyed ``inf`` sort
+    last but can still be marked once the budget exceeds the eligible
+    weight.
+    """
     pool = key.shape[0]
     order = jnp.argsort(key)
-    return jnp.zeros((pool,), jnp.float32).at[order].set(
-        jnp.arange(1, pool + 1, dtype=jnp.float32))
+    w_sorted = weights[order]
+    incl = jnp.cumsum(w_sorted)
+    taken = (incl - w_sorted) < budget if cover else incl <= budget
+    return jnp.zeros((pool,), bool).at[order].set(taken)
 
 
 def lower_bound_cost(total_cus: jnp.ndarray,

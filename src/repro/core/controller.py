@@ -93,15 +93,17 @@ def step(state: ControllerState,
          exec_time: jnp.ndarray,     # (W, K) CU-seconds consumed in window
          items_done: jnp.ndarray,    # (W, K) completions in window
          cfg: ControllerConfig,
-         cores: jnp.ndarray | float | None = None,  # CUs per instance
+         cores: jnp.ndarray | float | None = None,  # CUs per instance/slot
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
     # CUs per instance — a traced scalar when the spot fleet's granularity
-    # is a sweep axis (sim.sweep vmaps over it); the caller owns keeping it
-    # consistent with the execution and scaling planes.  All control
-    # arithmetic below is in CU space, so a preemption that knocks out one
-    # m4.10xlarge is seen as a 40-CU capacity loss and AIMD re-grows the
-    # fleet additively, exactly as it reacts to any shortfall.
+    # is a sweep axis (sim.sweep vmaps over it), or a per-slot (I,) vector
+    # for mixed-granularity fleets; the caller owns keeping it consistent
+    # with the execution and scaling planes.  All control arithmetic below
+    # is in CU space, so a preemption that knocks out one m4.10xlarge is
+    # seen as a 40-CU capacity loss and AIMD re-grows the fleet additively,
+    # exactly as it reacts to any shortfall — possibly with instances of a
+    # *different* type, if that is what the market now sells cheapest.
     if cores is None:
         cores = 1.0
 

@@ -120,10 +120,13 @@ class ClusterState(NamedTuple):
 
     Spot-market fields (Appendix A; see ``sim.spot``): each slot records the
     instance type it was started as and the $/quantum bid attached to its
-    spot request.  A slot whose bid falls below the current spot price is
-    reclaimed by ``billing.preempt`` — the same event the elastic runtime in
-    ``repro.ft`` treats as a node failure.  On-demand fleets keep the
-    defaults (bid = +inf: never preempted).
+    spot request — the bid is fixed at request time (EC2 semantics), even
+    under a dynamic bid policy.  A slot whose bid falls below its *type's*
+    current spot price is reclaimed by ``billing.preempt`` — the same event
+    the elastic runtime in ``repro.ft`` treats as a node failure.  Slots of
+    a mixed-granularity fleet carry different ``itype`` values and are
+    billed/preempted each at their own type's price.  On-demand fleets keep
+    the defaults (bid = +inf: never preempted).
     """
 
     phase: jnp.ndarray        # (I,) int8

@@ -42,11 +42,11 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_scr,
     diff = cs[:, None] - cs[None, :]
     ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    l = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    ltri = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
 
     cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    w = cb * l * dtv[None, :]
+    w = cb * ltri * dtv[None, :]
     y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
 

@@ -18,8 +18,8 @@ def ssd_chunk_ref(x, dt, a, b, c, s_in):
     cs = jnp.cumsum(a)
     diff = cs[:, None] - cs[None, :]
     mask = jnp.tril(jnp.ones((q, q), bool))
-    l = jnp.where(mask, jnp.exp(diff), 0.0)
-    w = (c @ b.T) * l * dt[None, :]
+    ltri = jnp.where(mask, jnp.exp(diff), 0.0)
+    w = (c @ b.T) * ltri * dt[None, :]
     y_intra = w @ x
     y_inter = (c @ s_in) * jnp.exp(cs)[:, None]
     decay_to_end = jnp.exp(cs[-1] - cs)

@@ -40,9 +40,9 @@ def extrapolate(res: dict, key: str) -> float:
     p = res["probe"]
     l1, l2 = res["probe_depths"]
     cfg = ARCHS[res["arch"]]
-    l = cfg.n_layers
+    depth = cfg.n_layers
     v1, v2 = p["l1"][key], p["l2"][key]
-    return v1 + (l - l1) / (l2 - l1) * (v2 - v1)
+    return v1 + (depth - l1) / (l2 - l1) * (v2 - v1)
 
 
 def model_flops(arch: str, shape_name: str) -> float:

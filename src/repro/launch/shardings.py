@@ -126,7 +126,7 @@ def batch_spec(path, leaf, mesh, *, seq_shard: bool = False) -> P:
 def batch_shardings(batch, mesh, seq_shard: bool = False):
     return tree_shardings(
         batch, mesh,
-        lambda p, l, m: batch_spec(p, l, m, seq_shard=seq_shard))
+        lambda p, leaf, m: batch_spec(p, leaf, m, seq_shard=seq_shard))
 
 
 def cache_spec(path, leaf, mesh, *, seq_shard: bool = False) -> P:
@@ -158,7 +158,7 @@ def cache_spec(path, leaf, mesh, *, seq_shard: bool = False) -> P:
 def cache_shardings(cache, mesh, seq_shard: bool = False):
     return tree_shardings(
         cache, mesh,
-        lambda p, l, m: cache_spec(p, l, m, seq_shard=seq_shard))
+        lambda p, leaf, m: cache_spec(p, leaf, m, seq_shard=seq_shard))
 
 
 def replicated(tree, mesh):

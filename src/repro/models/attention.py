@@ -15,7 +15,6 @@ same tiling in VMEM; this pure-JAX path is the oracle and the dry-run path.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

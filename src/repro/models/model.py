@@ -8,16 +8,14 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, ShapeConfig
-from . import encdec, hybrid, sharding, ssm, transformer
+from . import encdec, hybrid, ssm, transformer
 from .dims import Dims
-from .layers import DTYPE, cross_entropy, embed, rmsnorm, rmsnorm_init, \
-    unembed
+from .layers import DTYPE, cross_entropy, embed, rmsnorm, rmsnorm_init
 from . import sharding as sh
 
 

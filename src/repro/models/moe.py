@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from . import sharding as sh
 from .dims import Dims
-from .layers import DTYPE, _normal
+from .layers import _normal
 
 
 def init(key, dims: Dims) -> dict:

@@ -8,7 +8,6 @@ devices, and the idiomatic TPU training structure).
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -11,7 +11,11 @@ One `lax.scan` step = one monitoring instant:
 Everything is fixed-shape and jitted; a full 30-workload × 300-tick
 experiment runs in milliseconds, so the benchmark suite sweeps predictors,
 policies and monitoring intervals cheaply — and ``sim.sweep`` vmaps the
-*whole* run over seeds × bid levels × instance granularities in one call.
+*whole* run over seeds × bid levels × bid policies × fleet mixes in one
+call.  With the spot market live, all Table-V instance types evolve as one
+correlated price system and the fleet may be mixed-granularity: each slot
+is billed/preempted at its own type's price, and every acquisition picks
+the cheapest-per-CU type currently available under the bid policy.
 """
 
 from __future__ import annotations
@@ -75,7 +79,9 @@ class SimTrace(NamedTuple):
     confirmed: jnp.ndarray   # (T, W)
     active: jnp.ndarray      # (T, W)
     remaining: jnp.ndarray   # (T, W)  Σ_k m
-    spot_price: jnp.ndarray  # (T,)  $/quantum the market charged this tick
+    spot_price: jnp.ndarray  # (T,)  $/quantum of the primary instance type
+    spot_bid: jnp.ndarray    # (T,)  $/quantum new requests bid this tick
+                             #       (primary type; +inf off the market)
     n_preempted: jnp.ndarray # (T,)  cumulative instances lost to the market
     t_done: jnp.ndarray      # (W,)  completion tick (final)
     work_final: WorkloadState
@@ -143,26 +149,29 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
         )
         c_state = ctrl.reset_rows(state.c, arrive)
 
-        # --- spot market: new clearing price for [t, t+1) -------------------
+        # --- spot market: new clearing prices for [t, t+1) ------------------
+        # All Table-V types advance together (correlated log-AR(1)); slots
+        # are billed and preempted at *their own type's* price, so one run
+        # can hold a mixed-granularity fleet.
+        cluster = state.cluster
         if use_spot:
             spot_state = spot_lib.step(state.spot, cfg.spot, cfg.dt)
-            price = spot_state.price
-            cores = spot_state.rt.cores
+            slot_price = spot_state.prices[cluster.itype]   # (I,)
+            cores = spot_lib.CORES_TABLE[cluster.itype]     # (I,) CUs/slot
         else:
             spot_state = state.spot
-            price = None
+            slot_price = None
             cores = 1.0
 
         # --- market preemption: outbid slots are taken the instant the new
         # price clears above their bid — *before* billing advances, so a
         # reclaimed slot never renews a quantum at the very price that
         # killed it ---------------------------------------------------------
-        cluster = state.cluster
         if use_spot:
-            cluster, _ = billing_lib.preempt(cluster, price)
+            cluster, _ = billing_lib.preempt(cluster, slot_price)
         # --- wall clock: boots complete, billing quanta renew ---------------
         cluster = billing_lib.advance(cluster, cfg.dt, cfg.ctrl.billing,
-                                      price=price)
+                                      price=slot_price)
 
         # --- execute with last instant's rates ------------------------------
         (new_m, b_meas, meas_mask, exec_time, items_done, util,
@@ -189,20 +198,40 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
             cfg.ctrl, cores=cores)
         if use_spot:
             rt = spot_state.rt
-            # CU target → instance count at this granularity; requests are
-            # only fulfilled while the market clears at or below our bid.
-            n_inst = jnp.ceil(dec.n_target / rt.cores)
+            # Dynamic bid policy: the TTC-aware signal is how far the most
+            # behind-schedule active workload has fallen — time fraction of
+            # its deadline used minus work fraction done.  On-track runs
+            # keep the cheap floor bid; runs knocked behind (preemptions,
+            # outages) escalate toward the on-demand cap.
+            frac_time = 1.0 - work.d / jnp.maximum(work.d_requested, 1e-9)
+            frac_done = 1.0 - (jnp.sum(work.m, -1)
+                               / jnp.maximum(jnp.sum(work.m0, -1), 1e-9))
+            behind = jnp.where(work.active, frac_time - frac_done, -jnp.inf)
+            urgency = jnp.clip(cfg.spot.ttc_gain * jnp.max(behind), 0.0, 1.0)
+            bids = spot_lib.current_bids(cfg.spot, rt, spot_state, urgency)
+            # Acquisitions pick the cheapest-per-CU currently-available
+            # type of the fleet mix; requests are only fulfilled while the
+            # market clears at or below our bid for that type.
+            itype_new, can_start = spot_lib.select_type(
+                spot_state.prices, bids, rt.mix)
+            scale_cores = jnp.where(cluster.phase == billing_lib.OFF,
+                                    spot_lib.CORES_TABLE[itype_new], cores)
             cluster = billing_lib.scale_to(
-                cluster, n_inst, cfg.ctrl.billing, price=price, bid=rt.bid,
-                itype=rt.itype, allow_start=price <= rt.bid)
+                cluster, dec.n_target, cfg.ctrl.billing,
+                price=spot_state.prices[itype_new], bid=bids[itype_new],
+                itype=itype_new, allow_start=can_start, cores=scale_cores)
         else:
             cluster = billing_lib.scale_to(cluster, dec.n_target,
                                            cfg.ctrl.billing)
 
+        # Slots started this tick carry their new type; refresh the CU
+        # weights before reporting control-plane sizes.
+        out_cores = (spot_lib.CORES_TABLE[cluster.itype] if use_spot
+                     else cores)
         out = dict(
             cum_cost=cluster.cum_cost,
-            n_usable=billing_lib.usable(cluster, cores),
-            n_committed=billing_lib.committed(cluster, cores),
+            n_usable=billing_lib.usable(cluster, out_cores),
+            n_committed=billing_lib.committed(cluster, out_cores),
             n_star=dec.n_star,
             n_target=dec.n_target,
             util=util,
@@ -215,6 +244,8 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
             spot_price=(spot_state.price if use_spot
                         else jnp.asarray(cfg.ctrl.billing.price_per_quantum,
                                          jnp.float32)),
+            spot_bid=(bids[spot_state.rt.itype] if use_spot
+                      else jnp.asarray(jnp.inf, jnp.float32)),
             n_preempted=cluster.n_preempt,
         )
         return SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
@@ -252,12 +283,18 @@ def init_state(schedule: wl.Schedule, cfg: SimConfig,
         spot_rt, jax.random.PRNGKey(jnp.asarray(seed) + 7919))
 
     cluster = billing_lib.init(cfg.pool)
-    # The platform idles at N_min pre-warmed instances (paper: N_min = 10).
+    # The platform idles at N_min pre-warmed CUs (paper: N_min = 10).
     if cfg.spot.enabled:
-        n0 = jnp.ceil(cfg.ctrl.params.n_min / spot_rt.cores)
+        # Baseline market (prices = Table-V base, EMA = base, no urgency):
+        # acquire the cheapest-per-CU type of the fleet mix.
+        bids0 = spot_lib.current_bids(cfg.spot, spot_rt, spot_state, 0.0)
+        itype0, can0 = spot_lib.select_type(spot_state.prices, bids0,
+                                            spot_rt.mix)
         cluster = billing_lib.scale_to(
-            cluster, n0, cfg.ctrl.billing, price=spot_rt.base_price,
-            bid=spot_rt.bid, itype=spot_rt.itype)
+            cluster, jnp.asarray(cfg.ctrl.params.n_min), cfg.ctrl.billing,
+            price=spot_state.prices[itype0], bid=bids0[itype0],
+            itype=itype0, allow_start=can0,
+            cores=spot_lib.CORES_TABLE[itype0])
     else:
         cluster = billing_lib.scale_to(
             cluster, jnp.asarray(cfg.ctrl.params.n_min), cfg.ctrl.billing)

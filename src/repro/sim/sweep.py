@@ -1,22 +1,31 @@
 """Vmapped Monte-Carlo experiment harness over the spot-market simulator.
 
-The entire simulation — market process, billing, preemption, controller,
-workload execution — is one pure ``lax.scan`` (``runner.scan_run``), so a
-cost sweep over seeds × bid levels × instance granularities is a single
-``jax.jit(jax.vmap(...))`` call: one compile, one device dispatch, every
-grid point in parallel.  A 3 × 5 × 6 grid of full 130-tick experiments
-costs about as much wall-clock as three sequential runs.
+The entire simulation — correlated multi-type market process, billing,
+preemption, controller, workload execution — is one pure ``lax.scan``
+(``runner.scan_run``), so a cost sweep over seeds × bid levels × bid
+policies × fleet mixes is a single ``jax.jit(jax.vmap(...))`` call: one
+compile, one device dispatch, every grid point in parallel.  A
+3 × 5 × 4 × 2 grid of full 130-tick experiments costs about as much
+wall-clock as three sequential runs.
 
 Axes:
   * ``seed``      — Monte-Carlo replication (market + execution noise);
-  * ``bid_mult``  — bid as a multiple of the instance's base spot price
-                    (ignored under the ``on_demand`` bid policy);
-  * ``itype``     — instance granularity (Appendix A Table V): many
-                    m3.medium vs few m4.10xlarge for the same CU target.
+  * ``bid_mult``  — bid as a multiple of the base spot price (the 'ema'
+                    policy's EMA multiple and the 'ttc' policy's floor;
+                    ignored under 'on_demand');
+  * ``policy``    — bid policy (``spot.BID_POLICIES``): static multiple,
+                    on-demand cap, TTC-aware, market-aware EMA.  The
+                    sentinel -1 defers to ``cfg.spot.bid_policy``;
+  * ``itype`` / ``mix`` — fleet mix over the Appendix-A Table V types:
+                    ``mix`` is the (T,)-mask of allowed types,  ``itype``
+                    the mix's primary type (reported in the trace).  A
+                    one-type mask is the classic granularity axis (many
+                    m3.medium vs few m4.10xlarge); a wider mask lets every
+                    acquisition pick the cheapest-per-CU available type.
 
 Summaries are per-run scalars, so the vmapped output is a struct of
-(B,)-shaped arrays — ready for the preemption/cost frontier plots in
-``benchmarks.bench_spot``.
+(B,)-shaped arrays — ready for the policy/granularity frontier plots in
+``benchmarks.bench_spot`` and ``benchmarks.bench_bidding``.
 """
 
 from __future__ import annotations
@@ -30,13 +39,17 @@ import numpy as np
 from . import runner, spot
 from . import workloads as wl
 
+FleetMix = Sequence[str | int] | str | int
+
 
 class SweepAxes(NamedTuple):
     """The flattened experiment grid (B = len of every field)."""
 
     seed: jnp.ndarray      # (B,) int32
     bid_mult: jnp.ndarray  # (B,) float32
-    itype: jnp.ndarray     # (B,) int32 index into the Table-V arrays
+    itype: jnp.ndarray     # (B,) int32 primary type per fleet mix
+    policy: jnp.ndarray    # (B,) int32 BID_POLICIES id (-1: use config's)
+    mix: jnp.ndarray       # (B, T) float32 fleet-membership masks
 
 
 class RunSummary(NamedTuple):
@@ -49,8 +62,8 @@ class RunSummary(NamedTuple):
     preemptions: jnp.ndarray   # instances reclaimed by the market
     finished: jnp.ndarray      # workloads completed
     max_committed: jnp.ndarray # peak control-plane fleet, in CUs
-    mean_price: jnp.ndarray    # mean $/quantum the market charged
-    max_price: jnp.ndarray     # worst $/quantum seen
+    mean_price: jnp.ndarray    # mean $/quantum of the primary type
+    max_price: jnp.ndarray     # worst $/quantum seen (primary type)
 
 
 def summarize(final, ys, schedule: wl.Schedule,
@@ -70,53 +83,95 @@ def summarize(final, ys, schedule: wl.Schedule,
     )
 
 
+def _as_mix(entry: FleetMix) -> tuple[int, np.ndarray]:
+    """Normalize one fleet-mix spec to (primary itype, (T,) mask)."""
+    if isinstance(entry, (str, int)):
+        entry = (entry,)
+    members = [spot.instance_index(m) if isinstance(m, str) else int(m)
+               for m in entry]
+    if not members:
+        raise ValueError("a fleet mix needs at least one instance type")
+    mask = np.zeros((spot.N_TYPES,), np.float32)
+    mask[members] = 1.0
+    return members[0], mask
+
+
 def make_axes(seeds: Sequence[int],
               bid_mults: Sequence[float],
-              instances: Sequence[str | int] = ("m3.medium",)) -> SweepAxes:
-    """Cartesian-product grid, flattened to (B,) arrays."""
-    itypes = [spot.instance_index(i) if isinstance(i, str) else int(i)
-              for i in instances]
-    s, b, i = np.meshgrid(np.asarray(seeds), np.asarray(bid_mults, float),
-                          np.asarray(itypes), indexing="ij")
+              instances: Sequence[FleetMix] = ("m3.medium",),
+              policies: Sequence[str | int] | None = None) -> SweepAxes:
+    """Cartesian-product grid, flattened to (B,) arrays.
+
+    ``instances`` entries are fleet mixes: a single type name/id (the
+    classic granularity axis) or a sequence of them (a heterogeneous
+    fleet).  ``policies`` are ``spot.BID_POLICIES`` names/ids; the default
+    defers to ``cfg.spot.bid_policy`` at sweep time.  Grid order is
+    seeds × bid_mults × policies × mixes, so reshaping a summary field to
+    ``(len(seeds), len(bid_mults), len(policies), len(instances))``
+    recovers the axes.
+    """
+    primaries, masks = zip(*(_as_mix(e) for e in instances))
+    if policies is None:
+        pol_ids = [-1]
+    else:
+        pol_ids = [spot.bid_policy_index(p) if isinstance(p, str) else int(p)
+                   for p in policies]
+    s, b, p, m = np.meshgrid(np.asarray(seeds),
+                             np.asarray(bid_mults, float),
+                             np.asarray(pol_ids),
+                             np.arange(len(masks)), indexing="ij")
+    mix = np.stack(masks)[m.ravel()]
     return SweepAxes(seed=jnp.asarray(s.ravel(), jnp.int32),
                      bid_mult=jnp.asarray(b.ravel(), jnp.float32),
-                     itype=jnp.asarray(i.ravel(), jnp.int32))
+                     itype=jnp.asarray(np.asarray(primaries)[m.ravel()],
+                                       jnp.int32),
+                     policy=jnp.asarray(p.ravel(), jnp.int32),
+                     mix=jnp.asarray(mix, jnp.float32))
 
 
 def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
               axes: SweepAxes) -> RunSummary:
     """Every grid point as one jitted ``vmap`` of the full simulation.
 
-    The *axes* choose each run's instance type and bid multiple;
-    ``cfg.spot.instance``/``bid_mult`` are not consulted (they only apply
-    to single, non-swept runs)."""
+    The *axes* choose each run's fleet mix, bid policy and bid multiple;
+    ``cfg.spot.instance``/``fleet``/``bid_mult`` are not consulted (they
+    only apply to single, non-swept runs).  ``cfg.spot.bid_policy`` *is*
+    the policy of every grid point whose ``policy`` axis is the -1
+    sentinel (the ``make_axes`` default)."""
     assert cfg.spot.enabled, "run_sweep needs SimConfig.spot.enabled=True"
     # Guard a silent trap: a config that names a non-default instance while
     # the axes (which win) never visit it almost certainly means make_axes
     # was left at its m3.medium default.
     cfg_itype = spot.instance_index(cfg.spot.instance)
-    if cfg_itype != 0 and not np.any(np.asarray(axes.itype) == cfg_itype):
+    if cfg_itype != 0 and not np.any(np.asarray(axes.mix)[:, cfg_itype] > 0):
         raise ValueError(
             f"SpotConfig.instance={cfg.spot.instance!r} never appears in "
             "the sweep axes, which override the config — pass "
             "instances=[...] to make_axes")
+    cfg_policy = spot.bid_policy_index(cfg.spot.bid_policy)
 
-    def one(seed, bid_mult, itype):
-        rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult)
+    def one(seed, bid_mult, itype, policy, mix):
+        policy = jnp.where(policy < 0, cfg_policy, policy)
+        rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
+                               policy=policy, mix=mix)
         final, ys = runner.scan_run(schedule, cfg, seed=seed, spot_rt=rt)
         return summarize(final, ys, schedule, cfg)
 
-    return jax.jit(jax.vmap(one))(axes.seed, axes.bid_mult, axes.itype)
+    return jax.jit(jax.vmap(one))(axes.seed, axes.bid_mult, axes.itype,
+                                  axes.policy, axes.mix)
 
 
 def run_single(schedule: wl.Schedule, cfg: runner.SimConfig,
                seed: int, bid_mult: float,
-               instance: str | int = "m3.medium") -> RunSummary:
+               instance: FleetMix = "m3.medium",
+               policy: str | int | None = None) -> RunSummary:
     """One grid point as a standalone jitted run — the reference the
     vmapped sweep is tested against (and a handy debug entry point)."""
-    itype = (spot.instance_index(instance) if isinstance(instance, str)
-             else int(instance))
-    rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult)
+    itype, mask = _as_mix(instance)
+    if policy is None:
+        policy = spot.bid_policy_index(cfg.spot.bid_policy)
+    rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
+                           policy=policy, mix=jnp.asarray(mask))
     final, ys = jax.jit(
         lambda s: runner.scan_run(schedule, cfg, seed=s, spot_rt=rt))(seed)
     return summarize(final, ys, schedule, cfg)

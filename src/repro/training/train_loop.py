@@ -5,7 +5,6 @@ lowers and the elastic runtime drives.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -50,10 +49,10 @@ def make_train_step(model: Model, opt_cfg: optimizer.OptConfig,
                     lambda x: jax.lax.dynamic_slice_in_dim(
                         x, i * (x.shape[0] // grad_accum),
                         x.shape[0] // grad_accum, 0), batch)
-                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                lval, g = jax.value_and_grad(loss_fn)(state.params, mb)
                 acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype),
                                    acc, g)
-                return (acc, loss_acc + l), None
+                return (acc, loss_acc + lval), None
 
             from ..models import sharding as sh
             zero = jax.tree.map(jnp.zeros_like, state.params)

@@ -1,0 +1,305 @@
+"""Correlated multi-type market, dynamic bid policies, mixed fleets."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import billing
+from repro.core.types import BillingParams, ControlParams
+from repro.core.controller import ControllerConfig
+from repro.sim import (SimConfig, SpotConfig, make_axes, paper_schedule,
+                       run, run_single, run_sweep, spot)
+
+PARAMS = ControlParams(monitor_dt=300.0)
+BILL = BillingParams(terminate="immediate")
+ALL_TYPES = spot.INSTANCE_NAMES
+
+
+def _spot_cfg(**kw):
+    return SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+        ticks=130, spot=SpotConfig(enabled=True, **kw))
+
+
+# ----------------------------------------------------- correlated process --
+
+def test_marginal_distribution_invariant_to_corr():
+    """Each type's marginal must be the single-type process regardless of
+    the factor loading: stationary log-price std matches vol/sqrt(1-rho²)
+    at every corr (satellite: invariance test)."""
+    for corr in (0.0, 0.6, 0.9):
+        cfg = SpotConfig(p_spike_per_core=0.0, corr=corr)
+        tr = spot.price_traces(spot.make_runtime(cfg), 8000,
+                               jax.random.PRNGKey(1), cfg)
+        x = np.log(np.asarray(tr) / np.asarray(spot.SPOT_BASE_TABLE))
+        emp = x[500:].std(axis=0)
+        vol = np.asarray(cfg.vol0
+                         + cfg.vol_scale * np.log2(
+                             np.asarray(spot.CORES_TABLE) + 1.0))
+        theory = vol / np.sqrt(1.0 - cfg.rho ** 2)
+        np.testing.assert_allclose(emp, theory, rtol=0.12,
+                                   err_msg=f"corr={corr}")
+
+
+def test_cross_type_increment_correlation_matches_loading():
+    """Log-price increments correlate across types at the configured
+    factor loading (the AR(1) algebra makes plain first differences
+    inherit exactly ``corr``)."""
+    for corr in (0.3, 0.6):
+        cfg = SpotConfig(p_spike_per_core=0.0, corr=corr)
+        tr = spot.price_traces(spot.make_runtime(cfg), 6000,
+                               jax.random.PRNGKey(0), cfg)
+        d = np.diff(np.log(np.asarray(tr)), axis=0)
+        cc = np.corrcoef(d.T)
+        off = cc[np.triu_indices(spot.N_TYPES, 1)]
+        assert np.all(off > 0.0)
+        np.testing.assert_allclose(off.mean(), corr, atol=0.05)
+
+
+def test_corr_zero_types_independent():
+    cfg = SpotConfig(p_spike_per_core=0.0, corr=0.0)
+    tr = spot.price_traces(spot.make_runtime(cfg), 6000,
+                           jax.random.PRNGKey(2), cfg)
+    d = np.diff(np.log(np.asarray(tr)), axis=0)
+    off = np.corrcoef(d.T)[np.triu_indices(spot.N_TYPES, 1)]
+    assert np.all(np.abs(off) < 0.08)
+
+
+def test_primary_trace_slices_full_system():
+    cfg = SpotConfig(instance="m3.xlarge")
+    rt = spot.make_runtime(cfg)
+    key = jax.random.PRNGKey(5)
+    full = spot.price_traces(rt, 64, key, cfg)
+    one = spot.price_trace(rt, 64, key, cfg)
+    assert full.shape == (64, spot.N_TYPES)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(full)[:, 2])
+
+
+def test_mean_spike_duration_scales_with_spike_hours():
+    """At a sub-hourly step a spike survives each tick with probability
+    1 - h/spike_hours, so longer spike_hours → more spiked steps."""
+    counts = {}
+    for sh in (1.0, 4.0):
+        cfg = SpotConfig(p_spike_per_core=0.05, spike_hours=sh)
+        tr = spot.price_traces(spot.make_runtime(cfg), 4000,
+                               jax.random.PRNGKey(3), cfg, dt=300.0)
+        x = np.asarray(tr)[:, 0] / spot.INSTANCE_TYPES["m3.medium"][2]
+        counts[sh] = int((x > 1.8).sum())
+    assert counts[4.0] > 2 * counts[1.0] > 0
+
+
+# ------------------------------------------------------ config validation --
+
+def test_spotconfig_rejects_unknown_instance_with_valueerror():
+    with pytest.raises(ValueError, match="m3.medium"):
+        SpotConfig(instance="x1.32xlarge")
+
+
+def test_spotconfig_rejects_unknown_bid_policy_with_valueerror():
+    with pytest.raises(ValueError, match="multiple"):
+        SpotConfig(bid_policy="tcp_vegas")
+
+
+def test_spotconfig_rejects_bad_fleet_and_corr():
+    with pytest.raises(ValueError, match="Table V"):
+        SpotConfig(fleet=("m3.medium", "nope"))
+    with pytest.raises(ValueError, match="corr"):
+        SpotConfig(corr=1.0)
+    with pytest.raises(ValueError, match="spike_hours"):
+        SpotConfig(spike_hours=0.0)
+
+
+# ------------------------------------------------------------ bid policies --
+
+def _rt_state(policy, bid_mult=1.5, instance="m3.medium"):
+    cfg = SpotConfig(bid_policy=policy, bid_mult=bid_mult, instance=instance)
+    rt = spot.make_runtime(cfg)
+    return cfg, rt, spot.init(rt, jax.random.PRNGKey(0))
+
+
+def test_ttc_policy_interpolates_static_to_cap():
+    cfg, rt, st = _rt_state("ttc", bid_mult=1.2)
+    lo = np.asarray(spot.current_bids(cfg, rt, st, urgency=0.0))
+    hi = np.asarray(spot.current_bids(cfg, rt, st, urgency=1.0))
+    static = 1.2 * np.asarray(spot.SPOT_BASE_TABLE)
+    cap = np.maximum(np.asarray(spot.ON_DEMAND_TABLE), static)
+    np.testing.assert_allclose(lo, static, rtol=1e-6)
+    np.testing.assert_allclose(hi, cap, rtol=1e-6)
+    mid = np.asarray(spot.current_bids(cfg, rt, st, urgency=0.5))
+    assert np.all(mid >= lo) and np.all(mid <= hi)
+
+
+def test_ema_policy_tracks_ema_capped_at_on_demand():
+    cfg, rt, st = _rt_state("ema", bid_mult=2.0)
+    # Baseline EMA = base prices.
+    np.testing.assert_allclose(
+        np.asarray(spot.current_bids(cfg, rt, st)),
+        np.minimum(2.0 * np.asarray(spot.SPOT_BASE_TABLE),
+                   np.asarray(spot.ON_DEMAND_TABLE)), rtol=1e-6)
+    # A hot market lifts the EMA and the bid with it, still capped.
+    hot = st._replace(ema=st.ema * 100.0)
+    np.testing.assert_allclose(
+        np.asarray(spot.current_bids(cfg, rt, hot)),
+        np.asarray(spot.ON_DEMAND_TABLE), rtol=1e-6)
+
+
+def test_on_demand_policy_bids_table_prices():
+    cfg, rt, st = _rt_state("on_demand")
+    np.testing.assert_allclose(np.asarray(spot.current_bids(cfg, rt, st)),
+                               np.asarray(spot.ON_DEMAND_TABLE), rtol=1e-6)
+
+
+def test_select_type_cheapest_per_cu_among_available():
+    prices = spot.SPOT_BASE_TABLE * 1.0
+    bids = spot.ON_DEMAND_TABLE * 1.0
+    # At base prices m4.4xlarge is the cheapest per CU of the full table.
+    it, ok = spot.select_type(prices, bids, jnp.ones((spot.N_TYPES,)))
+    assert bool(ok) and spot.INSTANCE_NAMES[int(it)] == "m4.4xlarge"
+    # Restrict the mix: medium wins over 10xlarge on per-CU price.
+    mix = spot.fleet_mask(("m3.medium", "m4.10xlarge"))
+    it, ok = spot.select_type(prices, bids, mix)
+    assert bool(ok) and spot.INSTANCE_NAMES[int(it)] == "m3.medium"
+    # Outbid everywhere: nothing available.
+    _, ok = spot.select_type(prices, jnp.zeros_like(bids), mix)
+    assert not bool(ok)
+
+
+# ------------------------------------------------------- fleet-aware billing --
+
+def test_scale_to_cu_mode_starts_enough_coarse_instances():
+    bp = BillingParams(boot_delay=0.0, terminate="immediate")
+    c = billing.init(8)
+    # Target 90 CUs out of 40-CU instances: 3 starts (120 CUs committed).
+    c = billing.scale_to(c, jnp.asarray(90.0), bp, price=0.5655, bid=1.0,
+                         itype=5, cores=jnp.full((8,), 40.0))
+    cores = jnp.full((8,), 40.0)
+    assert float(billing.committed(c, cores)) == 120.0
+    assert float(c.cum_cost) == pytest.approx(3 * 0.5655)
+    assert np.all(np.asarray(c.itype)[np.asarray(c.phase) > 0] == 5)
+    # Shrinking to 40 CUs drains two instances' worth of CUs.
+    c = billing.scale_to(c, jnp.asarray(40.0), bp, cores=cores)
+    assert float(billing.committed(c, cores)) == 40.0
+
+
+def test_scale_to_cu_mode_mixed_slot_weights():
+    """Shrink sheds just enough CUs when slots have unequal weights."""
+    bp = BillingParams(boot_delay=0.0, terminate="immediate")
+    c = billing.init(4)
+    c = billing.scale_to(c, jnp.asarray(2.0), bp, price=0.01, bid=0.02,
+                         itype=0)          # two 1-CU slots (legacy mode)
+    cores = jnp.asarray([1.0, 1.0, 16.0, 16.0])
+    c = billing.scale_to(c, jnp.asarray(34.0), bp, price=0.11, bid=0.2,
+                         itype=4, cores=cores)  # + two 16-CU slots
+    assert float(billing.committed(c, cores)) == 34.0
+    # Dropping to 20 CUs sheds a 14-CU budget in §IV order (smallest
+    # remaining time first; equal times break by slot index): both 1-CU
+    # slots fit the budget, a 16-CU slot does not — the fleet stays at or
+    # above its target rather than forfeiting a paid coarse instance.
+    c = billing.scale_to(c, jnp.asarray(20.0), bp, cores=cores)
+    assert float(billing.committed(c, cores)) == 32.0
+    # Once the excess covers a whole coarse instance, it goes.
+    c = billing.scale_to(c, jnp.asarray(16.0), bp, cores=cores)
+    assert float(billing.committed(c, cores)) == 16.0
+
+
+def test_scale_to_cu_mode_sub_instance_excess_never_sheds():
+    """Regression: a 39-CU target on a 40-CU instance must keep the
+    instance — shedding it would forfeit the paid quantum and re-buy a
+    fresh one next tick (cost churn the instance-count semantics never
+    had)."""
+    bp = BillingParams(boot_delay=0.0, terminate="immediate")
+    cores = jnp.full((4,), 40.0)
+    c = billing.init(4)
+    c = billing.scale_to(c, jnp.asarray(40.0), bp, price=0.5655, bid=1.0,
+                         itype=5, cores=cores)
+    assert float(c.cum_cost) == pytest.approx(0.5655)
+    c = billing.scale_to(c, jnp.asarray(39.0), bp, price=0.5655, bid=1.0,
+                         itype=5, cores=cores)
+    assert float(billing.committed(c, cores)) == 40.0
+    assert float(c.cum_cost) == pytest.approx(0.5655)
+
+
+def test_legacy_scale_to_unchanged_without_cores():
+    bp = BillingParams(boot_delay=0.0)
+    c = billing.scale_to(billing.init(4), jnp.asarray(3.0), bp)
+    assert float(billing.committed(c)) == 3.0
+
+
+# ----------------------------------------------------------- end-to-end sim --
+
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+
+
+def test_fleet_sweep_matches_run_single_over_policies_and_mixes():
+    """One jitted vmap over policies × mixes == looping single runs."""
+    cfg = _spot_cfg()
+    mixes = ["m3.medium", ("m3.medium", "m4.4xlarge")]
+    policies = ["multiple", "ttc", "ema", "on_demand"]
+    axes = make_axes(seeds=[0], bid_mults=[1.5], instances=mixes,
+                     policies=policies)
+    batched = run_sweep(SCHED, cfg, axes)
+    i = 0
+    for policy in policies:
+        for mix in mixes:
+            single = run_single(SCHED, cfg, seed=0, bid_mult=1.5,
+                                instance=mix, policy=policy)
+            for field in single._fields:
+                np.testing.assert_allclose(
+                    np.asarray(getattr(batched, field))[i],
+                    np.asarray(getattr(single, field)),
+                    rtol=1e-5, err_msg=f"{field} @ {policy}/{mix}")
+            i += 1
+
+
+def test_mixed_fleet_completes_and_holds_multiple_types():
+    """A heterogeneous fleet on the correlated market finishes the suite;
+    acquisitions actually use more than one Table-V type."""
+    cfg = _spot_cfg(fleet=ALL_TYPES, bid_policy="on_demand")
+    tr = run(SCHED, cfg, seed=0)
+    assert float(tr.n_usable.max()) > 0
+    work = tr.work_final
+    assert int((work.t_done >= 0).sum()) == SCHED.n
+    # The cheapest-per-CU choice at baseline prices is m4.4xlarge, so a
+    # mixed fleet must not be pure m3.medium.
+    assert float(tr.n_committed.max()) >= 16.0
+
+
+def test_dynamic_policies_run_end_to_end_and_bid_dynamically():
+    cfg = _spot_cfg(bid_policy="ttc", bid_mult=1.02, instance="m3.xlarge",
+                    p_spike_per_core=0.02, spike_hours=3.0)
+    tr = run(SCHED, cfg, seed=3)
+    bids = np.asarray(tr.spot_bid)
+    floor = 1.02 * spot.INSTANCE_TYPES["m3.xlarge"][2]
+    assert bids.min() >= floor * (1 - 1e-6)
+    assert bids.max() > bids.min()          # escalated at least once
+    assert bids.max() <= spot.INSTANCE_TYPES["m3.xlarge"][1] * (1 + 1e-6)
+
+
+def test_ttc_policy_cuts_violations_vs_static_at_same_floor():
+    """On a spiky market the TTC-aware policy must strictly reduce
+    violations vs the same static floor bid (the ISSUE 2 story)."""
+    seeds = [0, 1, 2, 3]
+    market = dict(instance="m3.xlarge", p_spike_per_core=0.02,
+                  spike_hours=3.0)
+    cfg = _spot_cfg(**market)
+    axes = make_axes(seeds=seeds, bid_mults=[1.2],
+                     instances=["m3.xlarge"],
+                     policies=["multiple", "ttc"])
+    s = run_sweep(SCHED, cfg, axes)
+    vio = np.asarray(s.violations).reshape(len(seeds), 2)
+    assert vio[:, 1].sum() < vio[:, 0].sum()
+
+
+def test_spot_disabled_trace_has_infinite_bid():
+    cfg = SimConfig(ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+                    ticks=40)
+    tr = run(SCHED, cfg)
+    assert np.all(np.isinf(np.asarray(tr.spot_bid)))
+
+
+def test_spotconfig_fleet_is_hashable_static_config():
+    cfg = _spot_cfg(fleet=("m3.medium", "m3.large"))
+    assert isinstance(hash(dataclasses.astuple(cfg.spot)), int)

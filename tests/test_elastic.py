@@ -2,8 +2,6 @@
 checkpoint-restart continuity (integration test on a tiny real model)."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS

@@ -14,7 +14,9 @@ P = ControlParams()
 def test_eq11_is_argmax_of_eq10():
     r, d = 120.0, 40.0
     s_star = r / d
-    f = lambda s: r * np.log(s) - d * s
+    def f(s):
+        return r * np.log(s) - d * s
+
     grid = np.linspace(0.1, 10.0, 2000)
     assert f(s_star) >= f(grid).max() - 1e-9
 

@@ -1,7 +1,6 @@
 """Ad-hoc + ARMA baseline estimators (paper §V.B)."""
 
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import predictors

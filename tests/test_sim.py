@@ -1,7 +1,5 @@
 """End-to-end behaviour of the §V testbed."""
 
-import dataclasses
-
 import numpy as np
 import pytest
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.controller import ControllerConfig
-from repro.core.types import BillingParams, ControlParams
+from repro.core.types import ControlParams
 from repro.sim import SimConfig, paper_schedule, run
 from repro.sim.runner import total_cost
 
