@@ -9,7 +9,9 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.kalman_update.ops import kalman_update, resolve_interpret
 from repro.kernels.kalman_update.ref import kalman_fused_ref
 from repro.models.attention import AttnSpec, flash_attention
 from repro.models.ssm import ssd_chunked
@@ -60,3 +62,16 @@ def main(emit) -> None:
     us = _bench(fused, b_hat, pi, meas, mask)
     emit("kern_kalman_1M_us", us,
          f"estimators_per_s={w * kk / us * 1e6 / 1e9:.2f}B")
+
+    # Pallas kernel vs the jnp reference: platform-aware interpret mode
+    # (compiled on TPU, emulated here), correctness delta + timing.
+    pallas = jax.jit(lambda *a: kalman_update(*a))
+    us_p = _bench(pallas, b_hat, pi, meas, mask)
+    b_p, pi_p = pallas(b_hat, pi, meas, mask)
+    b_r, pi_r = fused(b_hat, pi, meas, mask)
+    delta = max(float(np.abs(np.asarray(b_p) - np.asarray(b_r)).max()),
+                float(np.abs(np.asarray(pi_p) - np.asarray(pi_r)).max()))
+    emit("kern_kalman_pallas_1M_us", us_p,
+         f"max_abs_delta_vs_ref={delta:.3g};"
+         f"interpret={resolve_interpret(None)};"
+         f"speedup_vs_ref={us / us_p:.2f}x")

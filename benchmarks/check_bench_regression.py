@@ -1,9 +1,11 @@
-"""CI benchmark-regression gate for the spot/bidding benchmarks.
+"""CI benchmark-regression gate for the spot/bidding/throughput benchmarks.
 
-Compares the ``results/BENCH_spot.json`` a CI run just produced (via
-``bench_bidding --smoke``) against the committed baseline in
-``benchmarks/baselines/BENCH_spot.json`` and fails the job when the
-trajectory regresses:
+Compares the JSON a CI run just produced against the committed baseline in
+``benchmarks/baselines/`` and fails the job when the trajectory regresses.
+The report's ``kind`` field picks the rule set (missing = the original
+spot/bidding report).
+
+``BENCH_spot.json`` (``bench_bidding --smoke``):
 
   * the AIMD-vs-Reactive headline saving drops below the paper's 27%
     floor (hard threshold, independent of the baseline);
@@ -13,11 +15,26 @@ trajectory regresses:
   * a best-policy cost inflates beyond ``COST_TOLERANCE`` x baseline
     (loose on purpose: CI floats drift, regressions explode).
 
+``BENCH_throughput.json`` (``bench_throughput --smoke``):
+
+  * the summary-mode acceptance flag flips (summary mode no longer shows
+    ≥5× lower bytes or ≥3× the runs/sec of trace mode — hard floors,
+    baseline-independent);
+  * a deterministic byte count (returned bytes per grid) grows beyond
+    ``BYTES_TOLERANCE`` × baseline — the scan carry picked up per-tick
+    payload again;
+  * summary-mode runs/sec falls below baseline / ``SPEED_TOLERANCE``
+    (very loose: CI machines differ by a few x, order-of-magnitude
+    cliffs — e.g. a reintroduced per-chunk recompile — don't).
+
 Exit code 0 = gate passed.  Anything else fails the job; the JSON is
 uploaded as an artifact either way so the trajectory stays inspectable.
 
 CLI:  python benchmarks/check_bench_regression.py \
           results/BENCH_spot.json benchmarks/baselines/BENCH_spot.json
+      python benchmarks/check_bench_regression.py \
+          results/BENCH_throughput.json \
+          benchmarks/baselines/BENCH_throughput.json
 """
 
 from __future__ import annotations
@@ -28,6 +45,10 @@ import sys
 
 SAVING_FLOOR_PCT = 27.0
 COST_TOLERANCE = 1.5
+BYTES_TOLERANCE = 1.05
+# Wall-clock only catches order-of-magnitude cliffs (e.g. a per-chunk
+# recompile): CI runner generations legitimately differ by a few x.
+SPEED_TOLERANCE = 5.0
 
 
 def check(current: dict, baseline: dict) -> list[str]:
@@ -87,10 +108,58 @@ def check(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_throughput(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: throughput`` report (empty = pass)."""
+    errors: list[str] = []
+
+    if current.get("schema_version") != baseline.get("schema_version"):
+        errors.append(
+            f"schema_version mismatch: current {current.get('schema_version')} "
+            f"vs baseline {baseline.get('schema_version')}"
+        )
+        return errors
+    if bool(current.get("smoke")) != bool(baseline.get("smoke")):
+        errors.append(
+            "smoke flag mismatch: gate must compare like with like "
+            f"(current smoke={current.get('smoke')}, "
+            f"baseline smoke={baseline.get('smoke')})"
+        )
+        return errors
+
+    if not current.get("acceptance", {}).get("summary_mode_ok"):
+        errors.append(
+            "acceptance flag summary_mode_ok is false: summary mode no "
+            "longer beats trace mode on memory or throughput"
+        )
+
+    for grid, base_grid in baseline.get("grids", {}).items():
+        cur_grid = current.get("grids", {}).get(grid)
+        if cur_grid is None:
+            errors.append(f"grids[{grid}] missing from current results")
+            continue
+        cur_b = cur_grid.get("summary", {}).get("output_bytes")
+        base_b = base_grid.get("summary", {}).get("output_bytes")
+        if cur_b is not None and base_b and cur_b > BYTES_TOLERANCE * base_b:
+            errors.append(
+                f"grids[{grid}] summary output bytes grew: {cur_b} > "
+                f"{BYTES_TOLERANCE}x baseline {base_b} — the summary scan "
+                "is emitting per-tick payload again"
+            )
+        cur_r = cur_grid.get("summary", {}).get("runs_per_s")
+        base_r = base_grid.get("summary", {}).get("runs_per_s")
+        if cur_r is not None and base_r and \
+                cur_r < base_r / SPEED_TOLERANCE:
+            errors.append(
+                f"grids[{grid}] summary runs/sec collapsed: {cur_r} < "
+                f"baseline {base_r} / {SPEED_TOLERANCE}"
+            )
+    return errors
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="BENCH_spot.json produced by this run")
-    ap.add_argument("baseline", help="committed baseline BENCH_spot.json")
+    ap.add_argument("current", help="benchmark JSON produced by this run")
+    ap.add_argument("baseline", help="committed baseline JSON")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -98,14 +167,30 @@ def main(argv: list[str] | None = None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    errors = check(current, baseline)
-    saving = current.get("headline", {}).get("saving_pct", float("nan"))
-    accepted = current.get("acceptance", {}).get("dynamic_beats_static")
-    print(
-        f"bench gate: saving={saving:.1f}% "
-        f"(floor {SAVING_FLOOR_PCT}%), "
-        f"dynamic_beats_static={accepted}"
-    )
+    kind_cur = current.get("kind", "spot")
+    kind_base = baseline.get("kind", "spot")
+    if kind_cur != kind_base:
+        print(f"REGRESSION: report kind mismatch: current {kind_cur!r} vs "
+              f"baseline {kind_base!r}", file=sys.stderr)
+        return 1
+
+    if kind_cur == "throughput":
+        errors = check_throughput(current, baseline)
+        front = current.get("grids", {}).get("frontier", {})
+        print(
+            f"bench gate [throughput]: memory_ratio={front.get('memory_ratio')} "
+            f"speed_ratio={front.get('speed_ratio')} "
+            f"summary_mode_ok={current.get('acceptance', {}).get('summary_mode_ok')}"
+        )
+    else:
+        errors = check(current, baseline)
+        saving = current.get("headline", {}).get("saving_pct", float("nan"))
+        accepted = current.get("acceptance", {}).get("dynamic_beats_static")
+        print(
+            f"bench gate: saving={saving:.1f}% "
+            f"(floor {SAVING_FLOOR_PCT}%), "
+            f"dynamic_beats_static={accepted}"
+        )
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)

@@ -11,6 +11,8 @@ artifact; ``derived`` packs the secondary columns).
   bench_roofline     -> §Roofline summary over the dry-run sweep
   bench_spot         -> Appendix A (spot market: headline saving, bid sweep,
                         instance-granularity frontier)
+  bench_throughput   -> sweep-engine throughput: summary vs trace mode,
+                        chunked 100x grid (BENCH_throughput.json)
 """
 
 import sys
@@ -21,7 +23,7 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from . import (bench_convergence, bench_cost, bench_kernels,
                    bench_lambda, bench_prediction, bench_roofline,
-                   bench_spot)
+                   bench_spot, bench_throughput)
     suites = {
         "prediction": bench_prediction,
         "convergence": bench_convergence,
@@ -30,6 +32,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "roofline": bench_roofline,
         "spot": bench_spot,
+        "throughput": bench_throughput,
     }
     print("name,value,derived")
 

@@ -47,10 +47,24 @@ class ControllerConfig:
     # AIMD base: 'committed' (booting+active; avoids double-request during
     # boot) or 'active' (paper-literal eq. 2).
     aimd_base: str = "committed"
+    # Route the Kalman bank's fused eqs. 6-9 update through the Pallas
+    # kernel (``repro.kernels.kalman_update``): compiled on TPU,
+    # interpreter-emulated elsewhere, bit-comparable to ``kalman.step``.
+    # Off by default — vmapped sweeps keep the plain jnp path.
+    kalman_kernel: bool = False
 
     def __post_init__(self):
-        assert self.predictor in PREDICTORS, self.predictor
-        assert self.policy in POLICIES, self.policy
+        # ValueError (not assert) so a misconfigured controller fails
+        # identically under ``python -O`` — same path as SpotConfig.
+        if self.predictor not in PREDICTORS:
+            raise ValueError(f"unknown predictor {self.predictor!r}; "
+                             f"choose one of {PREDICTORS}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"choose one of {POLICIES}")
+        if self.aimd_base not in ("committed", "active"):
+            raise ValueError(f"unknown aimd_base {self.aimd_base!r}; "
+                             "choose 'committed' or 'active'")
 
 
 class ControllerState(NamedTuple):
@@ -109,7 +123,8 @@ def step(state: ControllerState,
 
     # -- 1. predictor update ------------------------------------------------
     if cfg.predictor == "kalman":
-        kf = kalman.step(state.kf, b_meas, meas_mask, p)
+        kf = kalman.step(state.kf, b_meas, meas_mask, p,
+                         use_kernel=cfg.kalman_kernel)
         arma = state.arma
         b_hat, reliable = kf.b_hat, kf.reliable
     elif cfg.predictor == "adhoc":

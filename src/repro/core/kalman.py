@@ -34,7 +34,8 @@ def init(w: int, k: int, dtype=jnp.float32) -> KalmanState:
 def step(state: KalmanState,
          b_meas: jnp.ndarray,
          meas_mask: jnp.ndarray,
-         params: ControlParams) -> KalmanState:
+         params: ControlParams,
+         use_kernel: bool = False) -> KalmanState:
     """One monitoring-instant update for every (w, k) filter.
 
     Args:
@@ -42,6 +43,9 @@ def step(state: KalmanState,
       b_meas:     (W, K) new CUS measurements b̃_{w,k}[t] (junk where unmasked).
       meas_mask:  (W, K) bool — True where a fresh measurement exists this tick.
       params:     σ_z², σ_v².
+      use_kernel: route the fused eqs. 6-9 masked update through the Pallas
+                  kernel (``repro.kernels.kalman_update``) — bit-comparable
+                  to the jnp path; compiled on TPU, interpreted elsewhere.
 
     Filters with no fresh measurement keep their state unchanged (their clock
     only advances on measurement arrival, matching the platform: a type that
@@ -54,17 +58,25 @@ def step(state: KalmanState,
     b_hat0 = jnp.where(first, b_meas, state.b_hat)
     prev_meas0 = jnp.where(first, b_meas, state.b_meas_prev)
 
-    # Time update (eqs. 6-7).
-    pi_minus = state.pi + params.sigma_z2
-    kappa = pi_minus / (pi_minus + params.sigma_v2)
-
-    # Measurement update (eqs. 8-9) — note eq. 8 uses the *lagged* measurement.
-    b_hat_new = b_hat0 + kappa * (prev_meas0 - b_hat0)
-    pi_new = (1.0 - kappa) * pi_minus
-
     upd = meas_mask & state.has_meas          # regular (non-bootstrap) update
-    b_hat = jnp.where(upd, b_hat_new, b_hat0)
-    pi = jnp.where(upd, pi_new, state.pi)
+    if use_kernel:
+        # One fused HBM pass: eqs. 6-9 plus the ``where(upd, ...)`` blend.
+        from ..kernels.kalman_update.ops import kalman_update
+
+        b_hat, pi = kalman_update(b_hat0, state.pi, prev_meas0, upd,
+                                  float(params.sigma_z2),
+                                  float(params.sigma_v2))
+    else:
+        # Time update (eqs. 6-7).
+        pi_minus = state.pi + params.sigma_z2
+        kappa = pi_minus / (pi_minus + params.sigma_v2)
+
+        # Measurement update (eqs. 8-9) — eq. 8 uses the *lagged* measurement.
+        b_hat_new = b_hat0 + kappa * (prev_meas0 - b_hat0)
+        pi_new = (1.0 - kappa) * pi_minus
+
+        b_hat = jnp.where(upd, b_hat_new, b_hat0)
+        pi = jnp.where(upd, pi_new, state.pi)
     b_meas_prev = jnp.where(meas_mask, b_meas, prev_meas0)
     has_meas = state.has_meas | meas_mask
 

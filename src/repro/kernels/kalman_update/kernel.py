@@ -20,6 +20,14 @@ from jax.experimental import pallas as pl
 BLOCK_R, BLOCK_C = 256, 128
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Platform-aware default: compile the kernel for real on TPU, run the
+    Pallas interpreter (plain XLA ops — jittable, scannable) elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def _kalman_kernel(b_ref, pi_ref, meas_ref, mask_ref, b_out, pi_out,
                    *, sigma_z2: float, sigma_v2: float):
     b = b_ref[...]
@@ -38,11 +46,22 @@ def _kalman_kernel(b_ref, pi_ref, meas_ref, mask_ref, b_out, pi_out,
 
 def kalman_fused(b_hat, pi, b_meas_prev, mask,
                  sigma_z2: float, sigma_v2: float,
-                 interpret: bool = True):
-    """All inputs (W, K) f32; mask int8/bool.  Returns (b_hat', pi')."""
+                 interpret: bool | None = None):
+    """All inputs (W, K) f32; mask int8/bool.  Returns (b_hat', pi').
+
+    ``interpret=None`` resolves platform-aware: compiled on TPU, emulated
+    elsewhere (the interpreter lowers to plain XLA ops, so it jits and
+    scans fine on CPU).
+    """
+    interpret = resolve_interpret(interpret)
     w, k = b_hat.shape
     br, bc = min(BLOCK_R, w), min(BLOCK_C, k)
-    assert w % br == 0 and k % bc == 0, (w, k)
+    if w % br != 0 or k % bc != 0:
+        # ValueError, not assert: under ``python -O`` a stripped assert
+        # would let a partial grid silently skip the trailing rows.
+        raise ValueError(
+            f"kalman_fused needs (W, K)=({w}, {k}) divisible by the "
+            f"({br}, {bc}) block — pad the filter bank to a multiple")
     kernel = functools.partial(_kalman_kernel, sigma_z2=sigma_z2,
                                sigma_v2=sigma_v2)
     grid = (w // br, k // bc)

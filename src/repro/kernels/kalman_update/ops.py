@@ -1,4 +1,11 @@
-"""Jit'd wrapper for the fused Kalman fleet update."""
+"""Jit'd wrapper for the fused Kalman fleet update.
+
+``interpret`` defaults to *platform-aware* (None): the Pallas kernel is
+compiled for real on TPU and emulated with the interpreter everywhere else
+(CPU CI, tests) — callers no longer have to remember that the previous
+hard-coded ``interpret=True`` silently ran the emulator even under jit on
+TPU hosts.
+"""
 
 from __future__ import annotations
 
@@ -7,12 +14,15 @@ import functools
 import jax
 
 from .kernel import kalman_fused as _kernel
+from .kernel import resolve_interpret
+
+__all__ = ["kalman_update", "resolve_interpret"]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("sigma_z2", "sigma_v2", "interpret"))
 def kalman_update(b_hat, pi, b_meas_prev, mask,
                   sigma_z2: float = 0.5, sigma_v2: float = 0.5,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     return _kernel(b_hat, pi, b_meas_prev, mask, sigma_z2, sigma_v2,
-                   interpret=interpret)
+                   interpret=resolve_interpret(interpret))

@@ -21,7 +21,8 @@ the cheapest-per-CU type currently available under the bid policy.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import hashlib
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,31 @@ class SimConfig:
         return self.ctrl.params.monitor_dt
 
 
+class SummaryCarry(NamedTuple):
+    """Per-run summary registers, accumulated *inside* the scan carry.
+
+    These are the scalars ``sim.sweep.summarize`` reads out, maintained
+    online so a sweep never has to materialize the O(T·W·K) per-tick trace:
+    a B-point grid moves O(B) floats instead of O(B·T·W·K).  ``cum_cost``
+    and ``n_preempt`` already live in ``ClusterState``; everything else the
+    old trace-mode summary recomputed from ``ys`` is registered here.
+    """
+
+    max_committed: jnp.ndarray  # () running max of control-plane CUs
+    price_sum: jnp.ndarray      # () Σ_t spot price of the primary type
+    price_max: jnp.ndarray      # () running max of that price
+    cost_at_done: jnp.ndarray   # () cum_cost registered on the tick *after*
+                                #    the latest completion so far — at the
+                                #    end of the run this is exactly
+                                #    ``cum_cost[t_end + 1]`` of the trace
+
+
+def summary_init() -> SummaryCarry:
+    z = jnp.asarray(0.0, jnp.float32)
+    return SummaryCarry(max_committed=z, price_sum=z, price_max=z,
+                        cost_at_done=z)
+
+
 class SimState(NamedTuple):
     c: ctrl.ControllerState
     work: WorkloadState
@@ -64,6 +90,7 @@ class SimState(NamedTuple):
     key: jax.Array
     t: jnp.ndarray          # () tick counter
     spot: spot_lib.SpotState
+    summ: SummaryCarry
 
 
 class SimTrace(NamedTuple):
@@ -131,7 +158,17 @@ def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
             exec_time[:, None], items_done[:, None], util, done_acc_new)
 
 
-def make_step(schedule: wl.Schedule, cfg: SimConfig):
+def make_step(schedule: wl.Schedule, cfg: SimConfig, trace: bool = True
+              ) -> Callable:
+    """One monitoring instant as a ``lax.scan`` step.
+
+    ``trace=True`` emits the full per-tick ``ys`` dict (six (T,) series plus
+    three (T, W, K) arrays once stacked) — what ``run`` and the plotting
+    helpers consume.  ``trace=False`` emits nothing: the summary statistics
+    accumulate in ``SimState.summ`` and the scan is ``ys``-free, which is
+    what lets ``sim.sweep`` batch 10⁴–10⁵-point grids without streaming
+    O(B·T·W·K) floats through memory.
+    """
     sched = schedule.as_jax()
     use_spot = cfg.spot.enabled
 
@@ -228,10 +265,33 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
         # weights before reporting control-plane sizes.
         out_cores = (spot_lib.CORES_TABLE[cluster.itype] if use_spot
                      else cores)
+        n_committed = billing_lib.committed(cluster, out_cores)
+        spot_price = (spot_state.price if use_spot
+                      else jnp.asarray(cfg.ctrl.billing.price_per_quantum,
+                                       jnp.float32))
+
+        # Summary registers (see SummaryCarry).  The cost register fires on
+        # the tick *after* the latest completion so far — the trace index
+        # ``cost_at_completion`` reads — and is overwritten whenever a later
+        # completion moves that endpoint.
+        summ = SummaryCarry(
+            max_committed=jnp.maximum(state.summ.max_committed, n_committed),
+            price_sum=state.summ.price_sum + spot_price,
+            price_max=jnp.maximum(state.summ.price_max, spot_price),
+            cost_at_done=jnp.where(jnp.max(work.t_done) == t - 1,
+                                   cluster.cum_cost,
+                                   state.summ.cost_at_done),
+        )
+
+        new_state = SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
+                             done_acc=done_acc, key=key, t=t + 1,
+                             spot=spot_state, summ=summ)
+        if not trace:
+            return new_state, None
         out = dict(
             cum_cost=cluster.cum_cost,
             n_usable=billing_lib.usable(cluster, out_cores),
-            n_committed=billing_lib.committed(cluster, out_cores),
+            n_committed=n_committed,
             n_star=dec.n_star,
             n_target=dec.n_target,
             util=util,
@@ -241,16 +301,12 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig):
             confirmed=work.confirmed,
             active=work.active,
             remaining=jnp.sum(work.m, -1),
-            spot_price=(spot_state.price if use_spot
-                        else jnp.asarray(cfg.ctrl.billing.price_per_quantum,
-                                         jnp.float32)),
+            spot_price=spot_price,
             spot_bid=(bids[spot_state.rt.itype] if use_spot
                       else jnp.asarray(jnp.inf, jnp.float32)),
             n_preempted=cluster.n_preempt,
         )
-        return SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
-                        done_acc=done_acc, key=key, t=t + 1,
-                        spot=spot_state), out
+        return new_state, out
 
     return step
 
@@ -311,21 +367,76 @@ def init_state(schedule: wl.Schedule, cfg: SimConfig,
         key=jax.random.PRNGKey(seed),
         t=jnp.asarray(0),
         spot=spot_state,
+        summ=summary_init(),
     )
 
 
 def scan_run(schedule: wl.Schedule, cfg: SimConfig,
              seed: jnp.ndarray | int | None = None,
-             spot_rt: spot_lib.SpotRuntime | None = None):
+             spot_rt: spot_lib.SpotRuntime | None = None,
+             trace: bool = True):
     """The raw jittable simulation: (final state, per-tick outputs).
 
     No ``jax.jit`` inside — callers decide the compilation boundary, which
     lets ``sim.sweep`` vmap this whole function over batched seeds, bids
-    and granularities in a single compile.
+    and granularities in a single compile.  With ``trace=False`` the scan
+    emits no per-tick outputs (``ys`` is None): the run summary lives in
+    the final state's ``summ`` carry — the memory-lean mode sweeps use.
     """
-    step = make_step(schedule, cfg)
+    step = make_step(schedule, cfg, trace=trace)
     state = init_state(schedule, cfg, seed=seed, spot_rt=spot_rt)
     return jax.lax.scan(step, state, None, length=cfg.ticks)
+
+
+# --------------------------------------------------------------------------
+# Cached compilation: ``run``/``run_single`` used to build and jit a fresh
+# closure per call, recompiling the whole simulation across repeated
+# benchmark invocations.  The entry points below key one compiled callable
+# on (schedule contents, static config, trace mode, runtime structure) and
+# reuse it for every seed / SpotRuntime.
+
+_JIT_CACHE: dict = {}
+_JIT_CACHE_MAX = 128
+
+
+def _schedule_key(schedule: wl.Schedule) -> tuple:
+    """Hashable digest of a (numpy, frozen-dataclass) Schedule."""
+    h = hashlib.sha256()
+    shapes = []
+    for f in dataclasses.fields(schedule):
+        arr = getattr(schedule, f.name)
+        h.update(arr.tobytes())
+        shapes.append((f.name, str(arr.dtype), arr.shape))
+    return (tuple(shapes), h.hexdigest())
+
+
+def _cache_put(key, fn) -> None:
+    """Insert with LRU-ish eviction so a long-lived process iterating over
+    many schedules/configs cannot grow the cache without bound."""
+    if len(_JIT_CACHE) >= _JIT_CACHE_MAX:
+        _JIT_CACHE.pop(next(iter(_JIT_CACHE)))
+    _JIT_CACHE[key] = fn
+
+
+def cached_scan(schedule: wl.Schedule, cfg: SimConfig, trace: bool,
+                with_rt: bool) -> Callable:
+    """The jitted ``scan_run`` entry point for this (schedule, cfg, mode).
+
+    ``with_rt=True`` returns ``f(seed, spot_rt)``; otherwise ``f(seed)``.
+    Compiled once per key and reused — repeated benchmark invocations pay
+    tracing/compilation exactly once.
+    """
+    key = (_schedule_key(schedule), cfg, bool(trace), bool(with_rt))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        if with_rt:
+            fn = jax.jit(lambda seed, rt: scan_run(
+                schedule, cfg, seed=seed, spot_rt=rt, trace=trace))
+        else:
+            fn = jax.jit(lambda seed: scan_run(
+                schedule, cfg, seed=seed, trace=trace))
+        _cache_put(key, fn)
+    return fn
 
 
 def cost_at_completion(work_final: WorkloadState, cum_cost: jnp.ndarray
@@ -360,9 +471,12 @@ def count_violations(work_final: WorkloadState, schedule: wl.Schedule,
 def run(schedule: wl.Schedule, cfg: SimConfig,
         seed: int | None = None,
         spot_rt: spot_lib.SpotRuntime | None = None) -> SimTrace:
-    final, ys = jax.jit(
-        lambda s: scan_run(schedule, cfg, seed=s, spot_rt=spot_rt)
-    )(cfg.seed if seed is None else seed)
+    s = cfg.seed if seed is None else seed
+    if spot_rt is None:
+        final, ys = cached_scan(schedule, cfg, trace=True, with_rt=False)(s)
+    else:
+        final, ys = cached_scan(schedule, cfg, trace=True,
+                                with_rt=True)(s, spot_rt)
 
     violations = count_violations(final.work, schedule, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,

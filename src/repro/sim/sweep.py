@@ -8,6 +8,19 @@ compile, one device dispatch, every grid point in parallel.  A
 3 × 5 × 4 × 2 grid of full 130-tick experiments costs about as much
 wall-clock as three sequential runs.
 
+Sweeps run the scan in **summary mode** (``runner.scan_run(trace=False)``):
+the eight per-run scalars accumulate inside the scan carry and the scan
+emits no per-tick outputs, so a B-point grid moves O(B) floats instead of
+the O(B·T·W·K) a stacked trace would — which is what makes 10⁴–10⁵-point
+grids affordable on one host.  Two scaling knobs on ``run_sweep``:
+
+  * ``chunk_size`` — micro-batch the B axis: every chunk is padded to the
+    same shape and pushed through one cached, donated-buffer compiled
+    callable (one compile for any grid size, bounded live memory);
+  * device sharding — with more than one local device the B axis is padded
+    to a device multiple and ``pmap``-sharded, each device vmapping its
+    shard (``devices=1`` forces single-device; the default uses all).
+
 Axes:
   * ``seed``      — Monte-Carlo replication (market + execution noise);
   * ``bid_mult``  — bid as a multiple of the base spot price (the 'ema'
@@ -23,7 +36,7 @@ Axes:
                     m3.medium vs few m4.10xlarge); a wider mask lets every
                     acquisition pick the cheapest-per-CU available type.
 
-Summaries are per-run scalars, so the vmapped output is a struct of
+Summaries are per-run scalars, so the sweep output is a struct of
 (B,)-shaped arrays — ready for the policy/granularity frontier plots in
 ``benchmarks.bench_spot`` and ``benchmarks.bench_bidding``.
 """
@@ -66,9 +79,50 @@ class RunSummary(NamedTuple):
     max_price: jnp.ndarray     # worst $/quantum seen (primary type)
 
 
-def summarize(final, ys, schedule: wl.Schedule,
+def summarize(final, schedule: wl.Schedule,
               cfg: runner.SimConfig) -> RunSummary:
-    """Collapse one run's scan outputs to scalars, jnp-pure (vmappable)."""
+    """Read one run's summary out of the final scan carry, jnp-pure.
+
+    Every statistic was accumulated inside the scan (``runner.SummaryCarry``
+    plus the cost/preemption registers ``ClusterState`` already carries), so
+    this needs no per-tick trace — it is the read-out both trace- and
+    summary-mode runs share, which is what makes the two modes bit-identical
+    by construction.
+    """
+    work = final.work
+    submitted = work.t_submit >= 0
+    finished = work.t_done >= 0
+    unfinished = jnp.any(submitted & ~finished)
+    t_end = jnp.max(work.t_done)
+    # ``cost_at_done`` is the trace's ``cum_cost[t_end + 1]``; the register
+    # never fired when nothing finished, a completion landed on the last
+    # tick, or submitted work is still running — all cases the trace-mode
+    # ``cost_at_completion`` resolves to the full-horizon bill.
+    use_horizon = unfinished | (t_end < 0) | (t_end + 1 > cfg.ticks - 1)
+    cost = jnp.where(use_horizon, final.cluster.cum_cost,
+                     final.summ.cost_at_done)
+    return RunSummary(
+        cost=cost,
+        cost_horizon=final.cluster.cum_cost,
+        violations=runner.count_violations(work, schedule, cfg),
+        preemptions=final.cluster.n_preempt,
+        finished=jnp.sum(finished.astype(jnp.int32)),
+        max_committed=final.summ.max_committed,
+        mean_price=final.summ.price_sum / cfg.ticks,
+        max_price=final.summ.price_max,
+    )
+
+
+def summarize_trace(final, ys, schedule: wl.Schedule,
+                    cfg: runner.SimConfig) -> RunSummary:
+    """Collapse a *trace-mode* run's stacked scan outputs to scalars.
+
+    The pre-summary-mode implementation, kept as the independent reference
+    the carry registers are tested against (``tests/test_throughput.py``).
+    ``mean_price`` is the only field whose reduction order differs from the
+    in-carry accumulation (parallel vs sequential float sum); everything
+    else is bit-identical.
+    """
     work = final.work
     finished = work.t_done >= 0
     return RunSummary(
@@ -129,16 +183,10 @@ def make_axes(seeds: Sequence[int],
                      mix=jnp.asarray(mix, jnp.float32))
 
 
-def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
-              axes: SweepAxes) -> RunSummary:
-    """Every grid point as one jitted ``vmap`` of the full simulation.
-
-    The *axes* choose each run's fleet mix, bid policy and bid multiple;
-    ``cfg.spot.instance``/``fleet``/``bid_mult`` are not consulted (they
-    only apply to single, non-swept runs).  ``cfg.spot.bid_policy`` *is*
-    the policy of every grid point whose ``policy`` axis is the -1
-    sentinel (the ``make_axes`` default)."""
-    assert cfg.spot.enabled, "run_sweep needs SimConfig.spot.enabled=True"
+def _check_axes(cfg: runner.SimConfig, axes: SweepAxes) -> None:
+    """Shared run_sweep input validation."""
+    if not cfg.spot.enabled:
+        raise ValueError("run_sweep needs SimConfig.spot.enabled=True")
     # Guard a silent trap: a config that names a non-default instance while
     # the axes (which win) never visit it almost certainly means make_axes
     # was left at its m3.medium default.
@@ -148,17 +196,134 @@ def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
             f"SpotConfig.instance={cfg.spot.instance!r} never appears in "
             "the sweep axes, which override the config — pass "
             "instances=[...] to make_axes")
+
+
+def point_fn(schedule: wl.Schedule, cfg: runner.SimConfig,
+             trace: bool = False):
+    """One grid point as a vmappable closure of (seed, bid_mult, itype,
+    policy, mix) — the single definition of what a sweep runs per point
+    (policy-sentinel resolution, runtime construction, scan, summary).
+    ``trace=True`` additionally returns the per-tick ``ys`` (what
+    ``benchmarks.bench_throughput`` sizes the trace-mode baseline with)."""
     cfg_policy = spot.bid_policy_index(cfg.spot.bid_policy)
 
     def one(seed, bid_mult, itype, policy, mix):
         policy = jnp.where(policy < 0, cfg_policy, policy)
         rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                                policy=policy, mix=mix)
-        final, ys = runner.scan_run(schedule, cfg, seed=seed, spot_rt=rt)
-        return summarize(final, ys, schedule, cfg)
+        final, ys = runner.scan_run(schedule, cfg, seed=seed, spot_rt=rt,
+                                    trace=trace)
+        summary = summarize(final, schedule, cfg)
+        return (summary, ys) if trace else summary
 
-    return jax.jit(jax.vmap(one))(axes.seed, axes.bid_mult, axes.itype,
-                                  axes.policy, axes.mix)
+    return one
+
+
+def _sweep_callable(schedule: wl.Schedule, cfg: runner.SimConfig,
+                    n_dev: int, donate: bool = False):
+    """Cached compiled sweep over a fixed-shape batch of axes.
+
+    One entry per (schedule, cfg, device count, donation): chunked sweeps
+    reuse it for every micro-batch, so a 10⁵-point grid compiles exactly
+    once.  With ``donate=True`` the axis buffers are donated — each chunk's
+    inputs are freed the moment the device is done with them (the chunked
+    path passes per-chunk copies, never the caller's arrays; donation is a
+    no-op on CPU, where XLA ignores it, so it is requested only on
+    accelerator backends).  With ``n_dev > 1`` the leading axis is the
+    device axis (``pmap``), each device vmapping its shard.
+    """
+    donate = donate and jax.default_backend() != "cpu"
+    key = ("sweep", runner._schedule_key(schedule), cfg, n_dev, donate)
+    fn = runner._JIT_CACHE.get(key)
+    if fn is not None:
+        return fn
+    batched = jax.vmap(point_fn(schedule, cfg))
+    donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4)) if donate else {}
+    if n_dev > 1:
+        fn = jax.pmap(batched, **donate_kw)
+    else:
+        fn = jax.jit(batched, **donate_kw)
+    runner._cache_put(key, fn)
+    return fn
+
+
+def _pad_axes(axes: SweepAxes, n: int) -> SweepAxes:
+    """Pad the B axis up to ``n`` rows by repeating the last row (the
+    padded results are sliced off before returning)."""
+    b = axes.seed.shape[0]
+    if b == n:
+        return axes
+    pad = [(0, n - b)]
+    return SweepAxes(
+        seed=jnp.pad(axes.seed, pad, mode="edge"),
+        bid_mult=jnp.pad(axes.bid_mult, pad, mode="edge"),
+        itype=jnp.pad(axes.itype, pad, mode="edge"),
+        policy=jnp.pad(axes.policy, pad, mode="edge"),
+        mix=jnp.pad(axes.mix, pad + [(0, 0)], mode="edge"),
+    )
+
+
+def _slice_axes(axes: SweepAxes, lo: int, hi: int) -> SweepAxes:
+    # Fresh copies, never views of the caller's arrays: the chunked path
+    # donates its input buffers to the compiled sweep.
+    return SweepAxes(*(jnp.array(f[lo:hi], copy=True) for f in axes))
+
+
+def _device_fold(axes: SweepAxes, n_dev: int) -> SweepAxes:
+    """(B,) → (n_dev, B // n_dev) leading device axis for pmap."""
+    return SweepAxes(*(f.reshape((n_dev, f.shape[0] // n_dev)
+                                 + f.shape[1:]) for f in axes))
+
+
+def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
+              axes: SweepAxes,
+              chunk_size: int | None = None,
+              devices: int | None = None) -> RunSummary:
+    """Every grid point of the axes, summary-mode, sharded and chunked.
+
+    The *axes* choose each run's fleet mix, bid policy and bid multiple;
+    ``cfg.spot.instance``/``fleet``/``bid_mult`` are not consulted (they
+    only apply to single, non-swept runs).  ``cfg.spot.bid_policy`` *is*
+    the policy of every grid point whose ``policy`` axis is the -1
+    sentinel (the ``make_axes`` default).
+
+    ``chunk_size`` bounds the live batch: the grid is processed in
+    micro-batches of that many runs, every chunk padded to the same shape
+    so one cached compiled callable (donated input buffers) serves them
+    all — no per-chunk recompiles, results concatenated on host.
+    ``devices`` caps the local devices sharded over (default: all); each
+    chunk is padded to a device multiple and ``pmap``-sharded.
+    """
+    _check_axes(cfg, axes)
+    if chunk_size is not None and int(chunk_size) < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    b = int(axes.seed.shape[0])
+    avail = len(jax.devices())
+    n_dev = avail if devices is None else max(int(devices), 1)
+    n_dev = min(n_dev, avail, b)
+
+    if chunk_size is None and n_dev == 1:
+        return _sweep_callable(schedule, cfg, 1)(*axes)
+
+    chunk = b if chunk_size is None else min(int(chunk_size), b)
+    # Each compiled chunk covers a device multiple of runs.
+    chunk = -(-chunk // n_dev) * n_dev
+    fn = _sweep_callable(schedule, cfg, n_dev, donate=True)
+
+    outs = []
+    for lo in range(0, b, chunk):
+        part = _pad_axes(_slice_axes(axes, lo, min(lo + chunk, b)), chunk)
+        if n_dev > 1:
+            res = fn(*_device_fold(part, n_dev))
+            res = jax.tree.map(
+                lambda x: x.reshape((chunk,) + x.shape[2:]), res)
+        else:
+            res = fn(*part)
+        # Off-device before the next chunk so live bytes stay O(chunk).
+        outs.append(jax.tree.map(np.asarray, res))
+    total = RunSummary(*(np.concatenate([getattr(o, f) for o in outs])[:b]
+                         for f in RunSummary._fields))
+    return jax.tree.map(jnp.asarray, total)
 
 
 def run_single(schedule: wl.Schedule, cfg: runner.SimConfig,
@@ -166,12 +331,14 @@ def run_single(schedule: wl.Schedule, cfg: runner.SimConfig,
                instance: FleetMix = "m3.medium",
                policy: str | int | None = None) -> RunSummary:
     """One grid point as a standalone jitted run — the reference the
-    vmapped sweep is tested against (and a handy debug entry point)."""
+    vmapped sweep is tested against (and a handy debug entry point).
+    Runs through the cached summary-mode entry point: repeated calls with
+    different seeds/bids/mixes reuse one compiled simulation."""
     itype, mask = _as_mix(instance)
     if policy is None:
         policy = spot.bid_policy_index(cfg.spot.bid_policy)
     rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                            policy=policy, mix=jnp.asarray(mask))
-    final, ys = jax.jit(
-        lambda s: runner.scan_run(schedule, cfg, seed=s, spot_rt=rt))(seed)
-    return summarize(final, ys, schedule, cfg)
+    final, _ = runner.cached_scan(schedule, cfg, trace=False,
+                                  with_rt=True)(seed, rt)
+    return summarize(final, schedule, cfg)

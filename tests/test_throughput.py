@@ -1,0 +1,259 @@
+"""Summary-mode scan + sharded/chunked sweep engine (ISSUE 3).
+
+The contract under test: sweeps in summary mode (statistics accumulated in
+the scan carry, no per-tick ``ys``) are bit-identical to what the trace
+produces, chunked/sharded execution changes nothing, trace mode keeps the
+PR-2 schema, and the cached jitted entry points actually cache.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kalman
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import (SimConfig, SpotConfig, make_axes, paper_schedule,
+                       run, run_single, run_sweep, spot)
+from repro.sim import runner, sweep
+
+PARAMS = ControlParams(monitor_dt=300.0)
+BILL = BillingParams(terminate="immediate")
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+
+# mean_price is the one summary field whose reduction order differs between
+# the sequential carry accumulation and the trace's parallel jnp.mean; every
+# other field must match bit for bit.
+EXACT_FIELDS = tuple(f for f in sweep.RunSummary._fields
+                     if f != "mean_price")
+
+
+def _spot_cfg(**kw):
+    return SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+        ticks=130, spot=SpotConfig(enabled=True, **kw))
+
+
+def _trace_summary(cfg, seed, bid_mult, instance="m3.medium", policy=None):
+    """The independent reference: a trace-mode run collapsed after the
+    fact from its stacked per-tick outputs (the pre-refactor semantics)."""
+    itype, mask = sweep._as_mix(instance)
+    if policy is None:
+        policy = spot.bid_policy_index(cfg.spot.bid_policy)
+    rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
+                           policy=policy, mix=jnp.asarray(mask))
+    final, ys = runner.cached_scan(SCHED, cfg, trace=True,
+                                   with_rt=True)(seed, rt)
+    return sweep.summarize_trace(final, ys, SCHED, cfg)
+
+
+# ------------------------------------------------------- summary == trace --
+
+@pytest.mark.parametrize("seed,bid_mult", [(0, 1.02), (1, 1.5), (2, 8.0)])
+def test_summary_carry_bit_identical_to_trace(seed, bid_mult):
+    ref = _trace_summary(_spot_cfg(), seed, bid_mult)
+    got = run_single(SCHED, _spot_cfg(), seed=seed, bid_mult=bid_mult)
+    for f in EXACT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"{f} @ seed={seed} bid={bid_mult}")
+    np.testing.assert_allclose(np.asarray(got.mean_price),
+                               np.asarray(ref.mean_price), rtol=1e-5)
+
+
+def test_summary_matches_trace_across_policies_and_mixes():
+    cfg = _spot_cfg(instance="m3.xlarge", p_spike_per_core=0.02,
+                    spike_hours=3.0)
+    mixes = ["m3.xlarge", ("m3.medium", "m3.xlarge", "m4.4xlarge")]
+    for policy in ("multiple", "ttc", "ema", "on_demand"):
+        for mix in mixes:
+            ref = _trace_summary(cfg, 3, 1.2, instance=mix, policy=policy)
+            got = run_single(SCHED, cfg, seed=3, bid_mult=1.2,
+                             instance=mix, policy=policy)
+            for f in EXACT_FIELDS:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(got, f)),
+                    np.asarray(getattr(ref, f)),
+                    err_msg=f"{f} @ {policy}/{mix}")
+
+
+def test_unfinished_run_bills_to_horizon_in_summary_mode():
+    """The cost register only counts when everything finished — a hopeless
+    bid must still read as a full-horizon bill (trace-mode semantics)."""
+    r = run_single(SCHED, _spot_cfg(), seed=0, bid_mult=0.5)
+    ref = _trace_summary(_spot_cfg(), 0, 0.5)
+    assert int(r.finished) < SCHED.n
+    np.testing.assert_array_equal(np.asarray(r.cost), np.asarray(ref.cost))
+    np.testing.assert_array_equal(np.asarray(r.cost),
+                                  np.asarray(r.cost_horizon))
+
+
+def test_scan_run_summary_mode_emits_no_ys():
+    final, ys = runner.scan_run(SCHED, _spot_cfg(), seed=0, trace=False)
+    assert ys is None
+    assert float(final.summ.max_committed) > 0
+
+
+# --------------------------------------------------- chunking and sharding --
+
+def test_chunked_sweep_equals_unchunked():
+    cfg = _spot_cfg()
+    axes = make_axes(seeds=[0, 1, 2], bid_mults=[1.02, 1.5],
+                     policies=["multiple", "ttc"])   # B = 12
+    whole = run_sweep(SCHED, cfg, axes)
+    for chunk in (5, 4, 12, 64):   # padding, exact, single, oversized
+        parts = run_sweep(SCHED, cfg, axes, chunk_size=chunk)
+        for f in whole._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(whole, f)), np.asarray(getattr(parts, f)),
+                err_msg=f"{f} @ chunk_size={chunk}")
+
+
+def test_explicit_single_device_matches_default():
+    cfg = _spot_cfg()
+    axes = make_axes(seeds=[0, 1], bid_mults=[1.02, 1.5])
+    a = run_sweep(SCHED, cfg, axes)
+    b = run_sweep(SCHED, cfg, axes, devices=1, chunk_size=3)
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_axes_survive_chunked_sweep():
+    """The chunked path donates buffers — but only per-chunk copies; the
+    caller's axes must remain usable for a second sweep."""
+    cfg = _spot_cfg()
+    axes = make_axes(seeds=[0, 1], bid_mults=[1.02])
+    first = run_sweep(SCHED, cfg, axes, chunk_size=1)
+    second = run_sweep(SCHED, cfg, axes, chunk_size=1)
+    np.testing.assert_array_equal(np.asarray(first.cost),
+                                  np.asarray(second.cost))
+
+
+def test_run_sweep_rejects_disabled_spot_with_valueerror():
+    cfg = SimConfig(ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+                    ticks=40)
+    with pytest.raises(ValueError, match="spot.enabled"):
+        run_sweep(SCHED, cfg, make_axes(seeds=[0], bid_mults=[1.5]))
+
+
+def test_run_sweep_rejects_bad_chunk_size_with_valueerror():
+    axes = make_axes(seeds=[0], bid_mults=[1.5])
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="chunk_size"):
+            run_sweep(SCHED, _spot_cfg(), axes, chunk_size=bad)
+
+
+def test_kernel_rejects_unaligned_bank_with_valueerror():
+    from repro.kernels.kalman_update.kernel import kalman_fused
+    x = jnp.zeros((300, 1))   # 300 % 256 != 0: must error, never truncate
+    with pytest.raises(ValueError, match="divisible"):
+        kalman_fused(x, x, x, jnp.ones((300, 1), bool), 0.5, 0.5)
+
+
+# ----------------------------------------------------- trace-mode schema --
+
+def test_trace_mode_schema_unchanged():
+    """``trace=True`` still yields the full PR-2 SimTrace: same fields,
+    same shapes, same dtypes of the per-tick arrays."""
+    cfg = _spot_cfg()
+    tr = run(SCHED, cfg, seed=0)
+    t, w, k = cfg.ticks, SCHED.n, SCHED.m0.shape[1]
+    expected = {
+        "cum_cost": (t,), "n_usable": (t,), "n_committed": (t,),
+        "n_star": (t,), "n_target": (t,), "util": (t,),
+        "b_hat": (t, w, k), "b_meas": (t, w, k), "reliable": (t, w, k),
+        "confirmed": (t, w), "active": (t, w), "remaining": (t, w),
+        "spot_price": (t,), "spot_bid": (t,), "n_preempted": (t,),
+        "t_done": (w,), "violations": (),
+    }
+    for name, shape in expected.items():
+        assert getattr(tr, name).shape == shape, name
+    assert set(runner.SimTrace._fields) == set(expected) | {"work_final"}
+
+
+# --------------------------------------------------------- cached compile --
+
+def test_cached_scan_reuses_compiled_entry():
+    cfg = _spot_cfg()
+    f1 = runner.cached_scan(SCHED, cfg, trace=False, with_rt=True)
+    f2 = runner.cached_scan(SCHED, cfg, trace=False, with_rt=True)
+    assert f1 is f2
+    # A different static config is a different entry.
+    f3 = runner.cached_scan(SCHED, dataclasses.replace(cfg, ticks=131),
+                            trace=False, with_rt=True)
+    assert f3 is not f1
+    # ... and so is a different schedule with the same shapes.
+    other = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=1)
+    f4 = runner.cached_scan(other, cfg, trace=False, with_rt=True)
+    assert f4 is not f1
+
+
+def test_repeated_run_hits_cache(monkeypatch):
+    cfg = _spot_cfg()
+    run(SCHED, cfg, seed=0)          # warm
+    calls = []
+    orig = jax.jit
+
+    def counting_jit(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(jax, "jit", counting_jit)
+    run(SCHED, cfg, seed=1)          # same static key, new seed
+    assert not calls
+
+
+# ------------------------------------------------- controller validation --
+
+def test_controllerconfig_rejects_unknown_predictor_with_valueerror():
+    with pytest.raises(ValueError, match="kalman"):
+        ControllerConfig(predictor="oracle")
+
+
+def test_controllerconfig_rejects_unknown_policy_with_valueerror():
+    with pytest.raises(ValueError, match="aimd"):
+        ControllerConfig(policy="pid")
+
+
+def test_controllerconfig_rejects_unknown_aimd_base_with_valueerror():
+    with pytest.raises(ValueError, match="committed"):
+        ControllerConfig(aimd_base="usable")
+
+
+# ------------------------------------------------------- Pallas predictor --
+
+def test_kalman_step_kernel_bit_identical():
+    w, k = 30, 1
+    key = jax.random.PRNGKey(11)
+    st = kalman.init(w, k)
+    p = ControlParams()
+    for i in range(4):
+        ks = jax.random.split(jax.random.fold_in(key, i), 2)
+        meas = jax.random.normal(ks[0], (w, k)) ** 2 + 0.5
+        mask = jax.random.bernoulli(ks[1], 0.6, (w, k))
+        st_ref = kalman.step(st, meas, mask, p)
+        st_ker = kalman.step(st, meas, mask, p, use_kernel=True)
+        for f in st_ref._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_ker, f)),
+                np.asarray(getattr(st_ref, f)), err_msg=f"{f} @ step {i}")
+        st = st_ref
+
+
+def test_full_run_with_kalman_kernel_matches_default():
+    cfg = _spot_cfg()
+    cfg_k = SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL,
+                              kalman_kernel=True),
+        ticks=130, spot=SpotConfig(enabled=True))
+    a = run(SCHED, cfg, seed=1)
+    b = run(SCHED, cfg_k, seed=1)
+    np.testing.assert_array_equal(np.asarray(a.cum_cost),
+                                  np.asarray(b.cum_cost))
+    np.testing.assert_array_equal(np.asarray(a.b_hat), np.asarray(b.b_hat))
+    np.testing.assert_array_equal(np.asarray(a.reliable),
+                                  np.asarray(b.reliable))
