@@ -1,0 +1,219 @@
+"""Per-scenario cost frontier: the workload world as a sweep axis.
+
+Every earlier result is conditioned on the single deterministic §V.A
+schedule, so the >27% spot-saving headline is a one-scenario claim.  This
+benchmark evaluates the AIMD-vs-Reactive comparison across the stochastic
+scenario families of ``sim.scenarios`` (Poisson, bursty MMPP, diurnal,
+flash-crowd, heavy-tailed Pareto sizes) — each grid point samples its own
+workload world from (seed, scenario) *inside* one jitted
+``run_sweep(ScenarioSet, ...)`` call — and re-runs the paper headline
+through the scenario engine's replay path, asserting the result is
+**bit-for-bit identical** to today's static-schedule path
+(``bench_spot.run_headline``).
+
+Emits ``results/BENCH_scenarios.json`` (``kind: "scenarios"``), gated in
+CI by ``benchmarks/check_bench_regression.py`` against
+``benchmarks/baselines/``: the paper replay must stay exactly equal to the
+legacy path and above the 27% floor, and the AIMD saving must stay
+positive on every stochastic scenario.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_scenarios [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.sim import (
+    ScenarioSet,
+    SimConfig,
+    SpotConfig,
+    default_set,
+    make_axes,
+    paper_schedule,
+    run_sweep,
+)
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim.scenarios import Replay
+
+try:  # package-relative when run via ``-m benchmarks...``; standalone too
+    from . import bench_spot
+    from .common import TTC_FAST
+except ImportError:  # pragma: no cover
+    import bench_spot
+
+    TTC_FAST = 6300.0
+
+SCHEMA_VERSION = 1
+SAVING_FLOOR_PCT = 27.0
+# Scenario-frontier settings: 5-min monitoring over a 60-tick window, the
+# never-preempted bid, m3.medium fleet — isolating the *workload world* as
+# the only thing that changes between grid columns.
+TICKS = 60
+MONITOR_DT = 300.0
+
+
+def _cfg(policy: str) -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(
+            policy=policy,
+            params=ControlParams(monitor_dt=MONITOR_DT),
+            billing=BillingParams(terminate="immediate"),
+        ),
+        ticks=TICKS,
+        spot=SpotConfig(enabled=True, bid_policy="on_demand"),
+    )
+
+
+def run_paper_replay(seeds) -> dict:
+    """The paper headline through the scenario engine's replay path, and
+    the exact-match check against the legacy static-schedule path."""
+    ref = bench_spot.run_headline(seeds=seeds)
+    sched = paper_schedule(ttc=TTC_FAST, arrival_gap_ticks=5)
+    sset = ScenarioSet((Replay(sched, name="paper"),))
+    axes = make_axes(seeds=list(seeds), bid_mults=[1.0], scenarios=sset)
+    out = {}
+    exact = True
+    for policy in ("aimd", "reactive"):
+        # The *same* config builder run_headline used, so the replay and
+        # the legacy path cannot silently desynchronize.
+        cfg = bench_spot._spot_cfg(
+            policy, monitor_dt=60.0, ticks=650, bid_policy="on_demand"
+        )
+        s = run_sweep(sset, cfg, axes)
+        cost = float(np.mean(np.asarray(s.cost)))
+        viol = int(np.sum(np.asarray(s.violations)))
+        same = cost == ref[policy]["cost"] and viol == ref[policy]["violations"]
+        exact = exact and same
+        out[policy] = {"cost": cost, "violations": viol}
+    a, r = out["aimd"]["cost"], out["reactive"]["cost"]
+    return {
+        "aimd_cost": a,
+        "reactive_cost": r,
+        "saving_pct": float(100.0 * (r - a) / r),
+        "aimd_violations": out["aimd"]["violations"],
+        "reactive_violations": out["reactive"]["violations"],
+        "exact_match": bool(exact),
+    }
+
+
+def run_scenario_frontier(seeds) -> dict:
+    """AIMD vs Reactive across every stochastic scenario family — one
+    jitted seeds × scenarios sweep per controller policy."""
+    sset = default_set()
+    axes = make_axes(
+        seeds=list(seeds),
+        bid_mults=[1.0],
+        policies=["on_demand"],
+        scenarios=sset,
+    )
+    shape = (len(list(seeds)), len(sset))
+    per_policy = {}
+    for policy in ("aimd", "reactive"):
+        s = run_sweep(sset, _cfg(policy), axes)
+        per_policy[policy] = {
+            "cost": np.asarray(s.cost).reshape(shape),
+            "violations": np.asarray(s.violations).reshape(shape),
+            "finished": np.asarray(s.finished).reshape(shape),
+            "max_committed": np.asarray(s.max_committed).reshape(shape),
+        }
+    scenarios = {}
+    aimd, reactive = per_policy["aimd"], per_policy["reactive"]
+    for j, name in enumerate(sset.names):
+        a = float(aimd["cost"][:, j].mean())
+        r = float(reactive["cost"][:, j].mean())
+        scenarios[name] = {
+            "aimd_cost": a,
+            "reactive_cost": r,
+            "saving_pct": float(100.0 * (r - a) / r),
+            "aimd_violations": int(aimd["violations"][:, j].sum()),
+            "reactive_violations": int(reactive["violations"][:, j].sum()),
+            "finished": int(aimd["finished"][:, j].sum()),
+            "peak_cus": float(aimd["max_committed"][:, j].max()),
+        }
+    return scenarios
+
+
+def main(emit, smoke: bool = False) -> dict:
+    hl_seeds = (0, 1) if smoke else (0, 1, 2)
+    seeds = tuple(range(2 if smoke else 6))
+
+    paper = run_paper_replay(hl_seeds)
+    emit(
+        "scen_paper_saving_pct",
+        paper["saving_pct"],
+        f"target>={SAVING_FLOOR_PCT};exact={paper['exact_match']}",
+    )
+
+    scenarios = run_scenario_frontier(seeds)
+    for name, sc in scenarios.items():
+        emit(
+            f"scen_{name}_saving_pct",
+            sc["saving_pct"],
+            f"aimd={sc['aimd_cost']:.3f};reactive={sc['reactive_cost']:.3f};"
+            f"aviol={sc['aimd_violations']};rviol={sc['reactive_violations']}",
+        )
+
+    all_positive = all(sc["saving_pct"] > 0.0 for sc in scenarios.values())
+    paper_ok = paper["exact_match"] and paper["saving_pct"] >= SAVING_FLOOR_PCT
+    emit("scen_acceptance_paper_exact", float(paper["exact_match"]), "bool")
+    emit("scen_acceptance_all_savings_positive", float(all_positive), "bool")
+
+    report = {
+        "kind": "scenarios",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "config": {
+            "ticks": TICKS,
+            "monitor_dt": MONITOR_DT,
+            "seeds": list(seeds),
+            "headline_seeds": list(hl_seeds),
+            "scenario_names": list(default_set().names),
+        },
+        "paper": paper,
+        "scenarios": scenarios,
+        "acceptance": {
+            "paper_exact": bool(paper["exact_match"]),
+            "paper_saving_ge_floor": bool(paper["saving_pct"] >= SAVING_FLOOR_PCT),
+            "all_savings_positive": bool(all_positive),
+            "saving_floor_pct": SAVING_FLOOR_PCT,
+        },
+    }
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_scenarios.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    if not (paper_ok and all_positive):
+        raise SystemExit(
+            "scenario acceptance not met: "
+            f"paper_exact={paper['exact_match']} "
+            f"paper_saving={paper['saving_pct']:.1f}% "
+            f"all_savings_positive={all_positive}"
+        )
+    return report
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced seed count for CI; same acceptance checks",
+    )
+    args = ap.parse_args()
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,value,derived")
+    main(emit, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    _cli()

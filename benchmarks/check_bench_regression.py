@@ -27,6 +27,17 @@ spot/bidding report).
     (very loose: CI machines differ by a few x, order-of-magnitude
     cliffs — e.g. a reintroduced per-chunk recompile — don't).
 
+``BENCH_scenarios.json`` (``bench_scenarios --smoke``):
+
+  * the ``paper_exact`` acceptance flag flips — the scenario engine's
+    replay of the §V.A suite is no longer bit-for-bit identical to the
+    static-schedule path;
+  * the paper replay's headline saving drops below the 27% floor;
+  * any stochastic scenario's AIMD-vs-Reactive saving goes non-positive
+    (hard floor, baseline-independent);
+  * a scenario's AIMD violation count grows beyond its baseline, or its
+    AIMD cost inflates beyond ``COST_TOLERANCE`` × baseline.
+
 Exit code 0 = gate passed.  Anything else fails the job; the JSON is
 uploaded as an artifact either way so the trajectory stays inspectable.
 
@@ -51,10 +62,9 @@ BYTES_TOLERANCE = 1.05
 SPEED_TOLERANCE = 5.0
 
 
-def check(current: dict, baseline: dict) -> list[str]:
-    """Return a list of human-readable gate failures (empty = pass)."""
+def _schema_smoke_errors(current: dict, baseline: dict) -> list[str]:
+    """The version/smoke preflight every report kind shares."""
     errors: list[str] = []
-
     if current.get("schema_version") != baseline.get("schema_version"):
         errors.append(
             f"schema_version mismatch: current {current.get('schema_version')} "
@@ -67,6 +77,13 @@ def check(current: dict, baseline: dict) -> list[str]:
             f"(current smoke={current.get('smoke')}, "
             f"baseline smoke={baseline.get('smoke')})"
         )
+    return errors
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    """Return a list of human-readable gate failures (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
         return errors
 
     saving = current["headline"]["saving_pct"]
@@ -110,20 +127,8 @@ def check(current: dict, baseline: dict) -> list[str]:
 
 def check_throughput(current: dict, baseline: dict) -> list[str]:
     """Gate failures for the ``kind: throughput`` report (empty = pass)."""
-    errors: list[str] = []
-
-    if current.get("schema_version") != baseline.get("schema_version"):
-        errors.append(
-            f"schema_version mismatch: current {current.get('schema_version')} "
-            f"vs baseline {baseline.get('schema_version')}"
-        )
-        return errors
-    if bool(current.get("smoke")) != bool(baseline.get("smoke")):
-        errors.append(
-            "smoke flag mismatch: gate must compare like with like "
-            f"(current smoke={current.get('smoke')}, "
-            f"baseline smoke={baseline.get('smoke')})"
-        )
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
         return errors
 
     if not current.get("acceptance", {}).get("summary_mode_ok"):
@@ -147,11 +152,55 @@ def check_throughput(current: dict, baseline: dict) -> list[str]:
             )
         cur_r = cur_grid.get("summary", {}).get("runs_per_s")
         base_r = base_grid.get("summary", {}).get("runs_per_s")
-        if cur_r is not None and base_r and \
-                cur_r < base_r / SPEED_TOLERANCE:
+        if cur_r is not None and base_r and cur_r < base_r / SPEED_TOLERANCE:
             errors.append(
                 f"grids[{grid}] summary runs/sec collapsed: {cur_r} < "
                 f"baseline {base_r} / {SPEED_TOLERANCE}"
+            )
+    return errors
+
+
+def check_scenarios(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: scenarios`` report (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
+        return errors
+
+    acc = current.get("acceptance", {})
+    if not acc.get("paper_exact"):
+        errors.append(
+            "acceptance flag paper_exact is false: the scenario engine's "
+            "paper replay no longer reproduces the static-schedule path "
+            "bit for bit"
+        )
+    paper_saving = current.get("paper", {}).get("saving_pct", float("-inf"))
+    if paper_saving < SAVING_FLOOR_PCT:
+        errors.append(
+            f"paper-replay headline saving {paper_saving:.1f}% fell below "
+            f"the {SAVING_FLOOR_PCT}% floor"
+        )
+
+    for name, base_sc in baseline.get("scenarios", {}).items():
+        cur_sc = current.get("scenarios", {}).get(name)
+        if cur_sc is None:
+            errors.append(f"scenarios[{name}] missing from current results")
+            continue
+        if cur_sc["saving_pct"] <= 0.0:
+            errors.append(
+                f"scenarios[{name}] AIMD saving went non-positive: "
+                f"{cur_sc['saving_pct']:.1f}%"
+            )
+        if cur_sc["aimd_violations"] > base_sc["aimd_violations"]:
+            errors.append(
+                f"scenarios[{name}] AIMD violations grew: "
+                f"{cur_sc['aimd_violations']} > baseline "
+                f"{base_sc['aimd_violations']}"
+            )
+        if cur_sc["aimd_cost"] > COST_TOLERANCE * base_sc["aimd_cost"]:
+            errors.append(
+                f"scenarios[{name}] AIMD cost {cur_sc['aimd_cost']:.4f} "
+                f"exceeds {COST_TOLERANCE}x baseline "
+                f"{base_sc['aimd_cost']:.4f}"
             )
     return errors
 
@@ -170,8 +219,11 @@ def main(argv: list[str] | None = None) -> int:
     kind_cur = current.get("kind", "spot")
     kind_base = baseline.get("kind", "spot")
     if kind_cur != kind_base:
-        print(f"REGRESSION: report kind mismatch: current {kind_cur!r} vs "
-              f"baseline {kind_base!r}", file=sys.stderr)
+        print(
+            f"REGRESSION: report kind mismatch: current {kind_cur!r} vs "
+            f"baseline {kind_base!r}",
+            file=sys.stderr,
+        )
         return 1
 
     if kind_cur == "throughput":
@@ -181,6 +233,18 @@ def main(argv: list[str] | None = None) -> int:
             f"bench gate [throughput]: memory_ratio={front.get('memory_ratio')} "
             f"speed_ratio={front.get('speed_ratio')} "
             f"summary_mode_ok={current.get('acceptance', {}).get('summary_mode_ok')}"
+        )
+    elif kind_cur == "scenarios":
+        errors = check_scenarios(current, baseline)
+        savings = {
+            name: round(sc.get("saving_pct", float("nan")), 1)
+            for name, sc in current.get("scenarios", {}).items()
+        }
+        print(
+            f"bench gate [scenarios]: paper_exact="
+            f"{current.get('acceptance', {}).get('paper_exact')} "
+            f"paper_saving={current.get('paper', {}).get('saving_pct', 0):.1f}% "
+            f"scenario_savings={savings}"
         )
     else:
         errors = check(current, baseline)

@@ -1,13 +1,18 @@
 # §V testbed: discrete-time cloud simulator, the 30-workload suite, the
-# Lambda billing model, the JAX spot market and its vmapped sweep harness
-# (``market`` is the numpy facade kept for ft/failures compat).
-from . import lambda_model, market, runner, spot, sweep, workloads
+# stochastic workload scenario generators, the Lambda billing model, the
+# JAX spot market and its vmapped sweep harness (``market`` is the numpy
+# facade kept for ft/failures compat).
+from . import (lambda_model, market, runner, scenarios, spot, sweep,
+               workloads)
 from .runner import SimConfig, SimTrace, run
+from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
 from .sweep import SweepAxes, make_axes, run_single, run_sweep
-from .workloads import Schedule, paper_schedule, uniform_schedule
+from .workloads import (JaxSchedule, Schedule, paper_schedule,
+                        uniform_schedule)
 
-__all__ = ["lambda_model", "market", "runner", "spot", "sweep", "workloads",
-           "SimConfig", "SimTrace", "run", "SpotConfig", "SweepAxes",
-           "make_axes", "run_single", "run_sweep", "Schedule",
-           "paper_schedule", "uniform_schedule"]
+__all__ = ["lambda_model", "market", "runner", "scenarios", "spot", "sweep",
+           "workloads", "SimConfig", "SimTrace", "run", "ScenarioSet",
+           "default_set", "paper_scenario", "SpotConfig", "SweepAxes",
+           "make_axes", "run_single", "run_sweep", "JaxSchedule",
+           "Schedule", "paper_schedule", "uniform_schedule"]

@@ -11,8 +11,12 @@ One `lax.scan` step = one monitoring instant:
 Everything is fixed-shape and jitted; a full 30-workload × 300-tick
 experiment runs in milliseconds, so the benchmark suite sweeps predictors,
 policies and monitoring intervals cheaply — and ``sim.sweep`` vmaps the
-*whole* run over seeds × bid levels × bid policies × fleet mixes in one
-call.  With the spot market live, all Table-V instance types evolve as one
+*whole* run over seeds × bid levels × bid policies × fleet mixes ×
+workload scenarios in one call.  The schedule is a traced
+``workloads.JaxSchedule`` pytree input (padded rows masked by ``valid``),
+so ``sim.scenarios`` generators can hand every grid point its own sampled
+workload world without recompiling.  With the spot market live, all
+Table-V instance types evolve as one
 correlated price system and the fleet may be mixed-granularity: each slot
 is billed/preempted at its own type's price, and every acquisition picks
 the cheapest-per-CU type currently available under the bid policy.
@@ -21,7 +25,6 @@ the cheapest-per-CU type currently available under the bid policy.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 from typing import Callable, NamedTuple
 
 import jax
@@ -115,7 +118,7 @@ class SimTrace(NamedTuple):
     violations: jnp.ndarray  # ()  TTC violations (final)
 
 
-def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
+def _execute(work: WorkloadState, sched: wl.JaxSchedule, s: jnp.ndarray,
              cluster: ClusterState, done_acc: jnp.ndarray,
              cfg: SimConfig, key: jax.Array, cores):
     """Consume CUS on the fleet for one interval; emit measurements."""
@@ -130,7 +133,7 @@ def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
     m = work.m[:, 0]
     m0 = jnp.maximum(work.m0[:, 0], 1.0)
     p = 1.0 - m / m0                                     # completed fraction
-    bias = wl.ramp(p, sched["c0"], sched["p_r"], sched["overshoot"])
+    bias = wl.ramp(p, sched.c0, sched.p_r, sched.overshoot)
     k_exec, k_meas = jax.random.split(key)
     noise = jnp.exp(cfg.exec_noise * jax.random.normal(k_exec, m.shape))
     b_exec = work.b_true[:, 0] * bias * noise            # cost of *current* items
@@ -148,7 +151,7 @@ def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
     # averaging benefit at 4 effective samples.
     done_acc_new = done_acc + items_done
     meas_mask = jnp.floor(done_acc_new) > jnp.floor(done_acc)
-    meas_sigma = sched["sigma"] / jnp.sqrt(jnp.clip(items_done, 1.0, 4.0))
+    meas_sigma = sched.sigma / jnp.sqrt(jnp.clip(items_done, 1.0, 4.0))
     b_meas = b_exec * jnp.exp(meas_sigma * jax.random.normal(k_meas, m.shape))
 
     new_m = jnp.maximum(m - items_done, 0.0)
@@ -158,9 +161,15 @@ def _execute(work: WorkloadState, sched: dict, s: jnp.ndarray,
             exec_time[:, None], items_done[:, None], util, done_acc_new)
 
 
-def make_step(schedule: wl.Schedule, cfg: SimConfig, trace: bool = True
-              ) -> Callable:
+def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+              trace: bool = True) -> Callable:
     """One monitoring instant as a ``lax.scan`` step.
+
+    ``schedule`` may be a *traced* ``JaxSchedule`` pytree — the simulator no
+    longer closes over static numpy arrays, so one compiled scan serves
+    every schedule of the same shape and ``sim.sweep`` can feed a different
+    generated scenario to every grid point.  Padded rows (``valid=False``)
+    never arrive, so they execute nothing, bill nothing and violate nothing.
 
     ``trace=True`` emits the full per-tick ``ys`` dict (six (T,) series plus
     three (T, W, K) arrays once stacked) — what ``run`` and the plotting
@@ -169,7 +178,7 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig, trace: bool = True
     what lets ``sim.sweep`` batch 10⁴–10⁵-point grids without streaming
     O(B·T·W·K) floats through memory.
     """
-    sched = schedule.as_jax()
+    sched = wl.as_jax_schedule(schedule)
     use_spot = cfg.spot.enabled
 
     def step(state: SimState, _):
@@ -177,11 +186,11 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig, trace: bool = True
         key, k_exec = jax.random.split(state.key)
 
         # --- arrivals ------------------------------------------------------
-        arrive = (sched["t_arrive"] == t)
+        arrive = (sched.t_arrive == t) & sched.valid
         work = state.work._replace(
             active=state.work.active | arrive,
-            m=jnp.where(arrive[:, None], sched["m0"], state.work.m),
-            d=jnp.where(arrive, sched["d_requested"], state.work.d),
+            m=jnp.where(arrive[:, None], sched.m0, state.work.m),
+            d=jnp.where(arrive, sched.d_requested, state.work.d),
             t_submit=jnp.where(arrive, t, state.work.t_submit),
         )
         c_state = ctrl.reset_rows(state.c, arrive)
@@ -311,22 +320,23 @@ def make_step(schedule: wl.Schedule, cfg: SimConfig, trace: bool = True
     return step
 
 
-def init_state(schedule: wl.Schedule, cfg: SimConfig,
+def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
                seed: jnp.ndarray | int | None = None,
                spot_rt: spot_lib.SpotRuntime | None = None) -> SimState:
-    """Build the t=0 state.  ``seed`` and ``spot_rt`` may be traced values —
-    the axes ``sim.sweep`` vmaps the whole simulation over."""
+    """Build the t=0 state.  ``seed``, ``spot_rt`` and the schedule itself
+    may be traced values — the axes ``sim.sweep`` vmaps the whole
+    simulation over."""
     if seed is None:
         seed = cfg.seed
-    w, k = schedule.m0.shape
-    sched = schedule.as_jax()
+    sched = wl.as_jax_schedule(schedule)
+    w, k = sched.m0.shape
     work = WorkloadState(
         active=jnp.zeros((w,), bool),
         m=jnp.zeros((w, k)),
-        m0=sched["m0"],
-        b_true=sched["b_true"],
-        d=sched["d_requested"],
-        d_requested=sched["d_requested"],
+        m0=sched.m0,
+        b_true=sched.b_true,
+        d=sched.d_requested,
+        d_requested=sched.d_requested,
         confirmed=jnp.zeros((w,), bool),
         t_submit=jnp.full((w,), -1),
         t_done=jnp.full((w,), -1),
@@ -371,20 +381,22 @@ def init_state(schedule: wl.Schedule, cfg: SimConfig,
     )
 
 
-def scan_run(schedule: wl.Schedule, cfg: SimConfig,
+def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
              seed: jnp.ndarray | int | None = None,
              spot_rt: spot_lib.SpotRuntime | None = None,
              trace: bool = True):
     """The raw jittable simulation: (final state, per-tick outputs).
 
     No ``jax.jit`` inside — callers decide the compilation boundary, which
-    lets ``sim.sweep`` vmap this whole function over batched seeds, bids
-    and granularities in a single compile.  With ``trace=False`` the scan
-    emits no per-tick outputs (``ys`` is None): the run summary lives in
-    the final state's ``summ`` carry — the memory-lean mode sweeps use.
+    lets ``sim.sweep`` vmap this whole function over batched seeds, bids,
+    granularities *and schedules* in a single compile.  With
+    ``trace=False`` the scan emits no per-tick outputs (``ys`` is None):
+    the run summary lives in the final state's ``summ`` carry — the
+    memory-lean mode sweeps use.
     """
-    step = make_step(schedule, cfg, trace=trace)
-    state = init_state(schedule, cfg, seed=seed, spot_rt=spot_rt)
+    sched = wl.as_jax_schedule(schedule)
+    step = make_step(sched, cfg, trace=trace)
+    state = init_state(sched, cfg, seed=seed, spot_rt=spot_rt)
     return jax.lax.scan(step, state, None, length=cfg.ticks)
 
 
@@ -392,22 +404,12 @@ def scan_run(schedule: wl.Schedule, cfg: SimConfig,
 # Cached compilation: ``run``/``run_single`` used to build and jit a fresh
 # closure per call, recompiling the whole simulation across repeated
 # benchmark invocations.  The entry points below key one compiled callable
-# on (schedule contents, static config, trace mode, runtime structure) and
-# reuse it for every seed / SpotRuntime.
+# on (schedule *shape*, static config, trace mode, runtime structure): the
+# schedule itself is a traced input, so every schedule — and every
+# generated scenario — of one shape shares a single compile.
 
 _JIT_CACHE: dict = {}
 _JIT_CACHE_MAX = 128
-
-
-def _schedule_key(schedule: wl.Schedule) -> tuple:
-    """Hashable digest of a (numpy, frozen-dataclass) Schedule."""
-    h = hashlib.sha256()
-    shapes = []
-    for f in dataclasses.fields(schedule):
-        arr = getattr(schedule, f.name)
-        h.update(arr.tobytes())
-        shapes.append((f.name, str(arr.dtype), arr.shape))
-    return (tuple(shapes), h.hexdigest())
 
 
 def _cache_put(key, fn) -> None:
@@ -418,47 +420,65 @@ def _cache_put(key, fn) -> None:
     _JIT_CACHE[key] = fn
 
 
-def cached_scan(schedule: wl.Schedule, cfg: SimConfig, trace: bool,
-                with_rt: bool) -> Callable:
-    """The jitted ``scan_run`` entry point for this (schedule, cfg, mode).
+def cached_scan(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+                trace: bool, with_rt: bool) -> Callable:
+    """The jitted ``scan_run`` entry point for this (schedule shape, cfg,
+    mode).  ``schedule`` is consulted only for its *scenario shape*
+    (``workloads.schedule_shape``) — the returned callable takes the
+    schedule pytree as its first argument, so same-shape schedules with
+    different contents (e.g. generated scenarios) reuse one compile.
 
-    ``with_rt=True`` returns ``f(seed, spot_rt)``; otherwise ``f(seed)``.
-    Compiled once per key and reused — repeated benchmark invocations pay
-    tracing/compilation exactly once.
+    ``with_rt=True`` returns ``f(sched, seed, spot_rt)``; otherwise
+    ``f(sched, seed)``.
     """
-    key = (_schedule_key(schedule), cfg, bool(trace), bool(with_rt))
+    key = (wl.schedule_shape(schedule), cfg, bool(trace), bool(with_rt))
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if with_rt:
-            fn = jax.jit(lambda seed, rt: scan_run(
-                schedule, cfg, seed=seed, spot_rt=rt, trace=trace))
+            fn = jax.jit(lambda sched, seed, rt: scan_run(
+                sched, cfg, seed=seed, spot_rt=rt, trace=trace))
         else:
-            fn = jax.jit(lambda seed: scan_run(
-                schedule, cfg, seed=seed, trace=trace))
+            fn = jax.jit(lambda sched, seed: scan_run(
+                sched, cfg, seed=seed, trace=trace))
         _cache_put(key, fn)
     return fn
 
 
-def cost_at_completion(work_final: WorkloadState, cum_cost: jnp.ndarray
-                       ) -> jnp.ndarray:
+def cost_at_completion(work_final: WorkloadState, cum_cost: jnp.ndarray,
+                       valid: jnp.ndarray | None = None) -> jnp.ndarray:
     """$ billed when the last workload completes, jnp-pure (shared by
     ``total_cost`` and ``sim.sweep``).  A run in which submitted work never
     finishes has no such endpoint: it is billed to the full horizon, so an
-    incomplete run can never masquerade as a cheap one."""
+    incomplete run can never masquerade as a cheap one.  ``valid`` masks
+    out padded workload rows (they can neither finish nor stay
+    unfinished)."""
     submitted = work_final.t_submit >= 0
     finished = work_final.t_done >= 0
+    t_done = work_final.t_done
+    if valid is not None:
+        submitted = submitted & valid
+        t_done = jnp.where(valid, t_done, -1)
     unfinished = jnp.any(submitted & ~finished)
-    t_end = jnp.max(work_final.t_done)
+    t_end = jnp.max(t_done)
     idx = jnp.clip(t_end + 1, 0, cum_cost.shape[0] - 1)
     return jnp.where(unfinished | (t_end < 0), cum_cost[-1], cum_cost[idx])
 
 
-def count_violations(work_final: WorkloadState, schedule: wl.Schedule,
-                     cfg: SimConfig) -> jnp.ndarray:
-    """TTC violations, jnp-pure (shared by ``run`` and ``sim.sweep``)."""
-    d_req = jnp.asarray(schedule.d_requested)
-    ticks_allowed = jnp.ceil(d_req / cfg.dt)
-    submitted = work_final.t_submit >= 0
+def count_violations(work_final: WorkloadState,
+                     schedule: wl.Schedule | wl.JaxSchedule,
+                     cfg: SimConfig,
+                     valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """TTC violations, jnp-pure (shared by ``run`` and ``sim.sweep``).
+
+    ``valid`` is the explicit workload-valid mask; it defaults to the
+    schedule's own mask, so padded rows never count as violations even if a
+    caller hands in a hand-built final state with garbage in the padding.
+    """
+    sched = wl.as_jax_schedule(schedule)
+    if valid is None:
+        valid = sched.valid
+    ticks_allowed = jnp.ceil(sched.d_requested / cfg.dt)
+    submitted = (work_final.t_submit >= 0) & valid
     finished = work_final.t_done >= 0
     # Judged against the TTC *requested* at submission (with one tick of
     # grace).  A confirmed-but-extended deadline (infeasible request) is
@@ -468,17 +488,19 @@ def count_violations(work_final: WorkloadState, schedule: wl.Schedule,
                    (submitted & ~finished))
 
 
-def run(schedule: wl.Schedule, cfg: SimConfig,
+def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         seed: int | None = None,
         spot_rt: spot_lib.SpotRuntime | None = None) -> SimTrace:
     s = cfg.seed if seed is None else seed
+    sched = wl.as_jax_schedule(schedule)
     if spot_rt is None:
-        final, ys = cached_scan(schedule, cfg, trace=True, with_rt=False)(s)
+        final, ys = cached_scan(sched, cfg, trace=True,
+                                with_rt=False)(sched, s)
     else:
-        final, ys = cached_scan(schedule, cfg, trace=True,
-                                with_rt=True)(s, spot_rt)
+        final, ys = cached_scan(sched, cfg, trace=True,
+                                with_rt=True)(sched, s, spot_rt)
 
-    violations = count_violations(final.work, schedule, cfg)
+    violations = count_violations(final.work, sched, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,
                     violations=violations, **{k: ys[k] for k in ys})
 

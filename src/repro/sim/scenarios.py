@@ -1,0 +1,471 @@
+"""Stochastic workload scenarios: generators as a first-class sweep axis.
+
+Every result of the reproduction used to be conditioned on the single
+deterministic §V.A schedule (30 workloads, one every 5 minutes).  The real
+Dithen platform faces bursty, heterogeneous multimedia arrivals, and
+profit-optimal provisioning is known to hinge on the *arrival process* as
+much as on the price process — so "which workload world are we in" should
+be an experiment axis, not a constant.
+
+This module provides a library of JAX-native workload generators.  Each
+scenario spec is a small frozen (hashable) dataclass whose ``sample(key)``
+emits a padded, masked ``workloads.JaxSchedule`` of a fixed row capacity
+``max_w``: real workloads occupy the ``valid`` rows, padding rows carry
+``t_arrive = -1`` and never arrive, bill, or violate.  Sampling is pure
+``jax.random`` on fixed shapes, so generation composes with ``jit`` and
+``vmap`` — ``sim.sweep`` calls it *inside* the jitted sweep, handing every
+(seed, scenario) grid point its own freshly sampled workload world.
+
+Scenario families:
+
+  * ``Replay``     — deterministic trace replay of a static ``Schedule``;
+                     the paper's §V.A suite becomes the named ``paper``
+                     scenario (bit-for-bit identical to running the static
+                     schedule directly);
+  * ``Poisson``    — homogeneous Poisson arrivals at ``rate`` per tick;
+  * ``MMPP``       — Markov-modulated Poisson: a two-state (calm/burst)
+                     chain switches the arrival rate, giving geometric
+                     burst lengths with mean ``1 / p_down`` ticks;
+  * ``Diurnal``    — sinusoidally modulated rate (a compressed day), with
+                     an optionally random phase per seed;
+  * ``FlashCrowd`` — baseline Poisson plus one intense arrival spike at a
+                     random instant (the Slashdot/retweet moment);
+  * heavy tails    — any of the above with ``TaskModel(size_dist="pareto")``
+                     draws per-workload item costs from a Pareto law with
+                     tail index ``pareto_alpha`` (``heavy_tail(...)`` is
+                     the packaged Poisson variant).
+
+Arrival machinery shared by the stochastic families: the spec builds a
+per-tick intensity path ``rates`` (H,), per-tick counts are Poisson draws,
+and workload slot *i* arrives at the first tick where the cumulative count
+exceeds *i* (``searchsorted``) — arrivals beyond ``max_w`` are dropped, so
+pick ``max_w`` with headroom over ``rate × horizon``.
+
+A ``ScenarioSet`` bundles specs of one shape into a sweep axis:
+``sweep.make_axes(..., scenarios=sset)`` enumerates it and
+``sweep.run_sweep(sset, cfg, axes)`` evaluates seeds × bids × policies ×
+fleets × scenarios in one jitted call via ``lax.switch`` over the
+samplers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import workloads as wl
+
+# Per-family calibration tables as jnp constants, indexable by a traced
+# family id (rows ordered as workloads.FAMILIES).
+_FAM = [wl.FAMILY_PARAMS[f] for f in range(len(wl.FAMILIES))]
+MEAN_CUS_TABLE = jnp.asarray([p["mean_cus"] for p in _FAM], jnp.float32)
+SIGMA_TABLE = jnp.asarray([p["sigma"] for p in _FAM], jnp.float32)
+C0_TABLE = jnp.asarray([p["c0"] for p in _FAM], jnp.float32)
+P_R_TABLE = jnp.asarray([p["p_r"] for p in _FAM], jnp.float32)
+OVERSHOOT_TABLE = jnp.asarray([p["overshoot"] for p in _FAM], jnp.float32)
+
+# Salt separating the schedule-sampling PRNG chain from the simulator's
+# execution-noise chain (PRNGKey(seed)) and the market chain
+# (PRNGKey(seed + 7919)).
+_SCHEDULE_SALT = 104729
+
+
+def schedule_key(seed, scenario_id) -> jax.Array:
+    """The PRNG key scenario ``scenario_id`` samples its schedule from for
+    Monte-Carlo replication ``seed`` (both may be traced)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), _SCHEDULE_SALT)
+    return jax.random.fold_in(key, scenario_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskModel:
+    """What one arriving workload looks like (family mix and task sizes).
+
+    Families reuse the §V.A calibration (``workloads.FAMILY_PARAMS``) for
+    the measurement-ramp parameters; this model only chooses the family,
+    the item count, and the per-workload mean item cost around the family
+    mean.  ``size_dist="pareto"`` swaps the lognormal cost jitter for a
+    Pareto multiplier with tail index ``pareto_alpha`` — the heavy-tailed
+    world where a rare workload is 10-100× costlier per item.
+    """
+
+    family_weights: tuple = (0.35, 0.20, 0.25, 0.20)  # face/transc/brisk/sift
+    mean_items: tuple = (300.0, 20.0, 200.0, 150.0)  # typical item counts
+    items_sigma: float = 0.9  # lognormal spread of item counts
+    max_items: float = 1200.0
+    size_dist: str = "lognormal"  # or "pareto"
+    size_jitter: float = 0.15  # lognormal σ of the per-workload cost mult
+    pareto_alpha: float = 1.8  # tail index of the Pareto cost mult
+    ttc: float = 7500.0  # requested TTC (s) per workload
+
+    def __post_init__(self):
+        if self.size_dist not in ("lognormal", "pareto"):
+            raise ValueError(
+                f"unknown size_dist {self.size_dist!r}; "
+                "choose 'lognormal' or 'pareto'"
+            )
+        n_fam = len(wl.FAMILIES)
+        if len(self.family_weights) != n_fam or len(self.mean_items) != n_fam:
+            raise ValueError(
+                "family_weights and mean_items need one entry per family "
+                f"{wl.FAMILIES}"
+            )
+        if not self.pareto_alpha > 1.0:
+            raise ValueError(f"pareto_alpha must exceed 1, got {self.pareto_alpha}")
+
+
+def sample_size_mult(key: jax.Array, shape: tuple, tm: TaskModel) -> jnp.ndarray:
+    """Per-workload item-cost multiplier around the family mean CUS."""
+    if tm.size_dist == "lognormal":
+        return jnp.exp(tm.size_jitter * jax.random.normal(key, shape))
+    # Pareto(alpha) with unit scale via inversion: scale * U^(-1/alpha).
+    u = jax.random.uniform(key, shape, minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+    return u ** (-1.0 / tm.pareto_alpha)
+
+
+def sample_tasks(key: jax.Array, n: int, tm: TaskModel):
+    """(family, items, b_true) for ``n`` workload slots."""
+    k_fam, k_cnt, k_size = jax.random.split(key, 3)
+    weights = jnp.asarray(tm.family_weights, jnp.float32)
+    fam = jax.random.choice(
+        k_fam, len(wl.FAMILIES), (n,), p=weights / jnp.sum(weights)
+    ).astype(jnp.int32)
+    mean_items = jnp.asarray(tm.mean_items, jnp.float32)[fam]
+    jitter = jnp.exp(tm.items_sigma * jax.random.normal(k_cnt, (n,)))
+    counts = jnp.clip(jnp.round(mean_items * jitter), 1.0, tm.max_items)
+    b_true = MEAN_CUS_TABLE[fam] * sample_size_mult(k_size, (n,), tm)
+    return fam, counts, b_true
+
+
+def _schedule_from_rates(
+    key: jax.Array, rates: jnp.ndarray, max_w: int, tm: TaskModel
+) -> wl.JaxSchedule:
+    """Arrivals from a per-tick intensity path → padded, masked schedule."""
+    k_arr, k_tasks = jax.random.split(key)
+    counts_t = jax.random.poisson(k_arr, rates)  # (H,) arrivals per tick
+    cum = jnp.cumsum(counts_t)
+    idx = jnp.arange(max_w)
+    # Slot i arrives at the first tick whose cumulative count exceeds i;
+    # slots beyond the total are padding.
+    t_arrive = jnp.searchsorted(cum, idx, side="right").astype(jnp.int32)
+    valid = idx < cum[-1]
+    fam, m0, b_true = sample_tasks(k_tasks, max_w, tm)
+    return wl.JaxSchedule(
+        t_arrive=jnp.where(valid, t_arrive, -1),
+        family=fam,
+        m0=jnp.where(valid, m0, 0.0)[:, None].astype(jnp.float32),
+        b_true=jnp.where(valid, b_true, 0.0)[:, None].astype(jnp.float32),
+        sigma=SIGMA_TABLE[fam],
+        c0=C0_TABLE[fam],
+        p_r=P_R_TABLE[fam],
+        overshoot=OVERSHOOT_TABLE[fam],
+        d_requested=jnp.full((max_w,), tm.ttc, jnp.float32),
+        valid=valid,
+    )
+
+
+def _check_arrival_spec(spec) -> None:
+    if spec.horizon <= 0:
+        raise ValueError(f"horizon must be positive, got {spec.horizon}")
+    if spec.max_w <= 0:
+        raise ValueError(f"max_w must be positive, got {spec.max_w}")
+    rates = [
+        getattr(spec, field)
+        for field in ("rate", "rate_lo", "rate_hi")
+        if hasattr(spec, field)
+    ]
+    if min(rates) < 0.0:
+        raise ValueError(f"arrival rates must be non-negative, got {min(rates)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Poisson:
+    """Homogeneous Poisson arrivals: ``rate`` expected workloads per tick
+    over the first ``horizon`` ticks."""
+
+    rate: float = 0.35
+    horizon: int = 90
+    max_w: int = 64
+    tasks: TaskModel = TaskModel()
+    name: str = "poisson"
+
+    def __post_init__(self):
+        _check_arrival_spec(self)
+
+    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+        del key
+        return jnp.full((self.horizon,), self.rate, jnp.float32)
+
+    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+        k_rate, k_sched = jax.random.split(key)
+        return _schedule_from_rates(
+            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPP:
+    """Markov-modulated Poisson (bursty) arrivals.
+
+    A two-state chain switches the rate between ``rate_lo`` (calm) and
+    ``rate_hi`` (burst); per tick it enters a burst with probability
+    ``p_up`` and leaves with ``p_down``, so burst lengths are geometric
+    with mean ``1 / p_down`` ticks and the long-run burst-time fraction is
+    ``p_up / (p_up + p_down)``.
+    """
+
+    rate_lo: float = 0.1
+    rate_hi: float = 1.2
+    p_up: float = 0.05
+    p_down: float = 0.2
+    horizon: int = 90
+    max_w: int = 64
+    tasks: TaskModel = TaskModel()
+    name: str = "mmpp"
+
+    def __post_init__(self):
+        _check_arrival_spec(self)
+        for field in ("p_up", "p_down"):
+            v = getattr(self, field)
+            if not 0.0 < v <= 1.0:
+                raise ValueError(f"{field} must be in (0, 1], got {v}")
+
+    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+        def flip(burst, k):
+            u = jax.random.uniform(k)
+            burst = jnp.where(burst, u >= self.p_down, u < self.p_up)
+            return burst, burst
+
+        keys = jax.random.split(key, self.horizon)
+        _, bursts = jax.lax.scan(flip, jnp.asarray(False), keys)
+        return jnp.where(bursts, self.rate_hi, self.rate_lo).astype(jnp.float32)
+
+    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+        k_rate, k_sched = jax.random.split(key)
+        return _schedule_from_rates(
+            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Diurnal:
+    """Sinusoidally modulated arrivals — a (compressed) day/night cycle:
+    ``rate × (1 + amp·sin(2π t / period + phase))``, phase drawn per seed
+    when ``random_phase`` (so the sweep averages over times of day)."""
+
+    rate: float = 0.35
+    amp: float = 0.8
+    period: int = 48
+    random_phase: bool = True
+    horizon: int = 90
+    max_w: int = 64
+    tasks: TaskModel = TaskModel()
+    name: str = "diurnal"
+
+    def __post_init__(self):
+        _check_arrival_spec(self)
+        if not 0.0 <= self.amp <= 1.0:
+            raise ValueError(f"amp must be in [0, 1], got {self.amp}")
+        if self.period <= 0:
+            raise ValueError(f"period must be positive, got {self.period}")
+
+    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+        phase = 0.0
+        if self.random_phase:
+            phase = jax.random.uniform(key, maxval=2.0 * jnp.pi)
+        t = jnp.arange(self.horizon, dtype=jnp.float32)
+        mod = 1.0 + self.amp * jnp.sin(2.0 * jnp.pi * t / self.period + phase)
+        return jnp.maximum(self.rate * mod, 0.0).astype(jnp.float32)
+
+    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+        k_rate, k_sched = jax.random.split(key)
+        return _schedule_from_rates(
+            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowd:
+    """Baseline Poisson plus one flash-crowd spike: at a random tick in the
+    first ``spike_window`` fraction of the horizon the rate jumps by
+    ``spike_rate`` for ``spike_ticks`` ticks (the viral-link moment)."""
+
+    rate: float = 0.15
+    spike_rate: float = 3.0
+    spike_ticks: int = 6
+    spike_window: float = 0.5
+    horizon: int = 90
+    max_w: int = 64
+    tasks: TaskModel = TaskModel()
+    name: str = "flash"
+
+    def __post_init__(self):
+        _check_arrival_spec(self)
+        if not 0.0 < self.spike_window <= 1.0:
+            raise ValueError(f"spike_window must be in (0, 1], got {self.spike_window}")
+        if self.spike_ticks <= 0 or self.spike_rate < 0.0:
+            raise ValueError(
+                f"bad spike: ticks={self.spike_ticks} rate={self.spike_rate}"
+            )
+
+    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+        hi = max(int(self.horizon * self.spike_window), 1)
+        tau = jax.random.randint(key, (), 0, hi)
+        t = jnp.arange(self.horizon)
+        in_spike = (t >= tau) & (t < tau + self.spike_ticks)
+        return (self.rate + self.spike_rate * in_spike).astype(jnp.float32)
+
+    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+        k_rate, k_sched = jax.random.split(key)
+        return _schedule_from_rates(
+            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+        )
+
+
+def heavy_tail(
+    alpha: float = 1.6,
+    rate: float = 0.35,
+    horizon: int = 90,
+    max_w: int = 64,
+    name: str = "heavy_tail",
+    tasks: TaskModel | None = None,
+) -> Poisson:
+    """Poisson arrivals whose per-workload item costs are Pareto(``alpha``)
+    — the heavy-tailed-size world (video lengths, raw image dumps)."""
+    tm = tasks if tasks is not None else TaskModel()
+    tm = dataclasses.replace(tm, size_dist="pareto", pareto_alpha=alpha)
+    return Poisson(rate=rate, horizon=horizon, max_w=max_w, tasks=tm, name=name)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Replay:
+    """Deterministic trace replay of a static ``Schedule`` (``sample``
+    ignores its key).  ``pad_to`` pads the row capacity so a replay can
+    share a ``ScenarioSet`` with stochastic generators; left ``None`` the
+    emitted schedule is bit-for-bit the static one, which is what keeps
+    the ``paper`` scenario's results exactly equal to the legacy path."""
+
+    schedule: wl.Schedule
+    name: str = "replay"
+    pad_to: int | None = None
+
+    def __post_init__(self):
+        if self.pad_to is not None and self.pad_to < self.schedule.n:
+            raise ValueError(
+                f"pad_to={self.pad_to} is below the schedule's "
+                f"{self.schedule.n} workloads"
+            )
+
+    @property
+    def max_w(self) -> int:
+        return self.schedule.n if self.pad_to is None else self.pad_to
+
+    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+        del key
+        return wl.pad_schedule(self.schedule.as_jax(), self.max_w)
+
+    # Frozen dataclasses hash by field values, but numpy arrays aren't
+    # hashable — identify a replay by its schedule's content digest instead
+    # (the compilation caches key on scenario specs).
+    def _key(self) -> tuple:
+        return (type(self), self.name, self.pad_to, wl.schedule_digest(self.schedule))
+
+    def __hash__(self) -> int:
+        return hash(self._key())
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Replay) and self._key() == other._key()
+
+
+def paper_scenario(
+    ttc: float = 7500.0,
+    arrival_gap_ticks: int = 1,
+    seed: int = 0,
+    pad_to: int | None = None,
+) -> Replay:
+    """The §V.A paper suite as a named replay scenario."""
+    sched = wl.paper_schedule(ttc=ttc, arrival_gap_ticks=arrival_gap_ticks, seed=seed)
+    return Replay(sched, name="paper", pad_to=pad_to)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSet:
+    """An ordered bundle of same-shape scenario specs — the sweep axis.
+
+    All members must emit schedules of one row capacity (``max_w``) so a
+    traced scenario id can ``lax.switch`` between their samplers inside a
+    single compiled sweep.  Hashable (specs are), so compilation caches can
+    key on it directly.
+    """
+
+    specs: tuple
+
+    def __post_init__(self):
+        specs = tuple(self.specs)
+        object.__setattr__(self, "specs", specs)
+        if not specs:
+            raise ValueError("a ScenarioSet needs at least one scenario")
+        widths = {s.max_w for s in specs}
+        if len(widths) > 1:
+            raise ValueError(
+                "all scenarios in a set must share one max_w so a traced "
+                f"id can switch between them; got {sorted(widths)} — pad "
+                "replays / set max_w to the common capacity"
+            )
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"scenario names must be unique, got {names}")
+
+    @property
+    def names(self) -> tuple:
+        return tuple(s.name for s in self.specs)
+
+    @property
+    def max_w(self) -> int:
+        return self.specs[0].max_w
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def __getitem__(self, i):
+        return self.specs[i]
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def sample(self, scenario_id, key: jax.Array) -> wl.JaxSchedule:
+        """Sample scenario ``scenario_id`` (traced ok) under ``key``."""
+        return jax.lax.switch(scenario_id, [s.sample for s in self.specs], key)
+
+
+def default_set(max_w: int = 64, horizon: int = 30, ttc: float = 4500.0) -> ScenarioSet:
+    """The benchmarked scenario families (one of each stochastic kind).
+
+    Calibrated so provisioning actually matters: arrivals are compressed
+    into ``horizon`` ticks (the paper's §V.A suite compresses likewise)
+    and the task mix is heavy enough that aggregate demand repeatedly
+    pushes the fleet well above the N_min floor — which is where AIMD's
+    measured growth and Reactive's churn separate.  Lighter settings leave
+    every policy idling at N_min and the cost frontier degenerate.
+    """
+    tm = TaskModel(
+        family_weights=(0.3, 0.3, 0.2, 0.2),
+        mean_items=(400.0, 40.0, 250.0, 200.0),
+        items_sigma=1.0,
+        ttc=ttc,
+    )
+    common = dict(horizon=horizon, max_w=max_w, tasks=tm)
+    return ScenarioSet(
+        (
+            Poisson(rate=1.0, **common),
+            MMPP(rate_lo=0.3, rate_hi=3.0, p_up=0.1, p_down=0.25, **common),
+            Diurnal(rate=1.0, amp=0.8, period=24, **common),
+            FlashCrowd(rate=0.5, spike_rate=6.0, spike_ticks=4, **common),
+            heavy_tail(alpha=1.6, rate=1.0, horizon=horizon, max_w=max_w, tasks=tm),
+        )
+    )

@@ -3,10 +3,10 @@
 The entire simulation — correlated multi-type market process, billing,
 preemption, controller, workload execution — is one pure ``lax.scan``
 (``runner.scan_run``), so a cost sweep over seeds × bid levels × bid
-policies × fleet mixes is a single ``jax.jit(jax.vmap(...))`` call: one
-compile, one device dispatch, every grid point in parallel.  A
-3 × 5 × 4 × 2 grid of full 130-tick experiments costs about as much
-wall-clock as three sequential runs.
+policies × fleet mixes × workload scenarios is a single
+``jax.jit(jax.vmap(...))`` call: one compile, one device dispatch, every
+grid point in parallel.  A 3 × 5 × 4 × 2 grid of full 130-tick
+experiments costs about as much wall-clock as three sequential runs.
 
 Sweeps run the scan in **summary mode** (``runner.scan_run(trace=False)``):
 the eight per-run scalars accumulate inside the scan carry and the scan
@@ -22,7 +22,8 @@ grids affordable on one host.  Two scaling knobs on ``run_sweep``:
     shard (``devices=1`` forces single-device; the default uses all).
 
 Axes:
-  * ``seed``      — Monte-Carlo replication (market + execution noise);
+  * ``seed``      — Monte-Carlo replication (market + execution noise +
+                    scenario sampling);
   * ``bid_mult``  — bid as a multiple of the base spot price (the 'ema'
                     policy's EMA multiple and the 'ttc' policy's floor;
                     ignored under 'on_demand');
@@ -34,11 +35,22 @@ Axes:
                     the mix's primary type (reported in the trace).  A
                     one-type mask is the classic granularity axis (many
                     m3.medium vs few m4.10xlarge); a wider mask lets every
-                    acquisition pick the cheapest-per-CU available type.
+                    acquisition pick the cheapest-per-CU available type;
+  * ``scenario``  — which workload world the run lives in.  With a
+                    ``scenarios.ScenarioSet`` the id picks the generator
+                    (``lax.switch``) and each grid point samples its own
+                    schedule from (seed, scenario); with a plain
+                    ``Schedule`` the axis must be all-zero.
+
+Schedules are *traced pytree inputs* of the compiled sweep, not constants
+closed over at trace time: compilation caches key on the schedule's shape
+(``workloads.schedule_shape``) or on the scenario specs, so two schedules
+of one shape — or any number of generated scenarios — share one compile.
 
 Summaries are per-run scalars, so the sweep output is a struct of
 (B,)-shaped arrays — ready for the policy/granularity frontier plots in
-``benchmarks.bench_spot`` and ``benchmarks.bench_bidding``.
+``benchmarks.bench_spot``, ``benchmarks.bench_bidding`` and the
+per-scenario frontiers in ``benchmarks.bench_scenarios``.
 """
 
 from __future__ import annotations
@@ -50,9 +62,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import runner, spot
+from . import scenarios as scen_lib
 from . import workloads as wl
 
 FleetMix = Sequence[str | int] | str | int
+ScheduleLike = "wl.Schedule | wl.JaxSchedule | scen_lib.ScenarioSet"
 
 
 class SweepAxes(NamedTuple):
@@ -63,6 +77,7 @@ class SweepAxes(NamedTuple):
     itype: jnp.ndarray     # (B,) int32 primary type per fleet mix
     policy: jnp.ndarray    # (B,) int32 BID_POLICIES id (-1: use config's)
     mix: jnp.ndarray       # (B, T) float32 fleet-membership masks
+    scenario: jnp.ndarray  # (B,) int32 scenario id (0 = first/only)
 
 
 class RunSummary(NamedTuple):
@@ -79,8 +94,9 @@ class RunSummary(NamedTuple):
     max_price: jnp.ndarray     # worst $/quantum seen (primary type)
 
 
-def summarize(final, schedule: wl.Schedule,
-              cfg: runner.SimConfig) -> RunSummary:
+def summarize(final, schedule: wl.Schedule | wl.JaxSchedule,
+              cfg: runner.SimConfig,
+              valid: jnp.ndarray | None = None) -> RunSummary:
     """Read one run's summary out of the final scan carry, jnp-pure.
 
     Every statistic was accumulated inside the scan (``runner.SummaryCarry``
@@ -88,23 +104,37 @@ def summarize(final, schedule: wl.Schedule,
     this needs no per-tick trace — it is the read-out both trace- and
     summary-mode runs share, which is what makes the two modes bit-identical
     by construction.
+
+    ``valid`` is the explicit workload-valid mask (default: the schedule's
+    own): padded rows are excluded from the finished count, the violation
+    count and the cost-at-completion endpoint, so a generated scenario's
+    padding can never inflate — or deflate — a summary.
     """
+    sched = wl.as_jax_schedule(schedule)
+    if valid is None:
+        valid = sched.valid
     work = final.work
-    submitted = work.t_submit >= 0
-    finished = work.t_done >= 0
+    submitted = (work.t_submit >= 0) & valid
+    finished = (work.t_done >= 0) & valid
     unfinished = jnp.any(submitted & ~finished)
-    t_end = jnp.max(work.t_done)
+    t_end = jnp.max(jnp.where(valid, work.t_done, -1))
     # ``cost_at_done`` is the trace's ``cum_cost[t_end + 1]``; the register
     # never fired when nothing finished, a completion landed on the last
     # tick, or submitted work is still running — all cases the trace-mode
-    # ``cost_at_completion`` resolves to the full-horizon bill.
-    use_horizon = unfinished | (t_end < 0) | (t_end + 1 > cfg.ticks - 1)
+    # ``cost_at_completion`` resolves to the full-horizon bill.  The
+    # register tracks the *unmasked* last completion, so if an explicit
+    # ``valid`` hides a later-finishing row it holds the wrong endpoint —
+    # bill to the horizon then too (conservative; never under-reports).
+    # With the default mask this never triggers: padding cannot finish.
+    register_stale = t_end != jnp.max(work.t_done)
+    use_horizon = (unfinished | (t_end < 0) | (t_end + 1 > cfg.ticks - 1)
+                   | register_stale)
     cost = jnp.where(use_horizon, final.cluster.cum_cost,
                      final.summ.cost_at_done)
     return RunSummary(
         cost=cost,
         cost_horizon=final.cluster.cum_cost,
-        violations=runner.count_violations(work, schedule, cfg),
+        violations=runner.count_violations(work, sched, cfg, valid=valid),
         preemptions=final.cluster.n_preempt,
         finished=jnp.sum(finished.astype(jnp.int32)),
         max_committed=final.summ.max_committed,
@@ -113,8 +143,9 @@ def summarize(final, schedule: wl.Schedule,
     )
 
 
-def summarize_trace(final, ys, schedule: wl.Schedule,
-                    cfg: runner.SimConfig) -> RunSummary:
+def summarize_trace(final, ys, schedule: wl.Schedule | wl.JaxSchedule,
+                    cfg: runner.SimConfig,
+                    valid: jnp.ndarray | None = None) -> RunSummary:
     """Collapse a *trace-mode* run's stacked scan outputs to scalars.
 
     The pre-summary-mode implementation, kept as the independent reference
@@ -123,12 +154,15 @@ def summarize_trace(final, ys, schedule: wl.Schedule,
     in-carry accumulation (parallel vs sequential float sum); everything
     else is bit-identical.
     """
+    sched = wl.as_jax_schedule(schedule)
+    if valid is None:
+        valid = sched.valid
     work = final.work
-    finished = work.t_done >= 0
+    finished = (work.t_done >= 0) & valid
     return RunSummary(
-        cost=runner.cost_at_completion(work, ys["cum_cost"]),
+        cost=runner.cost_at_completion(work, ys["cum_cost"], valid=valid),
         cost_horizon=ys["cum_cost"][-1],
-        violations=runner.count_violations(work, schedule, cfg),
+        violations=runner.count_violations(work, sched, cfg, valid=valid),
         preemptions=ys["n_preempted"][-1],
         finished=jnp.sum(finished.astype(jnp.int32)),
         max_committed=jnp.max(ys["n_committed"]),
@@ -150,19 +184,33 @@ def _as_mix(entry: FleetMix) -> tuple[int, np.ndarray]:
     return members[0], mask
 
 
+def _scenario_ids(scenarios) -> list[int]:
+    """Normalize the ``scenarios`` argument of ``make_axes`` to id list."""
+    if scenarios is None:
+        return [0]
+    if isinstance(scenarios, int):
+        return list(range(scenarios))
+    if isinstance(scenarios, scen_lib.ScenarioSet):
+        return list(range(len(scenarios)))
+    return [int(s) for s in scenarios]
+
+
 def make_axes(seeds: Sequence[int],
               bid_mults: Sequence[float],
               instances: Sequence[FleetMix] = ("m3.medium",),
-              policies: Sequence[str | int] | None = None) -> SweepAxes:
+              policies: Sequence[str | int] | None = None,
+              scenarios=None) -> SweepAxes:
     """Cartesian-product grid, flattened to (B,) arrays.
 
     ``instances`` entries are fleet mixes: a single type name/id (the
     classic granularity axis) or a sequence of them (a heterogeneous
     fleet).  ``policies`` are ``spot.BID_POLICIES`` names/ids; the default
-    defers to ``cfg.spot.bid_policy`` at sweep time.  Grid order is
-    seeds × bid_mults × policies × mixes, so reshaping a summary field to
-    ``(len(seeds), len(bid_mults), len(policies), len(instances))``
-    recovers the axes.
+    defers to ``cfg.spot.bid_policy`` at sweep time.  ``scenarios`` is the
+    workload-world axis: a ``scenarios.ScenarioSet`` (enumerated), a count,
+    or explicit ids; the default is the single scenario 0.  Grid order is
+    seeds × bid_mults × policies × mixes × scenarios, so reshaping a
+    summary field to ``(len(seeds), len(bid_mults), len(policies),
+    len(instances), n_scenarios)`` recovers the axes.
     """
     primaries, masks = zip(*(_as_mix(e) for e in instances))
     if policies is None:
@@ -170,20 +218,24 @@ def make_axes(seeds: Sequence[int],
     else:
         pol_ids = [spot.bid_policy_index(p) if isinstance(p, str) else int(p)
                    for p in policies]
-    s, b, p, m = np.meshgrid(np.asarray(seeds),
-                             np.asarray(bid_mults, float),
-                             np.asarray(pol_ids),
-                             np.arange(len(masks)), indexing="ij")
+    scen_ids = _scenario_ids(scenarios)
+    s, b, p, m, c = np.meshgrid(np.asarray(seeds),
+                                np.asarray(bid_mults, float),
+                                np.asarray(pol_ids),
+                                np.arange(len(masks)),
+                                np.asarray(scen_ids), indexing="ij")
     mix = np.stack(masks)[m.ravel()]
     return SweepAxes(seed=jnp.asarray(s.ravel(), jnp.int32),
                      bid_mult=jnp.asarray(b.ravel(), jnp.float32),
                      itype=jnp.asarray(np.asarray(primaries)[m.ravel()],
                                        jnp.int32),
                      policy=jnp.asarray(p.ravel(), jnp.int32),
-                     mix=jnp.asarray(mix, jnp.float32))
+                     mix=jnp.asarray(mix, jnp.float32),
+                     scenario=jnp.asarray(c.ravel(), jnp.int32))
 
 
-def _check_axes(cfg: runner.SimConfig, axes: SweepAxes) -> None:
+def _check_axes(cfg: runner.SimConfig, axes: SweepAxes,
+                schedule=None) -> None:
     """Shared run_sweep input validation."""
     if not cfg.spot.enabled:
         raise ValueError("run_sweep needs SimConfig.spot.enabled=True")
@@ -196,51 +248,104 @@ def _check_axes(cfg: runner.SimConfig, axes: SweepAxes) -> None:
             f"SpotConfig.instance={cfg.spot.instance!r} never appears in "
             "the sweep axes, which override the config — pass "
             "instances=[...] to make_axes")
+    n_scen = (len(schedule)
+              if isinstance(schedule, scen_lib.ScenarioSet) else 1)
+    scen = np.asarray(axes.scenario)
+    if scen.size and (scen.min() < 0 or scen.max() >= n_scen):
+        raise ValueError(
+            f"scenario axis references id {int(scen.max())} but the "
+            f"schedule provides {n_scen} scenario(s) — pass a ScenarioSet "
+            "and scenarios=... to make_axes")
 
 
-def point_fn(schedule: wl.Schedule, cfg: runner.SimConfig,
-             trace: bool = False):
-    """One grid point as a vmappable closure of (seed, bid_mult, itype,
-    policy, mix) — the single definition of what a sweep runs per point
-    (policy-sentinel resolution, runtime construction, scan, summary).
-    ``trace=True`` additionally returns the per-tick ``ys`` (what
-    ``benchmarks.bench_throughput`` sizes the trace-mode baseline with)."""
+def _point_sched(cfg: runner.SimConfig, trace: bool = False):
+    """One grid point with the schedule as an explicit (traced) argument —
+    the single definition of what a sweep runs per point (policy-sentinel
+    resolution, runtime construction, scan, masked summary)."""
     cfg_policy = spot.bid_policy_index(cfg.spot.bid_policy)
 
-    def one(seed, bid_mult, itype, policy, mix):
+    def one(sched, seed, bid_mult, itype, policy, mix):
         policy = jnp.where(policy < 0, cfg_policy, policy)
         rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                                policy=policy, mix=mix)
-        final, ys = runner.scan_run(schedule, cfg, seed=seed, spot_rt=rt,
+        final, ys = runner.scan_run(sched, cfg, seed=seed, spot_rt=rt,
                                     trace=trace)
-        summary = summarize(final, schedule, cfg)
+        summary = summarize(final, sched, cfg)
         return (summary, ys) if trace else summary
 
     return one
 
 
-def _sweep_callable(schedule: wl.Schedule, cfg: runner.SimConfig,
+def point_fn(schedule: ScheduleLike, cfg: runner.SimConfig,
+             trace: bool = False):
+    """One grid point as a vmappable closure of (seed, bid_mult, itype,
+    policy, mix, scenario).  With a ``ScenarioSet`` the scenario id picks
+    the generator and the schedule is sampled per (seed, scenario) inside
+    the trace; with a plain schedule the id is ignored.  ``trace=True``
+    additionally returns the per-tick ``ys`` (what
+    ``benchmarks.bench_throughput`` sizes the trace-mode baseline with)."""
+    base = _point_sched(cfg, trace=trace)
+    if isinstance(schedule, scen_lib.ScenarioSet):
+        sset = schedule
+
+        def one(seed, bid_mult, itype, policy, mix, scenario):
+            sched = sset.sample(scenario,
+                                scen_lib.schedule_key(seed, scenario))
+            return base(sched, seed, bid_mult, itype, policy, mix)
+
+        return one
+
+    sj = wl.as_jax_schedule(schedule)
+
+    def one(seed, bid_mult, itype, policy, mix, scenario):
+        del scenario
+        return base(sj, seed, bid_mult, itype, policy, mix)
+
+    return one
+
+
+def _sweep_callable(schedule: ScheduleLike, cfg: runner.SimConfig,
                     n_dev: int, donate: bool = False):
     """Cached compiled sweep over a fixed-shape batch of axes.
 
-    One entry per (schedule, cfg, device count, donation): chunked sweeps
-    reuse it for every micro-batch, so a 10⁵-point grid compiles exactly
-    once.  With ``donate=True`` the axis buffers are donated — each chunk's
-    inputs are freed the moment the device is done with them (the chunked
-    path passes per-chunk copies, never the caller's arrays; donation is a
-    no-op on CPU, where XLA ignores it, so it is requested only on
-    accelerator backends).  With ``n_dev > 1`` the leading axis is the
-    device axis (``pmap``), each device vmapping its shard.
+    One entry per (scenario set | schedule shape, cfg, device count,
+    donation): chunked sweeps reuse it for every micro-batch and *every
+    same-shape schedule*, so a 10⁵-point grid — or a loop over many
+    schedules — compiles exactly once.  The returned callable takes
+    ``(*axes_fields, sched)`` (``sched`` ignored under a ScenarioSet,
+    whose generators are compiled in).  With ``donate=True`` the axis
+    buffers are donated — each chunk's inputs are freed the moment the
+    device is done with them (the chunked path passes per-chunk copies,
+    never the caller's arrays; donation is a no-op on CPU, where XLA
+    ignores it, so it is requested only on accelerator backends); the
+    schedule argument is never donated.  With ``n_dev > 1`` the leading
+    axis is the device axis (``pmap``), each device vmapping its shard
+    with the schedule broadcast.
     """
     donate = donate and jax.default_backend() != "cpu"
-    key = ("sweep", runner._schedule_key(schedule), cfg, n_dev, donate)
+    if isinstance(schedule, scen_lib.ScenarioSet):
+        key = ("sweep", schedule, cfg, n_dev, donate)
+        sched_key_fn = point_fn(schedule, cfg)
+
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched):
+            del sched
+            return sched_key_fn(seed, bid_mult, itype, policy, mix, scenario)
+    else:
+        key = ("sweep", wl.schedule_shape(schedule), cfg, n_dev, donate)
+        base = _point_sched(cfg)
+
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched):
+            del scenario
+            return base(sched, seed, bid_mult, itype, policy, mix)
+
     fn = runner._JIT_CACHE.get(key)
     if fn is not None:
         return fn
-    batched = jax.vmap(point_fn(schedule, cfg))
-    donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4)) if donate else {}
+    in_axes = (0, 0, 0, 0, 0, 0, None)
+    batched = jax.vmap(pt, in_axes=in_axes)
+    donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4, 5)) if donate else {}
     if n_dev > 1:
-        fn = jax.pmap(batched, **donate_kw)
+        fn = jax.pmap(batched, in_axes=in_axes, **donate_kw)
     else:
         fn = jax.jit(batched, **donate_kw)
     runner._cache_put(key, fn)
@@ -253,14 +358,8 @@ def _pad_axes(axes: SweepAxes, n: int) -> SweepAxes:
     b = axes.seed.shape[0]
     if b == n:
         return axes
-    pad = [(0, n - b)]
-    return SweepAxes(
-        seed=jnp.pad(axes.seed, pad, mode="edge"),
-        bid_mult=jnp.pad(axes.bid_mult, pad, mode="edge"),
-        itype=jnp.pad(axes.itype, pad, mode="edge"),
-        policy=jnp.pad(axes.policy, pad, mode="edge"),
-        mix=jnp.pad(axes.mix, pad + [(0, 0)], mode="edge"),
-    )
+    return SweepAxes(*(jnp.pad(f, [(0, n - b)] + [(0, 0)] * (f.ndim - 1),
+                               mode="edge") for f in axes))
 
 
 def _slice_axes(axes: SweepAxes, lo: int, hi: int) -> SweepAxes:
@@ -275,17 +374,23 @@ def _device_fold(axes: SweepAxes, n_dev: int) -> SweepAxes:
                                  + f.shape[1:]) for f in axes))
 
 
-def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
+def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
               axes: SweepAxes,
               chunk_size: int | None = None,
               devices: int | None = None) -> RunSummary:
     """Every grid point of the axes, summary-mode, sharded and chunked.
 
-    The *axes* choose each run's fleet mix, bid policy and bid multiple;
-    ``cfg.spot.instance``/``fleet``/``bid_mult`` are not consulted (they
-    only apply to single, non-swept runs).  ``cfg.spot.bid_policy`` *is*
-    the policy of every grid point whose ``policy`` axis is the -1
-    sentinel (the ``make_axes`` default).
+    ``schedule`` is either one workload schedule (static ``Schedule`` or
+    ``JaxSchedule`` pytree — passed to the compiled sweep as a traced
+    input) or a ``scenarios.ScenarioSet``, in which case the ``scenario``
+    axis picks the generator and every grid point samples its own schedule
+    from (seed, scenario) inside the jitted call.
+
+    The *axes* choose each run's fleet mix, bid policy, bid multiple and
+    scenario; ``cfg.spot.instance``/``fleet``/``bid_mult`` are not
+    consulted (they only apply to single, non-swept runs).
+    ``cfg.spot.bid_policy`` *is* the policy of every grid point whose
+    ``policy`` axis is the -1 sentinel (the ``make_axes`` default).
 
     ``chunk_size`` bounds the live batch: the grid is processed in
     micro-batches of that many runs, every chunk padded to the same shape
@@ -294,16 +399,20 @@ def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
     ``devices`` caps the local devices sharded over (default: all); each
     chunk is padded to a device multiple and ``pmap``-sharded.
     """
-    _check_axes(cfg, axes)
+    _check_axes(cfg, axes, schedule)
     if chunk_size is not None and int(chunk_size) < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    is_set = isinstance(schedule, scen_lib.ScenarioSet)
+    # The dummy stands in for the (unused) schedule argument when the
+    # scenario set generates schedules internally.
+    sched = (jnp.zeros((0,)) if is_set else wl.as_jax_schedule(schedule))
     b = int(axes.seed.shape[0])
     avail = len(jax.devices())
     n_dev = avail if devices is None else max(int(devices), 1)
     n_dev = min(n_dev, avail, b)
 
     if chunk_size is None and n_dev == 1:
-        return _sweep_callable(schedule, cfg, 1)(*axes)
+        return _sweep_callable(schedule, cfg, 1)(*axes, sched)
 
     chunk = b if chunk_size is None else min(int(chunk_size), b)
     # Each compiled chunk covers a device multiple of runs.
@@ -314,11 +423,11 @@ def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
     for lo in range(0, b, chunk):
         part = _pad_axes(_slice_axes(axes, lo, min(lo + chunk, b)), chunk)
         if n_dev > 1:
-            res = fn(*_device_fold(part, n_dev))
+            res = fn(*_device_fold(part, n_dev), sched)
             res = jax.tree.map(
                 lambda x: x.reshape((chunk,) + x.shape[2:]), res)
         else:
-            res = fn(*part)
+            res = fn(*part, sched)
         # Off-device before the next chunk so live bytes stay O(chunk).
         outs.append(jax.tree.map(np.asarray, res))
     total = RunSummary(*(np.concatenate([getattr(o, f) for o in outs])[:b]
@@ -326,19 +435,35 @@ def run_sweep(schedule: wl.Schedule, cfg: runner.SimConfig,
     return jax.tree.map(jnp.asarray, total)
 
 
-def run_single(schedule: wl.Schedule, cfg: runner.SimConfig,
+def run_single(schedule: ScheduleLike, cfg: runner.SimConfig,
                seed: int, bid_mult: float,
                instance: FleetMix = "m3.medium",
-               policy: str | int | None = None) -> RunSummary:
+               policy: str | int | None = None,
+               scenario: int = 0) -> RunSummary:
     """One grid point as a standalone jitted run — the reference the
     vmapped sweep is tested against (and a handy debug entry point).
-    Runs through the cached summary-mode entry point: repeated calls with
-    different seeds/bids/mixes reuse one compiled simulation."""
+    With a ``ScenarioSet`` the point's schedule is sampled exactly as the
+    sweep would (same per-(seed, scenario) key).  Runs through the cached
+    summary-mode entry point: repeated calls with different seeds / bids /
+    mixes / same-shape schedules reuse one compiled simulation."""
     itype, mask = _as_mix(instance)
     if policy is None:
         policy = spot.bid_policy_index(cfg.spot.bid_policy)
+    if isinstance(schedule, scen_lib.ScenarioSet):
+        if not 0 <= int(scenario) < len(schedule):
+            raise ValueError(
+                f"scenario id {scenario} out of range for the "
+                f"{len(schedule)}-scenario set {schedule.names}")
+        sched = schedule.sample(scenario,
+                                scen_lib.schedule_key(seed, scenario))
+    else:
+        if int(scenario) != 0:
+            raise ValueError(
+                f"scenario id {scenario} given, but a plain schedule "
+                "provides only scenario 0 — pass a ScenarioSet")
+        sched = wl.as_jax_schedule(schedule)
     rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                            policy=policy, mix=jnp.asarray(mask))
-    final, _ = runner.cached_scan(schedule, cfg, trace=False,
-                                  with_rt=True)(seed, rt)
-    return summarize(final, schedule, cfg)
+    final, _ = runner.cached_scan(sched, cfg, trace=False,
+                                  with_rt=True)(sched, seed, rt)
+    return summarize(final, sched, cfg)

@@ -24,6 +24,8 @@ and the minutes-scale time-to-reliable-prediction of Table II.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,6 +45,39 @@ FAMILY_PARAMS = {
     BRISK:     dict(mean_cus=2.0, sigma=0.30, c0=0.50, p_r=0.25, overshoot=0.10),
     SIFT:      dict(mean_cus=3.0, sigma=0.35, c0=0.45, p_r=0.30, overshoot=0.12),
 }
+
+
+class JaxSchedule(NamedTuple):
+    """A workload schedule as a JAX pytree — the form the simulator scans.
+
+    Unlike the static numpy ``Schedule``, every field may be a *traced*
+    value: ``sim.runner`` takes the schedule as an input of its jitted scan
+    (compiles are keyed on this pytree's shapes, not its bytes) and
+    ``sim.scenarios`` generators emit it from inside ``jit``/``vmap``, which
+    is what makes "which workload world are we in" a sweep axis.
+
+    The row count W is a *capacity*, not a workload count: generators pad to
+    a fixed ``max_w`` and mark real rows in ``valid``.  Padded rows carry
+    ``t_arrive = -1`` so they never arrive, and every consumer of final
+    workload state (violation counts, cost-at-completion, finished counts)
+    masks by ``valid`` so padding can neither bill nor violate.
+    """
+
+    t_arrive: jnp.ndarray     # (W,) int32 arrival tick (-1 = never arrives)
+    family: jnp.ndarray       # (W,) int32 family id
+    m0: jnp.ndarray           # (W, K) f32 items per type (K=1 here)
+    b_true: jnp.ndarray       # (W, K) f32 true mean CUS per item
+    sigma: jnp.ndarray        # (W,) f32 per-item measurement noise σ
+    c0: jnp.ndarray           # (W,) f32 ramp floor
+    p_r: jnp.ndarray          # (W,) f32 ramp knee (completed fraction)
+    overshoot: jnp.ndarray    # (W,) f32
+    d_requested: jnp.ndarray  # (W,) f32 requested TTC (s)
+    valid: jnp.ndarray        # (W,) bool — False rows are padding
+
+    @property
+    def n(self) -> int:
+        """Row capacity W (== workload count when ``valid`` is all-True)."""
+        return self.t_arrive.shape[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +102,80 @@ class Schedule:
     def total_cus(self) -> float:
         return float(np.sum(self.m0[:, 0] * self.b_true[:, 0]))
 
-    def as_jax(self) -> dict:
-        return {f.name: jnp.asarray(getattr(self, f.name))
-                for f in dataclasses.fields(self)}
+    def as_jax(self) -> JaxSchedule:
+        return JaxSchedule(
+            t_arrive=jnp.asarray(self.t_arrive, jnp.int32),
+            family=jnp.asarray(self.family, jnp.int32),
+            m0=jnp.asarray(self.m0, jnp.float32),
+            b_true=jnp.asarray(self.b_true, jnp.float32),
+            sigma=jnp.asarray(self.sigma, jnp.float32),
+            c0=jnp.asarray(self.c0, jnp.float32),
+            p_r=jnp.asarray(self.p_r, jnp.float32),
+            overshoot=jnp.asarray(self.overshoot, jnp.float32),
+            d_requested=jnp.asarray(self.d_requested, jnp.float32),
+            valid=jnp.ones((self.n,), bool),
+        )
+
+
+def as_jax_schedule(schedule: Schedule | JaxSchedule) -> JaxSchedule:
+    """Normalize either schedule form to the ``JaxSchedule`` pytree."""
+    if isinstance(schedule, JaxSchedule):
+        return schedule
+    if isinstance(schedule, Schedule):
+        return schedule.as_jax()
+    raise TypeError(
+        f"expected a Schedule or JaxSchedule, got {type(schedule).__name__}")
+
+
+def schedule_shape(schedule: Schedule | JaxSchedule) -> tuple:
+    """Hashable (field, dtype, shape) signature — the *scenario shape* the
+    compilation caches key on (two schedules of one shape share a compile)."""
+    sj = as_jax_schedule(schedule)
+    return tuple((name, str(arr.dtype), tuple(arr.shape))
+                 for name, arr in zip(sj._fields, sj))
+
+
+def schedule_digest(schedule: Schedule) -> str:
+    """Content hash of a static numpy ``Schedule`` (used to make replay
+    scenario specs hashable without comparing arrays elementwise)."""
+    h = hashlib.sha256()
+    for f in dataclasses.fields(schedule):
+        arr = np.asarray(getattr(schedule, f.name))
+        h.update(f.name.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def pad_schedule(sched: JaxSchedule, max_w: int) -> JaxSchedule:
+    """Pad a schedule's W axis up to ``max_w`` rows of inert padding:
+    ``t_arrive = -1`` (never arrives), zero work, ``valid = False``."""
+    w = sched.n
+    if max_w < w:
+        raise ValueError(f"cannot pad {w} workloads down to max_w={max_w}")
+    if max_w == w:
+        return sched
+    pad = max_w - w
+
+    def pad1(arr, fill):
+        widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+        return jnp.pad(arr, widths, constant_values=fill)
+
+    return JaxSchedule(
+        t_arrive=pad1(sched.t_arrive, -1),
+        family=pad1(sched.family, 0),
+        m0=pad1(sched.m0, 0.0),
+        b_true=pad1(sched.b_true, 0.0),
+        sigma=pad1(sched.sigma, 0.0),
+        c0=pad1(sched.c0, 0.0),
+        p_r=pad1(sched.p_r, 1.0),
+        overshoot=pad1(sched.overshoot, 0.0),
+        # A real-looking TTC keeps deadline arithmetic finite; the valid
+        # mask keeps padded rows out of every violation/cost statistic.
+        d_requested=pad1(sched.d_requested, 1.0),
+        valid=pad1(sched.valid, False),
+    )
 
 
 def paper_schedule(ttc: float = 7620.0,

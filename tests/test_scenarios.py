@@ -1,0 +1,311 @@
+"""Scenario engine: stochastic workload generators as a sweep axis (ISSUE 4).
+
+The contract under test: generators emit padded, masked schedules whose
+statistics match their specs (Poisson rate, MMPP burst lengths, Pareto
+tail index), the ``paper`` replay is exactly the static §V.A schedule,
+padding can neither bill nor violate, and a seeds × bids × policies ×
+scenarios grid through ``run_sweep`` equals the loop of single runs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, strategies as st
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import (
+    ScenarioSet,
+    SimConfig,
+    SpotConfig,
+    default_set,
+    make_axes,
+    paper_schedule,
+    run_single,
+    run_sweep,
+)
+from repro.sim import runner, scenarios, sweep
+from repro.sim import workloads as wl
+from repro.sim.scenarios import (
+    MMPP,
+    Diurnal,
+    FlashCrowd,
+    Poisson,
+    Replay,
+    TaskModel,
+    heavy_tail,
+)
+
+PARAMS = ControlParams(monitor_dt=300.0)
+BILL = BillingParams(terminate="immediate")
+
+
+def _spot_cfg(ticks=60, **kw):
+    return SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL),
+        ticks=ticks,
+        spot=SpotConfig(enabled=True, **kw),
+    )
+
+
+# ------------------------------------------------------------ generators --
+
+
+def test_poisson_empirical_rate_matches_lambda():
+    spec = Poisson(rate=0.4, horizon=60, max_w=96)
+    keys = jax.random.split(jax.random.PRNGKey(0), 200)
+    scheds = jax.vmap(spec.sample)(keys)
+    counts = np.asarray(jnp.sum(scheds.valid, axis=-1))
+    rate_hat = counts.mean() / spec.horizon
+    # 200 × Poisson(24): std of the mean ≈ 0.35 arrivals → ~4σ tolerance.
+    assert rate_hat == pytest.approx(spec.rate, rel=0.06)
+    # Arrivals land inside the horizon, padding is marked.
+    t = np.asarray(scheds.t_arrive)
+    v = np.asarray(scheds.valid)
+    assert ((t >= 0) & (t < spec.horizon))[v].all()
+    assert (t[~v] == -1).all()
+
+
+def test_mmpp_burst_lengths_and_burstiness():
+    spec = MMPP(rate_lo=0.05, rate_hi=2.0, p_up=0.05, p_down=0.2, horizon=4000)
+    rates = np.asarray(spec.rate_path(jax.random.PRNGKey(1)))
+    hi = rates > spec.rate_lo
+    # Mean sojourn in the burst state is geometric: 1 / p_down ticks.
+    runs, cur = [], 0
+    for x in hi:
+        if x:
+            cur += 1
+        elif cur:
+            runs.append(cur)
+            cur = 0
+    if cur:
+        runs.append(cur)
+    assert len(runs) > 50
+    assert np.mean(runs) == pytest.approx(1.0 / spec.p_down, rel=0.25)
+    # Burst-time fraction ≈ p_up / (p_up + p_down).
+    frac = spec.p_up / (spec.p_up + spec.p_down)
+    assert hi.mean() == pytest.approx(frac, rel=0.3)
+    # Arrival counts are over-dispersed vs Poisson (index of dispersion > 1).
+    keys = jax.random.split(jax.random.PRNGKey(2), 200)
+    small = dataclasses.replace(spec, horizon=60, max_w=256)
+    counts = np.asarray(jnp.sum(jax.vmap(small.sample)(keys).valid, -1))
+    assert counts.var() / counts.mean() > 1.5
+
+
+def test_pareto_tail_index_hill_estimator():
+    tm = TaskModel(size_dist="pareto", pareto_alpha=1.6)
+    raw = scenarios.sample_size_mult(jax.random.PRNGKey(3), (20000,), tm)
+    x = np.sort(np.asarray(raw))[::-1]
+    k = 2000  # top-10% order statistics
+    hill = 1.0 / np.mean(np.log(x[:k] / x[k]))
+    assert hill == pytest.approx(tm.pareto_alpha, rel=0.1)
+    # Heavier than any lognormal the default model would produce.
+    assert x.max() > 20.0
+
+
+def test_diurnal_rate_modulation():
+    spec = Diurnal(rate=1.0, amp=0.8, period=24, horizon=48, random_phase=False)
+    rates = np.asarray(spec.rate_path(jax.random.PRNGKey(0)))
+    assert rates.min() == pytest.approx(1.0 - spec.amp, abs=1e-5)
+    assert rates.max() == pytest.approx(1.0 + spec.amp, abs=1e-5)
+    assert rates.mean() == pytest.approx(1.0, abs=0.01)
+
+
+def test_flash_crowd_spike_present_once():
+    spec = FlashCrowd(rate=0.1, spike_rate=5.0, spike_ticks=4, horizon=60)
+    rates = np.asarray(spec.rate_path(jax.random.PRNGKey(7)))
+    spiked = rates > spec.rate
+    assert spiked.sum() == spec.spike_ticks
+    # Contiguous block.
+    idx = np.flatnonzero(spiked)
+    assert (np.diff(idx) == 1).all()
+
+
+def test_paper_replay_bit_exact_against_static_schedule():
+    sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+    spec = Replay(sched, name="paper")
+    out = spec.sample(jax.random.PRNGKey(0))
+    ref = sched.as_jax()
+    for f in wl.JaxSchedule._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out, f)), np.asarray(getattr(ref, f)), err_msg=f
+        )
+    assert bool(np.asarray(out.valid).all())
+
+
+@given(st.floats(min_value=0.05, max_value=2.0))
+@settings(max_examples=20, deadline=None)
+def test_poisson_valid_counts_bounded_property(rate):
+    spec = Poisson(rate=float(rate), horizon=40, max_w=128)
+    sj = spec.sample(jax.random.PRNGKey(11))
+    n = int(np.asarray(sj.valid).sum())
+    assert 0 <= n <= 128
+    t = np.asarray(sj.t_arrive)
+    assert (t[np.asarray(sj.valid)] < 40).all()
+
+
+# --------------------------------------------------------------- masking --
+
+
+def test_count_violations_and_cost_honor_valid_mask():
+    """Padding that *looks* submitted-but-unfinished must not count."""
+    base = wl.uniform_schedule(2, 0, items=10, item_cus=1.0, ttc=600.0)
+    sched = wl.pad_schedule(base.as_jax(), 4)
+    w = sched.n
+    work = runner.WorkloadState(
+        active=jnp.zeros((w,), bool),
+        m=jnp.zeros((w, 1)),
+        m0=sched.m0,
+        b_true=sched.b_true,
+        d=sched.d_requested,
+        d_requested=sched.d_requested,
+        confirmed=jnp.zeros((w,), bool),
+        t_submit=jnp.asarray([0, 0, 5, 5]),  # padding rows claim submission
+        t_done=jnp.asarray([3, -1, -1, -1]),  # ... and look unfinished
+    )
+    cfg = _spot_cfg()
+    # Row 1 (real, unfinished) counts; rows 2-3 are padding and must not.
+    assert int(runner.count_violations(work, sched, cfg)) == 1
+    # An explicit mask overrides the schedule's own.
+    mask_all = jnp.ones((w,), bool)
+    assert int(runner.count_violations(work, sched, cfg, valid=mask_all)) == 3
+    # cost_at_completion: with the mask, the last *real* completion (t=5)
+    # is the endpoint; without it the padding keeps the run "unfinished"
+    # and the bill runs to the full horizon.
+    cum = jnp.arange(10.0)
+    work_done = work._replace(t_done=jnp.asarray([3, 5, -1, -1]))
+    got = runner.cost_at_completion(work_done, cum, valid=sched.valid)
+    assert float(got) == 6.0
+    assert float(runner.cost_at_completion(work_done, cum)) == 9.0
+
+
+def test_padded_run_bills_and_violates_nothing_extra():
+    """A schedule padded with inert rows completes, and its padded rows
+    never arrive, never bill, never violate."""
+    cfg = _spot_cfg(ticks=130)
+    sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+    padded = wl.pad_schedule(sched.as_jax(), sched.n + 10)
+    r = run_single(padded, cfg, seed=0, bid_mult=1.5)
+    assert int(r.finished) == sched.n  # not n + 10
+    assert int(r.violations) == 0
+    assert float(r.cost) > 0.0
+    assert float(r.cost) < float(r.cost_horizon)
+
+
+# ------------------------------------------------------------ sweep axis --
+
+
+def test_scenario_grid_single_call_matches_run_single():
+    """seeds × bids × policies × scenarios in ONE jitted run_sweep call,
+    equal to the loop of standalone runs."""
+    tm = TaskModel(ttc=3000.0)
+    sset = ScenarioSet(
+        (
+            Poisson(rate=0.6, horizon=20, max_w=24, tasks=tm),
+            MMPP(rate_lo=0.2, rate_hi=2.0, horizon=20, max_w=24, tasks=tm),
+        )
+    )
+    cfg = _spot_cfg(ticks=40)
+    seeds, bids, policies = [0, 1], [1.2, 2.0], ["multiple", "ttc"]
+    axes = make_axes(seeds=seeds, bid_mults=bids, policies=policies, scenarios=sset)
+    batched = run_sweep(sset, cfg, axes)
+    i = 0
+    for seed in seeds:
+        for bid in bids:
+            for pol in policies:
+                for scen in range(len(sset)):
+                    single = run_single(
+                        sset, cfg, seed=seed, bid_mult=bid, policy=pol, scenario=scen
+                    )
+                    for f in single._fields:
+                        np.testing.assert_allclose(
+                            np.asarray(getattr(batched, f))[i],
+                            np.asarray(getattr(single, f)),
+                            rtol=1e-5,
+                            err_msg=f"{f} @ {seed}/{bid}/{pol}/{scen}",
+                        )
+                    i += 1
+    assert i == len(np.asarray(batched.cost))
+
+
+def test_scenario_sweep_chunked_equals_unchunked():
+    sset = default_set(max_w=32, horizon=15)
+    cfg = _spot_cfg(ticks=40)
+    axes = make_axes(seeds=[0, 1], bid_mults=[1.5], scenarios=sset)
+    whole = run_sweep(sset, cfg, axes)
+    parts = run_sweep(sset, cfg, axes, chunk_size=3)
+    for f in whole._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(whole, f)), np.asarray(getattr(parts, f)), err_msg=f
+        )
+
+
+def test_run_sweep_rejects_out_of_range_scenario():
+    cfg = _spot_cfg()
+    sset = ScenarioSet((Poisson(horizon=10, max_w=8),))
+    axes = make_axes(seeds=[0], bid_mults=[1.5], scenarios=2)
+    with pytest.raises(ValueError, match="scenario"):
+        run_sweep(sset, cfg, axes)
+    # A plain schedule provides exactly one scenario.
+    with pytest.raises(ValueError, match="scenario"):
+        run_sweep(paper_schedule(), cfg, axes)
+    # run_single (the loop-of-one reference) must reject the same mistakes
+    # instead of letting lax.switch clamp to the last branch.
+    with pytest.raises(ValueError, match="out of range"):
+        run_single(sset, cfg, seed=0, bid_mult=1.5, scenario=5)
+    with pytest.raises(ValueError, match="scenario 0"):
+        run_single(paper_schedule(), cfg, seed=0, bid_mult=1.5, scenario=1)
+
+
+def test_mmpp_rejects_negative_burst_rate():
+    with pytest.raises(ValueError, match="non-negative"):
+        MMPP(rate_lo=0.1, rate_hi=-2.0)
+
+
+def test_make_axes_scenario_grid_order():
+    axes = make_axes(seeds=[0, 1], bid_mults=[1.0], scenarios=3)
+    assert axes.scenario.shape == (6,)
+    np.testing.assert_array_equal(np.asarray(axes.scenario), [0, 1, 2, 0, 1, 2])
+    np.testing.assert_array_equal(np.asarray(axes.seed), [0, 0, 0, 1, 1, 1])
+
+
+def test_scenario_set_validation():
+    with pytest.raises(ValueError, match="max_w"):
+        ScenarioSet((Poisson(max_w=8), Poisson(max_w=16, name="p2")))
+    with pytest.raises(ValueError, match="unique"):
+        ScenarioSet((Poisson(), Poisson()))
+    with pytest.raises(ValueError, match="at least one"):
+        ScenarioSet(())
+    with pytest.raises(ValueError, match="size_dist"):
+        TaskModel(size_dist="cauchy")
+
+
+def test_same_shape_scenarios_share_one_sweep_compile():
+    """The sweep compile is keyed on scenario shape, not schedule bytes:
+    two different same-shape schedules hit one cache entry."""
+    cfg = _spot_cfg(ticks=40)
+    a = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=0)
+    b = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=1)
+    f1 = sweep._sweep_callable(a, cfg, 1)
+    f2 = sweep._sweep_callable(b, cfg, 1)
+    assert f1 is f2
+    # ... and the two sweeps still see their own bytes.
+    axes = make_axes(seeds=[0], bid_mults=[1.5])
+    ra = run_sweep(a, cfg, axes)
+    rb = run_sweep(b, cfg, axes)
+    assert float(ra.cost[0]) != float(rb.cost[0])
+
+
+def test_heavy_tail_factory_swaps_size_dist():
+    spec = heavy_tail(alpha=1.4)
+    assert spec.tasks.size_dist == "pareto"
+    assert spec.tasks.pareto_alpha == 1.4
+    assert spec.name == "heavy_tail"
+
+
+def test_hypothesis_shim_importable():
+    # The suite must collect with or without hypothesis installed.
+    assert HAVE_HYPOTHESIS in (True, False)

@@ -45,8 +45,9 @@ def _trace_summary(cfg, seed, bid_mult, instance="m3.medium", policy=None):
         policy = spot.bid_policy_index(cfg.spot.bid_policy)
     rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                            policy=policy, mix=jnp.asarray(mask))
-    final, ys = runner.cached_scan(SCHED, cfg, trace=True,
-                                   with_rt=True)(seed, rt)
+    sched = SCHED.as_jax()
+    final, ys = runner.cached_scan(sched, cfg, trace=True,
+                                   with_rt=True)(sched, seed, rt)
     return sweep.summarize_trace(final, ys, SCHED, cfg)
 
 
@@ -186,10 +187,16 @@ def test_cached_scan_reuses_compiled_entry():
     f3 = runner.cached_scan(SCHED, dataclasses.replace(cfg, ticks=131),
                             trace=False, with_rt=True)
     assert f3 is not f1
-    # ... and so is a different schedule with the same shapes.
+    # A different schedule with the same *shape* shares the compile — the
+    # schedule is a traced input, keyed on scenario shape, not bytes.
     other = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=1)
     f4 = runner.cached_scan(other, cfg, trace=False, with_rt=True)
-    assert f4 is not f1
+    assert f4 is f1
+    # ... while a different shape (padded capacity) is a new entry.
+    from repro.sim import workloads as wl
+    padded = wl.pad_schedule(SCHED.as_jax(), SCHED.n + 8)
+    f5 = runner.cached_scan(padded, cfg, trace=False, with_rt=True)
+    assert f5 is not f1
 
 
 def test_repeated_run_hits_cache(monkeypatch):
