@@ -43,7 +43,7 @@ import numpy as np
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
 from repro.sim import (SimConfig, SpotConfig, make_axes, paper_schedule,
-                       run_sweep, sweep)
+                       run_sweep, runner, sweep)
 
 SCHEMA_VERSION = 1
 MEM_RATIO_FLOOR = 5.0
@@ -74,10 +74,15 @@ def _axes(seeds, mults):
 
 def _mode_fn(schedule, cfg, trace: bool):
     """The jitted sweep of one mode — ``sweep.point_fn``, the exact
-    per-point program ``run_sweep`` executes.  Trace mode returns what
-    trace mode is *for*: the full per-tick ys of every grid point (the
-    PR-2 baseline's memory shape); summary mode the eight scalars."""
-    return jax.jit(jax.vmap(sweep.point_fn(schedule, cfg, trace=trace)))
+    per-point program ``run_sweep`` executes (at the config's default
+    ``PolicyParams``, broadcast like ``run_sweep`` broadcasts them).
+    Trace mode returns what trace mode is *for*: the full per-tick ys of
+    every grid point (the PR-2 baseline's memory shape); summary mode the
+    eight scalars."""
+    pp = runner.default_params(cfg)
+    fn = jax.vmap(sweep.point_fn(schedule, cfg, trace=trace),
+                  in_axes=(0, 0, 0, 0, 0, 0, None))
+    return jax.jit(lambda *axes: fn(*axes, pp))
 
 
 def _tree_bytes(tree) -> int:

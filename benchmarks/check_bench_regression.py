@@ -38,20 +38,35 @@ spot/bidding report).
   * a scenario's AIMD violation count grows beyond its baseline, or its
     AIMD cost inflates beyond ``COST_TOLERANCE`` × baseline.
 
+``BENCH_tuning.json`` (``bench_tuning --smoke``):
+
+  * an acceptance flag flips: ``tuned_beats_default_all`` (the in-jit
+    tuner no longer strictly beats the hand-set defaults on every
+    stochastic scenario), ``paper_exact`` (the default-``PolicyParams``
+    paper replay is no longer bit-identical to ``bench_spot``'s headline),
+    ``single_compile`` (the joint tuning run traced its sweep objective
+    more than once), or ``adversarial_within_bounds``;
+  * a scenario's *tuned* violation count grows beyond its baseline, or
+    its tuned score inflates beyond ``COST_TOLERANCE`` × baseline;
+  * a scenario's tuned-vs-default improvement goes negative.
+
 Exit code 0 = gate passed.  Anything else fails the job; the JSON is
 uploaded as an artifact either way so the trajectory stays inspectable.
 
 CLI:  python benchmarks/check_bench_regression.py \
           results/BENCH_spot.json benchmarks/baselines/BENCH_spot.json
-      python benchmarks/check_bench_regression.py \
-          results/BENCH_throughput.json \
-          benchmarks/baselines/BENCH_throughput.json
+      python benchmarks/check_bench_regression.py --auto
+          # every benchmarks/baselines/BENCH_*.json vs results/ — the
+          # form CI uses, so a new benchmark's committed baseline is
+          # gated automatically
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import sys
 
 SAVING_FLOOR_PCT = 27.0
@@ -205,15 +220,60 @@ def check_scenarios(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
-def main(argv: list[str] | None = None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="benchmark JSON produced by this run")
-    ap.add_argument("baseline", help="committed baseline JSON")
-    args = ap.parse_args(argv)
+def check_tuning(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: tuning`` report (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
+        return errors
 
-    with open(args.current) as f:
+    acc = current.get("acceptance", {})
+    for flag, why in (
+        ("tuned_beats_default_all",
+         "tuned params no longer strictly beat the hand-set defaults on "
+         "every stochastic scenario"),
+        ("paper_exact",
+         "the default-PolicyParams paper replay is no longer bit-identical "
+         "to bench_spot.run_headline"),
+        ("single_compile",
+         "the joint tuning run traced its sweep objective more than once "
+         "— candidate evaluation is recompiling"),
+        ("adversarial_within_bounds",
+         "the adversarial search reported a world outside the generator's "
+         "parameter bounds"),
+    ):
+        if not acc.get(flag):
+            errors.append(f"acceptance flag {flag} is false: {why}")
+
+    for name, base_sc in baseline.get("scenarios", {}).items():
+        cur_sc = current.get("scenarios", {}).get(name)
+        if cur_sc is None:
+            errors.append(f"scenarios[{name}] missing from current results")
+            continue
+        if cur_sc["improvement_pct"] < 0.0:
+            errors.append(
+                f"scenarios[{name}] tuned-vs-default improvement went "
+                f"negative: {cur_sc['improvement_pct']:.2f}%"
+            )
+        if cur_sc["tuned_violations"] > base_sc["tuned_violations"]:
+            errors.append(
+                f"scenarios[{name}] tuned violations grew: "
+                f"{cur_sc['tuned_violations']} > baseline "
+                f"{base_sc['tuned_violations']}"
+            )
+        if cur_sc["tuned_score"] > COST_TOLERANCE * base_sc["tuned_score"]:
+            errors.append(
+                f"scenarios[{name}] tuned score {cur_sc['tuned_score']:.4f} "
+                f"exceeds {COST_TOLERANCE}x baseline "
+                f"{base_sc['tuned_score']:.4f}"
+            )
+    return errors
+
+
+def check_pair(current_path: str, baseline_path: str) -> int:
+    """Gate one (current, baseline) JSON pair; returns the exit code."""
+    with open(current_path) as f:
         current = json.load(f)
-    with open(args.baseline) as f:
+    with open(baseline_path) as f:
         baseline = json.load(f)
 
     kind_cur = current.get("kind", "spot")
@@ -246,6 +306,20 @@ def main(argv: list[str] | None = None) -> int:
             f"paper_saving={current.get('paper', {}).get('saving_pct', 0):.1f}% "
             f"scenario_savings={savings}"
         )
+    elif kind_cur == "tuning":
+        errors = check_tuning(current, baseline)
+        improvements = {
+            name: round(sc.get("improvement_pct", float("nan")), 1)
+            for name, sc in current.get("scenarios", {}).items()
+        }
+        acc = current.get("acceptance", {})
+        print(
+            f"bench gate [tuning]: tuned_beats_default_all="
+            f"{acc.get('tuned_beats_default_all')} "
+            f"paper_exact={acc.get('paper_exact')} "
+            f"single_compile={acc.get('single_compile')} "
+            f"improvements_pct={improvements}"
+        )
     else:
         errors = check(current, baseline)
         saving = current.get("headline", {}).get("saving_pct", float("nan"))
@@ -261,6 +335,42 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     print("bench gate passed: no benchmark regressions vs baseline")
     return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?",
+                    help="benchmark JSON produced by this run")
+    ap.add_argument("baseline", nargs="?", help="committed baseline JSON")
+    ap.add_argument("--auto", action="store_true",
+                    help="gate every baselines/BENCH_*.json against the "
+                    "matching results/ file (the CI form)")
+    ap.add_argument("--results-dir", default="results")
+    ap.add_argument("--baselines-dir", default="benchmarks/baselines")
+    args = ap.parse_args(argv)
+
+    if not args.auto:
+        if not (args.current and args.baseline):
+            ap.error("need CURRENT and BASELINE paths (or --auto)")
+        return check_pair(args.current, args.baseline)
+
+    baselines = sorted(glob.glob(os.path.join(args.baselines_dir,
+                                              "BENCH_*.json")))
+    if not baselines:
+        print(f"REGRESSION: no baselines under {args.baselines_dir}",
+              file=sys.stderr)
+        return 1
+    rc = 0
+    for baseline in baselines:
+        current = os.path.join(args.results_dir, os.path.basename(baseline))
+        if not os.path.exists(current):
+            print(f"REGRESSION: {current} missing — the benchmark that "
+                  f"produces it did not run", file=sys.stderr)
+            rc = 1
+            continue
+        print(f"--- {os.path.basename(baseline)}")
+        rc = max(rc, check_pair(current, baseline))
+    return rc
 
 
 if __name__ == "__main__":

@@ -1,55 +1,91 @@
-"""Benchmark suite — one module per paper table/figure.
+"""Benchmark suite driver — auto-discovers every ``benchmarks/bench_*.py``.
 
 Emits ``name,value,derived`` CSV rows (value is the headline number of the
 artifact; ``derived`` packs the secondary columns).
 
-  bench_prediction   -> Table II   (time-to-reliable + MAE per estimator)
-  bench_convergence  -> Fig. 3     (estimator traces; CSV artifact)
-  bench_cost         -> Figs. 4-5 + Table III (cumulative cost, 5 policies)
-  bench_lambda       -> Table IV   (per-image cost vs AWS Lambda)
-  bench_kernels      -> kernel micro-benchmarks (host timings)
-  bench_roofline     -> §Roofline summary over the dry-run sweep
-  bench_spot         -> Appendix A (spot market: headline saving, bid sweep,
-                        instance-granularity frontier)
-  bench_throughput   -> sweep-engine throughput: summary vs trace mode,
-                        chunked 100x grid (BENCH_throughput.json)
+Discovery replaces the old hand-maintained suite table: any module named
+``bench_<suite>.py`` in this directory is picked up automatically, so a
+newly added benchmark can never silently miss CI — the CI bench job runs
+``python -m benchmarks.run --smoke`` instead of hand-listing steps, then
+gates every ``results/BENCH_*.json`` against ``benchmarks/baselines/``
+via ``check_bench_regression.py --auto``.
+
+Each suite module exposes ``main(emit)`` — or ``main(emit, smoke=...)``
+for the suites with a reduced CI mode; ``--smoke`` is forwarded to those
+that accept it.  A failing suite (exception *or* a ``SystemExit`` from an
+acceptance check) is reported in its ``_suite_*`` row and turns the exit
+code non-zero, but never hides the remaining suites.
+
+CLI:  PYTHONPATH=src python -m benchmarks.run [--smoke] [suite]
 """
 
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import pathlib
 import sys
 import time
 
 
-def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    from . import (bench_convergence, bench_cost, bench_kernels,
-                   bench_lambda, bench_prediction, bench_roofline,
-                   bench_spot, bench_throughput)
-    suites = {
-        "prediction": bench_prediction,
-        "convergence": bench_convergence,
-        "cost": bench_cost,
-        "lambda": bench_lambda,
-        "kernels": bench_kernels,
-        "roofline": bench_roofline,
-        "spot": bench_spot,
-        "throughput": bench_throughput,
-    }
+def discover() -> dict:
+    """suite name → module *name*, for every ``bench_*.py`` beside this
+    file.  Import happens lazily inside each suite's try/except, so one
+    module with an import-time error cannot hide the remaining suites."""
+    here = pathlib.Path(__file__).resolve().parent
+    package = __package__ or "benchmarks"
+    return {path.stem[len("bench_"):]: f"{package}.{path.stem}"
+            for path in sorted(here.glob("bench_*.py"))}
+
+
+def _call_suite(module_name: str, emit, smoke: bool) -> None:
+    """Import and run one suite's ``main``, forwarding ``smoke`` when it
+    accepts it."""
+    mod = importlib.import_module(module_name)
+    sig = inspect.signature(mod.main)
+    if "smoke" in sig.parameters:
+        mod.main(emit, smoke=smoke)
+    else:
+        mod.main(emit)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single suite (e.g. 'spot', 'tuning')")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI on suites that support it")
+    args = ap.parse_args(argv)
+
+    suites = discover()
+    if args.only is not None and args.only not in suites:
+        print(f"unknown suite {args.only!r}; discovered: "
+              f"{', '.join(suites)}", file=sys.stderr)
+        return 2
     print("name,value,derived")
 
     def emit(name, value, derived=""):
         print(f"{name},{value:.6g},{derived}", flush=True)
 
-    for name, mod in suites.items():
-        if only and only != name:
+    failures: list[str] = []
+    for name, module_name in suites.items():
+        if args.only and args.only != name:
             continue
         t0 = time.time()
         try:
-            mod.main(emit)
+            _call_suite(module_name, emit, args.smoke)
             emit(f"_suite_{name}_wall_s", time.time() - t0, "ok")
-        except Exception as e:  # noqa: BLE001 — a failed suite must not
-            emit(f"_suite_{name}_wall_s", time.time() - t0,  # hide others
-                 f"FAILED:{type(e).__name__}:{e}")
+        except (Exception, SystemExit) as e:  # a failed suite (even at
+            emit(f"_suite_{name}_wall_s", time.time() - t0,  # import) must
+                 f"FAILED:{type(e).__name__}:{e}")  # not hide the others
+            failures.append(name)
+    if failures:
+        print(f"benchmark suites failed: {', '.join(failures)}",
+              file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

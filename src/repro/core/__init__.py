@@ -3,10 +3,11 @@
 # plus the comparison baselines (§V) — all as pure-JAX state machines.
 from . import aimd, billing, controller, fairshare, kalman, predictors, types
 from .controller import ControllerConfig, ControllerState, step as control_step
-from .types import BillingParams, ControlParams
+from .types import (BillingParams, ControlParams, PolicyParams,
+                    make_policy_params)
 
 __all__ = [
     "aimd", "billing", "controller", "fairshare", "kalman", "predictors",
     "types", "ControllerConfig", "ControllerState", "control_step",
-    "BillingParams", "ControlParams",
+    "BillingParams", "ControlParams", "PolicyParams", "make_policy_params",
 ]

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .types import AimdState, ControlParams, PolicyState
+from .types import AimdState, ControlParams, PolicyParams, PolicyState
 
 HIST = 6  # MWA / LR look-back (current + five previous, §V.C)
 
@@ -28,11 +28,22 @@ def aimd_init(n0: float) -> AimdState:
 
 
 def aimd_step(state: AimdState, n_tot: jnp.ndarray, n_star: jnp.ndarray,
-              params: ControlParams) -> AimdState:
-    """Fig. 1: one AIMD update of the CU target."""
+              params: ControlParams,
+              pp: PolicyParams | None = None) -> AimdState:
+    """Fig. 1: one AIMD update of the CU target.
+
+    ``pp`` supplies the gains as *traced* values (``PolicyParams``) so a
+    tuner can vmap candidate (α, β) pairs through one compiled simulation;
+    without it the static config gains apply (bit-identical: the config
+    floats enter the same f32 arithmetic either way).  The N_min/N_max
+    band always comes from the static ``params`` — platform limits are not
+    a policy knob.
+    """
+    alpha = params.alpha if pp is None else pp.alpha
+    beta = params.beta if pp is None else pp.beta
     incr = n_tot <= n_star
-    up = jnp.minimum(n_tot + params.alpha, params.n_max)
-    down = jnp.maximum(params.beta * n_tot, params.n_min)
+    up = jnp.minimum(n_tot + alpha, params.n_max)
+    down = jnp.maximum(beta * n_tot, params.n_min)
     return AimdState(n_target=jnp.where(incr, up, down))
 
 

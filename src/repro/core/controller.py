@@ -24,8 +24,8 @@ from . import aimd as aimd_lib
 from . import billing as billing_lib
 from . import fairshare, kalman, predictors
 from .types import (AimdState, ArmaState, BillingParams, ClusterState,
-                    ControlParams, KalmanState, PolicyState, WorkloadState,
-                    required_cus)
+                    ControlParams, KalmanState, PolicyParams, PolicyState,
+                    WorkloadState, required_cus)
 
 PREDICTORS = ("kalman", "adhoc", "arma")
 POLICIES = ("aimd", "reactive", "mwa", "lr", "autoscale")
@@ -108,6 +108,7 @@ def step(state: ControllerState,
          items_done: jnp.ndarray,    # (W, K) completions in window
          cfg: ControllerConfig,
          cores: jnp.ndarray | float | None = None,  # CUs per instance/slot
+         pp: PolicyParams | None = None,  # traced policy gains (tuning)
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
     # CUs per instance — a traced scalar when the spot fleet's granularity
@@ -150,7 +151,7 @@ def step(state: ControllerState,
     # -- 3. proportional-fair service rates (eqs. 11-14) ---------------------
     n_usable = billing_lib.usable(cluster, cores)
     sched = work.active & confirmed
-    alloc = fairshare.allocate(r, d, sched, n_usable, p)
+    alloc = fairshare.allocate(r, d, sched, n_usable, p, pp=pp)
     # Pre-confirmation bootstrap: run a trickle so measurements arrive.
     boot = work.active & ~confirmed
     s = jnp.where(boot, cfg.bootstrap_rate, alloc.s)
@@ -161,7 +162,7 @@ def step(state: ControllerState,
     pol = aimd_lib.policy_push(state.pol, n_star)
     n_base = (billing_lib.committed(cluster, cores)
               if cfg.aimd_base == "committed" else n_usable)
-    aimd_state = aimd_lib.aimd_step(state.aimd, n_base, n_star, p)
+    aimd_state = aimd_lib.aimd_step(state.aimd, n_base, n_star, p, pp=pp)
     if cfg.policy == "aimd":
         n_target = aimd_state.n_target
     elif cfg.policy == "reactive":

@@ -13,7 +13,7 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from .types import ControlParams
+from .types import ControlParams, PolicyParams
 
 _EPS = 1e-9
 
@@ -35,7 +35,8 @@ def allocate(r: jnp.ndarray,
              d: jnp.ndarray,
              active: jnp.ndarray,
              n_tot: jnp.ndarray,
-             params: ControlParams) -> Allocation:
+             params: ControlParams,
+             pp: PolicyParams | None = None) -> Allocation:
     """Service rates for the interval [t, t+1) (eqs. 11-14 + per-w cap).
 
     Args:
@@ -43,7 +44,13 @@ def allocate(r: jnp.ndarray,
       d:       (W,) remaining TTC seconds (already confirmed workloads).
       active:  (W,) bool mask of schedulable workloads.
       n_tot:   ()   currently usable CUs (eq. 2).
+      pp:      traced AIMD gains for the eq. 13-14 guard band (tuning);
+               None = the static config gains.  The same α/β the AIMD
+               update uses must bound the band, so this mirrors
+               ``aimd.aimd_step``'s override exactly.
     """
+    alpha = params.alpha if pp is None else pp.alpha
+    beta = params.beta if pp is None else pp.beta
     s_star = optimal_rates(r, d, active)
     # Eq. 12: N* = Σ s*_w.  The per-workload cap N_{w,max} only extends d_w
     # once, at TTC confirmation (§II.B) — a later prediction overshoot
@@ -54,10 +61,10 @@ def allocate(r: jnp.ndarray,
     # physically deliver to one workload is not actionable.
     n_star = jnp.sum(jnp.minimum(s_star, params.surge_mult * params.n_w_max))
 
-    over = n_star > n_tot + params.alpha                 # demand exceeds band
-    under = n_star < params.beta * n_tot                 # demand below band
-    scale_down = (n_tot + params.alpha) / jnp.maximum(n_star, _EPS)   # eq. 13
-    scale_up = (params.beta * n_tot) / jnp.maximum(n_star, _EPS)      # eq. 14
+    over = n_star > n_tot + alpha                        # demand exceeds band
+    under = n_star < beta * n_tot                        # demand below band
+    scale_down = (n_tot + alpha) / jnp.maximum(n_star, _EPS)          # eq. 13
+    scale_up = (beta * n_tot) / jnp.maximum(n_star, _EPS)             # eq. 14
     scale = jnp.where(over, scale_down, jnp.where(under, scale_up, 1.0))
 
     # Granted rates are physically capped at N_{w,max} CUs per workload.

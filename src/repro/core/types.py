@@ -140,6 +140,42 @@ class ClusterState(NamedTuple):
     n_preempt: jnp.ndarray    # ()   cumulative instances reclaimed by market
 
 
+class PolicyParams(NamedTuple):
+    """Tunable policy coefficients as a *traced* pytree.
+
+    These five scalars used to be static config fields (``ControlParams.
+    alpha``/``beta``, ``SpotConfig.bid_mult``/``ttc_gain``/``ema_alpha``)
+    baked into the compiled simulation at trace time — so evaluating a new
+    candidate setting meant a fresh XLA compile.  Promoted to a pytree that
+    flows through ``controller.step`` → ``aimd_step`` and the simulator
+    scan (``sim.runner``), they become runtime *inputs* of one compiled
+    simulation: ``repro.opt`` vmaps a whole tuner population over them
+    without recompiling.  Configs keep their values as the defaults
+    (``sim.runner.default_params``), and the compilation caches key on
+    configs with these leaves struck out (``sim.runner.strip_tuned``).
+
+    ``bid_mult`` is *relative*: it multiplies the configured (or swept)
+    bid multiple, so 1.0 — the default — leaves the bid axis untouched and
+    a tuner candidate of ``b`` bids ``b ×`` the config/axis multiple.
+    """
+
+    alpha: jnp.ndarray      # () AIMD additive increase (CUs per instant)
+    beta: jnp.ndarray       # () AIMD multiplicative decrease
+    bid_mult: jnp.ndarray   # () multiplier on the configured bid multiple
+    ttc_gain: jnp.ndarray   # () TTC-aware bid-escalation gain
+    ema_alpha: jnp.ndarray  # () per-hour weight of the EMA bid policy
+
+
+def make_policy_params(alpha: float = 5.0, beta: float = 0.9,
+                       bid_mult: float = 1.0, ttc_gain: float = 4.0,
+                       ema_alpha: float = 0.3) -> PolicyParams:
+    """Build a ``PolicyParams`` pytree of f32 scalars (args may be traced)."""
+    as_f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
+    return PolicyParams(alpha=as_f32(alpha), beta=as_f32(beta),
+                        bid_mult=as_f32(bid_mult), ttc_gain=as_f32(ttc_gain),
+                        ema_alpha=as_f32(ema_alpha))
+
+
 class AimdState(NamedTuple):
     n_target: jnp.ndarray     # () target N_tot for the next instant
 

@@ -1,0 +1,38 @@
+"""In-jit policy auto-tuning and adversarial scenario search (ISSUE 5).
+
+Gradient-free optimization over the sweep engine: candidates are
+``core.types.PolicyParams`` vectors (AIMD gains, relative bid multiple,
+TTC-escalation and EMA coefficients) scored by mean cost + violation
+penalty over a seeds × scenarios batch of full simulations.  Because the
+policy coefficients and the scenario-generator parameters are *traced*
+inputs of one compiled simulation, an entire CEM/ES tuning run — every
+generation, every candidate, every seed and scenario — is a single jitted
+call with a single compile of the sweep objective.
+
+  * ``tune_policy``    — tune the policy for a config + workload batch;
+  * ``attack_policy``  — find the worst-case world of a scenario family
+                         for a fixed policy (bounded generator search);
+  * ``robust_tune``    — alternate the two for a min–max robust policy;
+  * ``cem_minimize`` / ``es_minimize`` — the bare optimizers over any
+                         ``BoxSpace`` objective.
+"""
+
+from . import adversarial, cem, es, objective, robust, space, tuner
+from .adversarial import AttackResult, attack_policy
+from .cem import TuneResult, cem_minimize
+from .es import es_minimize
+from .objective import PolicyObjective, ScenarioObjective, score_summary
+from .robust import RobustResult, robust_tune
+from .space import (BoxSpace, default_vector, nominal_scenario_vector,
+                    params_to_vector, policy_space, scenario_space,
+                    vector_to_params)
+from .tuner import PolicyTuning, tune_policy
+
+__all__ = [
+    "adversarial", "cem", "es", "objective", "robust", "space", "tuner",
+    "AttackResult", "attack_policy", "TuneResult", "cem_minimize",
+    "es_minimize", "PolicyObjective", "ScenarioObjective", "score_summary",
+    "RobustResult", "robust_tune", "BoxSpace", "default_vector",
+    "nominal_scenario_vector", "params_to_vector", "policy_space",
+    "scenario_space", "vector_to_params", "PolicyTuning", "tune_policy",
+]

@@ -1,0 +1,93 @@
+"""Adversarial scenario search: the worst workload world for a policy.
+
+The same machinery as policy tuning, run in the other direction: freeze a
+policy (a ``PolicyParams`` pytree — hand-set defaults or a tuner's output)
+and search the *scenario generator's* bounded parameter space for the
+world that maximizes its mean cost + violation penalty.  The generators'
+``sample(key, params)`` hooks take the candidate parameters as traced
+inputs, so the whole attack — populations of worlds × seeds of full
+simulations × generations — is again one jitted CEM run, one compile.
+
+The nominal world is injected as candidate 0 of every generation, so the
+reported worst case is never milder than the spec's own setting and the
+``damage`` (worst − nominal) is non-negative by construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import PolicyParams
+from ..sim import runner
+from .cem import TuneResult, cem_minimize
+from .objective import DEFAULT_PENALTY, ScenarioObjective
+from .space import BoxSpace, nominal_scenario_vector, scenario_space
+
+
+class AttackResult(NamedTuple):
+    """Worst-case world found for one (policy, scenario spec) pair."""
+
+    worst_vec: jnp.ndarray      # (d,) generator parameters of the worst world
+    worst_score: jnp.ndarray    # ()  mean cost + penalty there
+    nominal_vec: jnp.ndarray    # (d,) the spec's own parameters
+    nominal_score: jnp.ndarray  # ()  score of the nominal world
+    space: BoxSpace             # the bounded search box (names the vectors)
+    result: TuneResult          # raw maximizer output (scores negated)
+    objective: ScenarioObjective
+
+    @property
+    def worst_params(self) -> dict:
+        """The worst world as {generator parameter: value} floats."""
+        return {n: float(self.worst_vec[i])
+                for i, n in enumerate(self.space.names)}
+
+    @property
+    def damage(self) -> float:
+        """Score surplus of the worst world over the nominal one (≥ 0)."""
+        return float(self.worst_score - self.nominal_score)
+
+
+def attack_policy(cfg: runner.SimConfig, spec, params: PolicyParams | None,
+                  seeds, key: jax.Array, pop_size: int = 32,
+                  generations: int = 8,
+                  penalty: float = DEFAULT_PENALTY,
+                  scenario_id: int = 0) -> AttackResult:
+    """Find the worst-case world of ``spec``'s family for this policy.
+
+    ``spec`` is a stochastic ``sim.scenarios`` generator (replays expose no
+    parameters and are rejected).  ``params=None`` attacks the config's
+    hand-set defaults.  ``scenario_id`` seeds the per-seed sampling keys —
+    pass the spec's index in its ``ScenarioSet`` so the nominal world here
+    is the very world a sweep over that set evaluates.  Same ``key`` ⇒
+    bit-identical outcome; the returned world always respects the spec's
+    ``param_bounds()`` box.
+    """
+    pp = runner.default_params(cfg) if params is None else params
+    space = scenario_space(spec)
+    obj = ScenarioObjective(cfg, spec, pp, space, seeds, penalty=penalty,
+                            scenario_id=scenario_id)
+    nominal = nominal_scenario_vector(spec, space)
+    # CEM minimizes; attack by minimizing the negated damage score.  The
+    # sampling distribution starts at mid-box — the damage landscape's
+    # interesting corners are usually far from the nominal world, and the
+    # injected nominal already guarantees the result is never milder than
+    # the spec's own setting.
+    run = jax.jit(lambda k: cem_minimize(
+        lambda v: -obj(v), space, k, pop_size=pop_size,
+        generations=generations, inject=nominal))
+    result = jax.tree.map(jnp.asarray, run(key))
+    nominal_summary = obj.evaluate(nominal)
+    nominal_score = jnp.mean(
+        nominal_summary.cost
+        + penalty * nominal_summary.violations.astype(jnp.float32))
+    # Deliberately *not* re-clipped: CEM's ``from_unit`` keeps candidates
+    # in-bounds by construction, and returning the raw optimizer output is
+    # what lets the bench/test bounds check catch a future search path
+    # that leaks outside the box instead of silently laundering it.
+    return AttackResult(worst_vec=result.best_vec,
+                        worst_score=-result.best_score,
+                        nominal_vec=nominal, nominal_score=nominal_score,
+                        space=space, result=result, objective=obj)

@@ -1,0 +1,171 @@
+"""Sweep-backed objectives: score a candidate against the simulator.
+
+Both tuners and the adversarial search optimize the same quantity the
+benchmarks report: **mean cost plus a violation penalty** over a seeds ×
+scenarios batch of full simulations.  The batch runs through
+``sim.sweep.point_fn`` — the exact per-point program ``run_sweep``
+executes, summary mode, schedule sampled per (seed, scenario) inside the
+trace — so one tuning run *is* one big sweep and compiles once: the
+candidate's ``PolicyParams`` (or the attacked generator's parameters) are
+traced inputs of that single compile, never retrace triggers.
+
+``PolicyObjective`` counts how many times its Python body is traced
+(``n_traces``).  Under ``jit(vmap(...))``/``lax.scan`` the body runs once
+per *compile*, not once per candidate, so the counter is the benchmark's
+proof that an entire population × generations tuning run compiled the
+sweep objective exactly once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import PolicyParams
+from ..sim import runner, spot, sweep
+from ..sim import scenarios as scen_lib
+from .space import BoxSpace, vector_to_params
+
+DEFAULT_PENALTY = 1.0  # $ charged per TTC violation in the score
+
+
+def score_summary(summary: sweep.RunSummary, penalty: float) -> jnp.ndarray:
+    """Scalar score of one run: dollars billed plus the violation fine."""
+    return summary.cost + penalty * summary.violations.astype(jnp.float32)
+
+
+def run_env(cfg: runner.SimConfig) -> tuple:
+    """The non-swept runtime constants every objective's runs share:
+    ``(itype, mix, bid_mult, policy_id)`` — the config's primary fleet mix
+    at the config's bid multiple (``PolicyParams.bid_mult`` scales it) and
+    the config's own bid policy."""
+    itype, mix = sweep._as_mix(cfg.spot.fleet or cfg.spot.instance)
+    return (jnp.asarray(itype, jnp.int32),
+            jnp.asarray(mix, jnp.float32),
+            jnp.asarray(cfg.spot.bid_mult, jnp.float32),
+            jnp.asarray(spot.bid_policy_index(cfg.spot.bid_policy),
+                        jnp.int32))
+
+
+def _seed_scenario_grid(seeds, scenarios) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Flattened (seed, scenario) cartesian product as two (G,) arrays."""
+    s = jnp.asarray(list(seeds), jnp.int32)
+    c = jnp.asarray(list(scenarios), jnp.int32)
+    return (jnp.repeat(s, c.shape[0]), jnp.tile(c, s.shape[0]))
+
+
+class PolicyObjective:
+    """Score a policy-parameter vector over a seeds × scenarios batch.
+
+    Calling the objective with a ``(dim,)`` vector (traced or concrete)
+    returns the scalar score; the tuners ``vmap`` it over populations.
+    ``evaluate(vec)`` returns the underlying per-(seed, scenario)
+    ``RunSummary`` grid for reporting — same machinery, own jit.
+
+    The candidate's ``bid_mult`` leaf is *relative*: every run bids
+    ``bid_mult ×`` the config's own multiple (``cfg.spot.bid_mult``), so
+    the default vector reproduces the hand-set config bit for bit.
+    """
+
+    def __init__(self, cfg: runner.SimConfig, schedule, seeds,
+                 scenarios=None, penalty: float = DEFAULT_PENALTY,
+                 space: BoxSpace | None = None):
+        if isinstance(schedule, scen_lib.ScenarioSet):
+            scen_ids = (range(len(schedule)) if scenarios is None
+                        else scenarios)
+        else:
+            scen_ids = [0] if scenarios is None else scenarios
+        self.cfg = cfg
+        self.schedule = schedule
+        self.penalty = float(penalty)
+        self.space = space
+        self.seeds, self.scenarios = _seed_scenario_grid(seeds, scen_ids)
+        self._point = sweep.point_fn(schedule, cfg)
+        self._itype, self._mix, self._bid, self._pol = run_env(cfg)
+        self._traces = 0
+        self._eval = jax.jit(self._grid)
+
+    @property
+    def n_traces(self) -> int:
+        """How often the objective body was traced — 1 after any number of
+        candidates/generations means the sweep objective compiled once."""
+        return self._traces
+
+    def params_of(self, vec: jnp.ndarray) -> PolicyParams:
+        return vector_to_params(self.space.clip(vec) if self.space is not None
+                                else vec)
+
+    def _grid(self, vec: jnp.ndarray) -> sweep.RunSummary:
+        pp = self.params_of(vec)
+
+        def one(seed, scenario):
+            return self._point(seed, self._bid, self._itype, self._pol,
+                               self._mix, scenario, pp)
+
+        return jax.vmap(one)(self.seeds, self.scenarios)
+
+    def __call__(self, vec: jnp.ndarray) -> jnp.ndarray:
+        self._traces += 1
+        grid = self._grid(vec)
+        return jnp.mean(score_summary(grid, self.penalty))
+
+    def evaluate(self, vec: jnp.ndarray) -> sweep.RunSummary:
+        """Per-(seed, scenario) summaries of one candidate (host-jitted)."""
+        return self._eval(jnp.asarray(vec, jnp.float32))
+
+
+class ScenarioObjective:
+    """Score a scenario-generator parameter vector against a *fixed*
+    policy: how badly does the world drawn from these parameters hurt it?
+
+    Every seed draws its schedule from the attacked spec's ``sample(key,
+    params)`` hook under ``scenarios.schedule_key(seed, scenario_id)`` —
+    pass the spec's id in its ``ScenarioSet`` so the sampled worlds line
+    up with what a sweep/``PolicyObjective`` over that set evaluates —
+    then runs the full simulation at the frozen ``PolicyParams``.  Higher
+    score = worse world; ``opt.adversarial`` maximizes it.
+    """
+
+    def __init__(self, cfg: runner.SimConfig, spec, params: PolicyParams,
+                 space: BoxSpace, seeds,
+                 penalty: float = DEFAULT_PENALTY,
+                 scenario_id: int = 0):
+        if not spec.param_bounds():
+            raise ValueError(
+                f"scenario {getattr(spec, 'name', spec)!r} has no tunable "
+                "generator parameters to attack")
+        self.cfg = cfg
+        self.spec = spec
+        self.space = space
+        self.pp = params
+        self.penalty = float(penalty)
+        self.scenario_id = int(scenario_id)
+        self.seeds = jnp.asarray(list(seeds), jnp.int32)
+        self._base = sweep._point_sched(cfg)
+        self._itype, self._mix, self._bid, self._pol = run_env(cfg)
+        self._traces = 0
+        self._eval = jax.jit(self._grid)
+
+    @property
+    def n_traces(self) -> int:
+        return self._traces
+
+    def _grid(self, vec: jnp.ndarray) -> sweep.RunSummary:
+        gen_params = self.space.to_dict(self.space.clip(vec))
+
+        def one(seed):
+            key = scen_lib.schedule_key(seed, self.scenario_id)
+            sched = self.spec.sample(key, params=gen_params)
+            return self._base(sched, seed, self._bid, self._itype,
+                              self._pol, self._mix, self.pp)
+
+        return jax.vmap(one)(self.seeds)
+
+    def __call__(self, vec: jnp.ndarray) -> jnp.ndarray:
+        self._traces += 1
+        grid = self._grid(vec)
+        return jnp.mean(score_summary(grid, self.penalty))
+
+    def evaluate(self, vec: jnp.ndarray) -> sweep.RunSummary:
+        """Per-seed summaries of one world (host-jitted)."""
+        return self._eval(jnp.asarray(vec, jnp.float32))

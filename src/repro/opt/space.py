@@ -1,0 +1,171 @@
+"""Bounded continuous search spaces for the gradient-free tuners.
+
+A ``BoxSpace`` names an ordered set of scalar parameters with per-parameter
+``[lo, hi]`` bounds and maps between three representations:
+
+  * the flat **vector** the optimizers move through (f32, shape ``(dim,)``);
+  * the **unit cube** the CEM/ES internals sample in (every optimizer step
+    works on ``to_unit``-mapped vectors, so step sizes are comparable
+    across parameters of very different scales);
+  * the named **dict** the simulator-side hooks consume
+    (``scenarios._gen_param`` overrides, reporting).
+
+Two concrete spaces ship here:
+
+  * ``policy_space()`` — the five ``core.types.PolicyParams`` leaves
+    (AIMD α/β, relative bid multiple, TTC-escalation gain, EMA weight)
+    with platform-sensible default bounds;
+  * ``scenario_space(spec)`` — whatever a ``sim.scenarios`` spec exposes
+    through its ``param_bounds()`` hook (the adversarial search space).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import PolicyParams
+from ..sim import runner
+
+# Default tuning box for the policy coefficients.  The AIMD band keeps the
+# additive gain within the N_min..N_max head-room and the multiplicative
+# decrease a genuine decrease; the relative bid multiple spans cautious
+# (0.4×) to aggressive (2.5×) versions of the configured bid; the EMA
+# weight covers sluggish to near-instant market tracking.
+POLICY_BOUNDS: dict[str, tuple[float, float]] = {
+    "alpha": (1.0, 20.0),
+    "beta": (0.5, 0.99),
+    "bid_mult": (0.4, 2.5),
+    "ttc_gain": (0.5, 12.0),
+    "ema_alpha": (0.05, 0.9),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BoxSpace:
+    """An ordered, bounded box of named scalar parameters (hashable)."""
+
+    names: tuple[str, ...]
+    lo: tuple[float, ...]
+    hi: tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "names", tuple(self.names))
+        object.__setattr__(self, "lo", tuple(float(v) for v in self.lo))
+        object.__setattr__(self, "hi", tuple(float(v) for v in self.hi))
+        if not self.names:
+            raise ValueError("a BoxSpace needs at least one parameter")
+        if not len(self.names) == len(self.lo) == len(self.hi):
+            raise ValueError(
+                f"names/lo/hi lengths differ: {len(self.names)}/"
+                f"{len(self.lo)}/{len(self.hi)}"
+            )
+        for name, lo, hi in zip(self.names, self.lo, self.hi):
+            if not lo < hi:
+                raise ValueError(f"{name}: need lo < hi, got [{lo}, {hi}]")
+
+    @property
+    def dim(self) -> int:
+        return len(self.names)
+
+    @property
+    def lo_vec(self) -> jnp.ndarray:
+        return jnp.asarray(self.lo, jnp.float32)
+
+    @property
+    def hi_vec(self) -> jnp.ndarray:
+        return jnp.asarray(self.hi, jnp.float32)
+
+    def clip(self, vec: jnp.ndarray) -> jnp.ndarray:
+        return jnp.clip(vec, self.lo_vec, self.hi_vec)
+
+    def to_unit(self, vec: jnp.ndarray) -> jnp.ndarray:
+        """Real-space vector → unit cube (clipped into [0, 1])."""
+        u = (jnp.asarray(vec, jnp.float32) - self.lo_vec) / (
+            self.hi_vec - self.lo_vec
+        )
+        return jnp.clip(u, 0.0, 1.0)
+
+    def from_unit(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Unit cube → real-space vector (in-bounds by construction)."""
+        u = jnp.clip(jnp.asarray(u, jnp.float32), 0.0, 1.0)
+        return self.lo_vec + u * (self.hi_vec - self.lo_vec)
+
+    def to_dict(self, vec: jnp.ndarray) -> dict:
+        vec = jnp.asarray(vec, jnp.float32)
+        return {name: vec[i] for i, name in enumerate(self.names)}
+
+    def from_dict(self, d: dict) -> jnp.ndarray:
+        missing = [n for n in self.names if n not in d]
+        if missing:
+            raise KeyError(f"missing parameters {missing} for {self.names}")
+        return jnp.asarray([d[n] for n in self.names], jnp.float32)
+
+    def contains(self, vec, atol: float = 1e-5) -> bool:
+        """Every component within its bounds (small float tolerance)."""
+        v = np.asarray(vec, dtype=np.float64)
+        lo = np.asarray(self.lo) - atol
+        hi = np.asarray(self.hi) + atol
+        return bool(np.all(v >= lo) and np.all(v <= hi))
+
+
+def policy_space(bounds: dict[str, tuple[float, float]] | None = None) -> BoxSpace:
+    """The ``PolicyParams`` tuning box, leaves in field order.  ``bounds``
+    overrides individual parameter boxes (e.g. pin one by a tight box)."""
+    merged = dict(POLICY_BOUNDS)
+    if bounds:
+        unknown = set(bounds) - set(PolicyParams._fields)
+        if unknown:
+            raise ValueError(
+                f"unknown PolicyParams bounds {sorted(unknown)}; "
+                f"fields are {PolicyParams._fields}"
+            )
+        merged.update(bounds)
+    names = PolicyParams._fields
+    return BoxSpace(
+        names=names,
+        lo=tuple(merged[n][0] for n in names),
+        hi=tuple(merged[n][1] for n in names),
+    )
+
+
+def params_to_vector(pp: PolicyParams) -> jnp.ndarray:
+    """PolicyParams pytree → flat (5,) f32 vector, field order."""
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in pp])
+
+
+def vector_to_params(vec: jnp.ndarray) -> PolicyParams:
+    """Flat (5,) vector → PolicyParams pytree (vec may be traced)."""
+    vec = jnp.asarray(vec, jnp.float32)
+    return PolicyParams(*(vec[i] for i in range(len(PolicyParams._fields))))
+
+
+def default_vector(cfg) -> jnp.ndarray:
+    """The config's hand-set coefficients as a policy vector — the tuners'
+    init / injected incumbent, and the baseline tuned runs must beat."""
+    return params_to_vector(runner.default_params(cfg))
+
+
+def scenario_space(spec) -> BoxSpace:
+    """The adversarial search box a scenario spec exposes via its
+    ``param_bounds()`` hook (names sorted for a stable vector order)."""
+    bounds = spec.param_bounds()
+    if not bounds:
+        raise ValueError(
+            f"scenario {getattr(spec, 'name', spec)!r} exposes no tunable "
+            "generator parameters (deterministic replays are not attackable)"
+        )
+    names = tuple(sorted(bounds))
+    return BoxSpace(
+        names=names,
+        lo=tuple(bounds[n][0] for n in names),
+        hi=tuple(bounds[n][1] for n in names),
+    )
+
+
+def nominal_scenario_vector(spec, space: BoxSpace | None = None) -> jnp.ndarray:
+    """The spec's own generator parameters as a vector in its space."""
+    space = scenario_space(spec) if space is None else space
+    return space.clip(space.from_dict(spec.params_pytree()))

@@ -2,9 +2,10 @@
 # stochastic workload scenario generators, the Lambda billing model, the
 # JAX spot market and its vmapped sweep harness (``market`` is the numpy
 # facade kept for ft/failures compat).
+from ..core.types import PolicyParams, make_policy_params
 from . import (lambda_model, market, runner, scenarios, spot, sweep,
                workloads)
-from .runner import SimConfig, SimTrace, run
+from .runner import SimConfig, SimTrace, default_params, run
 from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
 from .sweep import SweepAxes, make_axes, run_single, run_sweep
@@ -15,4 +16,5 @@ __all__ = ["lambda_model", "market", "runner", "scenarios", "spot", "sweep",
            "workloads", "SimConfig", "SimTrace", "run", "ScenarioSet",
            "default_set", "paper_scenario", "SpotConfig", "SweepAxes",
            "make_axes", "run_single", "run_sweep", "JaxSchedule",
-           "Schedule", "paper_schedule", "uniform_schedule"]
+           "Schedule", "paper_schedule", "uniform_schedule",
+           "PolicyParams", "make_policy_params", "default_params"]

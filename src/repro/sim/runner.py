@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from ..core import billing as billing_lib
 from ..core import controller as ctrl
-from ..core.types import ClusterState, WorkloadState
+from ..core.types import (ClusterState, ControlParams, PolicyParams,
+                          WorkloadState, make_policy_params)
 from . import spot as spot_lib
 from . import workloads as wl
 
@@ -57,6 +58,43 @@ class SimConfig:
     @property
     def dt(self) -> float:
         return self.ctrl.params.monitor_dt
+
+
+def default_params(cfg: SimConfig) -> PolicyParams:
+    """The config's hand-set policy coefficients as a ``PolicyParams``
+    pytree — what every run uses when no tuner supplies candidates.
+    ``bid_mult`` is the *relative* multiplier (1.0 = keep the configured /
+    swept bid multiple untouched)."""
+    return make_policy_params(alpha=cfg.ctrl.params.alpha,
+                              beta=cfg.ctrl.params.beta,
+                              bid_mult=1.0,
+                              ttc_gain=cfg.spot.ttc_gain,
+                              ema_alpha=cfg.spot.ema_alpha)
+
+
+# The tuned-leaf defaults strip_tuned resets cache keys to.
+_PARAMS0 = ControlParams()
+_SPOT0 = spot_lib.SpotConfig()
+
+
+def strip_tuned(cfg: SimConfig) -> SimConfig:
+    """``cfg`` with the ``PolicyParams``-traced leaves struck out.
+
+    Compilation caches key on this: the tuned coefficients (AIMD α/β, TTC
+    escalation gain, EMA weight) flow through the compiled scan as traced
+    inputs, so two configs that differ only there must share one compile —
+    which is what lets a tuner population evaluate under one ``vmap``
+    without retracing.  ``SpotConfig.bid_mult`` stays in the key: like
+    ``instance``/``fleet`` it seeds the *static* runtime construction, and
+    the traced counterpart is the relative ``PolicyParams.bid_mult``
+    (applied on top of the runtime/axis multiple inside the scan).
+    """
+    params = dataclasses.replace(cfg.ctrl.params, alpha=_PARAMS0.alpha,
+                                 beta=_PARAMS0.beta)
+    spot = dataclasses.replace(cfg.spot, ttc_gain=_SPOT0.ttc_gain,
+                               ema_alpha=_SPOT0.ema_alpha)
+    return dataclasses.replace(cfg, ctrl=dataclasses.replace(
+        cfg.ctrl, params=params), spot=spot)
 
 
 class SummaryCarry(NamedTuple):
@@ -162,7 +200,8 @@ def _execute(work: WorkloadState, sched: wl.JaxSchedule, s: jnp.ndarray,
 
 
 def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
-              trace: bool = True) -> Callable:
+              trace: bool = True,
+              params: PolicyParams | None = None) -> Callable:
     """One monitoring instant as a ``lax.scan`` step.
 
     ``schedule`` may be a *traced* ``JaxSchedule`` pytree — the simulator no
@@ -170,6 +209,13 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     every schedule of the same shape and ``sim.sweep`` can feed a different
     generated scenario to every grid point.  Padded rows (``valid=False``)
     never arrive, so they execute nothing, bill nothing and violate nothing.
+
+    ``params`` are the tunable policy coefficients, likewise a (possibly
+    traced) pytree input rather than trace-time constants: AIMD gains reach
+    ``controller.step``, the TTC-escalation gain scales the urgency signal,
+    and the EMA weight reaches ``spot.step`` — so ``repro.opt`` evaluates a
+    whole candidate population through one compile.  ``None`` means the
+    config's own values (``default_params``).
 
     ``trace=True`` emits the full per-tick ``ys`` dict (six (T,) series plus
     three (T, W, K) arrays once stacked) — what ``run`` and the plotting
@@ -180,6 +226,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     """
     sched = wl.as_jax_schedule(schedule)
     use_spot = cfg.spot.enabled
+    pp = default_params(cfg) if params is None else params
 
     def step(state: SimState, _):
         t = state.t
@@ -201,7 +248,8 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         # can hold a mixed-granularity fleet.
         cluster = state.cluster
         if use_spot:
-            spot_state = spot_lib.step(state.spot, cfg.spot, cfg.dt)
+            spot_state = spot_lib.step(state.spot, cfg.spot, cfg.dt,
+                                       ema_alpha=pp.ema_alpha)
             slot_price = spot_state.prices[cluster.itype]   # (I,)
             cores = spot_lib.CORES_TABLE[cluster.itype]     # (I,) CUs/slot
         else:
@@ -241,7 +289,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         # --- control --------------------------------------------------------
         c_state, work, dec = ctrl.step(
             c_state, work, cluster, b_meas, meas_mask, exec_time, items_done,
-            cfg.ctrl, cores=cores)
+            cfg.ctrl, cores=cores, pp=pp)
         if use_spot:
             rt = spot_state.rt
             # Dynamic bid policy: the TTC-aware signal is how far the most
@@ -253,7 +301,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
             frac_done = 1.0 - (jnp.sum(work.m, -1)
                                / jnp.maximum(jnp.sum(work.m0, -1), 1e-9))
             behind = jnp.where(work.active, frac_time - frac_done, -jnp.inf)
-            urgency = jnp.clip(cfg.spot.ttc_gain * jnp.max(behind), 0.0, 1.0)
+            urgency = jnp.clip(pp.ttc_gain * jnp.max(behind), 0.0, 1.0)
             bids = spot_lib.current_bids(cfg.spot, rt, spot_state, urgency)
             # Acquisitions pick the cheapest-per-CU currently-available
             # type of the fleet mix; requests are only fulfilled while the
@@ -384,18 +432,30 @@ def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
 def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
              seed: jnp.ndarray | int | None = None,
              spot_rt: spot_lib.SpotRuntime | None = None,
-             trace: bool = True):
+             trace: bool = True,
+             params: PolicyParams | None = None):
     """The raw jittable simulation: (final state, per-tick outputs).
 
     No ``jax.jit`` inside — callers decide the compilation boundary, which
     lets ``sim.sweep`` vmap this whole function over batched seeds, bids,
-    granularities *and schedules* in a single compile.  With
+    granularities, schedules *and policy parameters* in a single compile.
+    ``params`` (default: the config's values) carries the tunable policy
+    coefficients as a traced pytree; its relative ``bid_mult`` scales the
+    runtime's bid multiple here, so a tuner candidate bids
+    ``params.bid_mult ×`` whatever the config/axis set.  With
     ``trace=False`` the scan emits no per-tick outputs (``ys`` is None):
     the run summary lives in the final state's ``summ`` carry — the
     memory-lean mode sweeps use.
     """
     sched = wl.as_jax_schedule(schedule)
-    step = make_step(sched, cfg, trace=trace)
+    pp = default_params(cfg) if params is None else params
+    if spot_rt is None:
+        spot_rt = spot_lib.make_runtime(cfg.spot)
+    # ``rt.bid`` (the informational static bid) is left untouched: nothing
+    # in the simulation reads it — live bidding goes through current_bids,
+    # which uses ``bid_mult``.
+    spot_rt = spot_rt._replace(bid_mult=spot_rt.bid_mult * pp.bid_mult)
+    step = make_step(sched, cfg, trace=trace, params=pp)
     state = init_state(sched, cfg, seed=seed, spot_rt=spot_rt)
     return jax.lax.scan(step, state, None, length=cfg.ticks)
 
@@ -426,20 +486,26 @@ def cached_scan(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     mode).  ``schedule`` is consulted only for its *scenario shape*
     (``workloads.schedule_shape``) — the returned callable takes the
     schedule pytree as its first argument, so same-shape schedules with
-    different contents (e.g. generated scenarios) reuse one compile.
+    different contents (e.g. generated scenarios) reuse one compile.  The
+    cache keys on ``strip_tuned(cfg)``: the tunable policy coefficients
+    are the callable's trailing ``PolicyParams`` argument, never part of
+    the key, so tuner candidates share one compile too.
 
-    ``with_rt=True`` returns ``f(sched, seed, spot_rt)``; otherwise
-    ``f(sched, seed)``.
+    ``with_rt=True`` returns ``f(sched, seed, spot_rt, params)``;
+    otherwise ``f(sched, seed, params)`` (the runtime then derives from
+    the config — note ``cfg.spot.bid_mult`` stays in the key for exactly
+    that reason).
     """
-    key = (wl.schedule_shape(schedule), cfg, bool(trace), bool(with_rt))
+    key = (wl.schedule_shape(schedule), strip_tuned(cfg), bool(trace),
+           bool(with_rt))
     fn = _JIT_CACHE.get(key)
     if fn is None:
         if with_rt:
-            fn = jax.jit(lambda sched, seed, rt: scan_run(
-                sched, cfg, seed=seed, spot_rt=rt, trace=trace))
+            fn = jax.jit(lambda sched, seed, rt, pp: scan_run(
+                sched, cfg, seed=seed, spot_rt=rt, trace=trace, params=pp))
         else:
-            fn = jax.jit(lambda sched, seed: scan_run(
-                sched, cfg, seed=seed, trace=trace))
+            fn = jax.jit(lambda sched, seed, pp: scan_run(
+                sched, cfg, seed=seed, trace=trace, params=pp))
         _cache_put(key, fn)
     return fn
 
@@ -490,15 +556,17 @@ def count_violations(work_final: WorkloadState,
 
 def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         seed: int | None = None,
-        spot_rt: spot_lib.SpotRuntime | None = None) -> SimTrace:
+        spot_rt: spot_lib.SpotRuntime | None = None,
+        params: PolicyParams | None = None) -> SimTrace:
     s = cfg.seed if seed is None else seed
     sched = wl.as_jax_schedule(schedule)
+    pp = default_params(cfg) if params is None else params
     if spot_rt is None:
         final, ys = cached_scan(sched, cfg, trace=True,
-                                with_rt=False)(sched, s)
+                                with_rt=False)(sched, s, pp)
     else:
         final, ys = cached_scan(sched, cfg, trace=True,
-                                with_rt=True)(sched, s, spot_rt)
+                                with_rt=True)(sched, s, spot_rt, pp)
 
     violations = count_violations(final.work, sched, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,

@@ -79,6 +79,27 @@ def schedule_key(seed, scenario_id) -> jax.Array:
     return jax.random.fold_in(key, scenario_id)
 
 
+def _gen_param(spec, params: dict | None, name: str) -> jnp.ndarray:
+    """One generator parameter as an f32 scalar: the override from the
+    (possibly traced) ``params`` dict when present, else the spec's own
+    static field.  This is the hook that lets ``repro.opt.adversarial``
+    search a generator's parameter space *inside* one compiled sweep —
+    the spec stays the static recipe, the worlds it draws become runtime
+    inputs."""
+    if params is not None and name in params:
+        return jnp.asarray(params[name], jnp.float32)
+    return jnp.asarray(getattr(spec, name), jnp.float32)
+
+
+def _rel_bounds(value: float, lo_mult: float = 0.25, hi_mult: float = 4.0,
+                cap: float | None = None) -> tuple[float, float]:
+    """Default search box around a nominal generator parameter."""
+    lo, hi = lo_mult * value, hi_mult * value
+    if cap is not None:
+        hi = min(hi, cap)
+    return (lo, max(hi, lo + 1e-6))
+
+
 @dataclasses.dataclass(frozen=True)
 class TaskModel:
     """What one arriving workload looks like (family mix and task sizes).
@@ -194,14 +215,20 @@ class Poisson:
     def __post_init__(self):
         _check_arrival_spec(self)
 
-    def rate_path(self, key: jax.Array) -> jnp.ndarray:
-        del key
-        return jnp.full((self.horizon,), self.rate, jnp.float32)
+    def params_pytree(self) -> dict:
+        return {"rate": jnp.asarray(self.rate, jnp.float32)}
 
-    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+    def param_bounds(self) -> dict:
+        return {"rate": _rel_bounds(self.rate)}
+
+    def rate_path(self, key: jax.Array, params: dict | None = None) -> jnp.ndarray:
+        del key
+        return jnp.full((self.horizon,), _gen_param(self, params, "rate"))
+
+    def sample(self, key: jax.Array, params: dict | None = None) -> wl.JaxSchedule:
         k_rate, k_sched = jax.random.split(key)
         return _schedule_from_rates(
-            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+            k_sched, self.rate_path(k_rate, params), self.max_w, self.tasks
         )
 
 
@@ -232,20 +259,38 @@ class MMPP:
             if not 0.0 < v <= 1.0:
                 raise ValueError(f"{field} must be in (0, 1], got {v}")
 
-    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+    def params_pytree(self) -> dict:
+        return {
+            name: jnp.asarray(getattr(self, name), jnp.float32)
+            for name in ("rate_lo", "rate_hi", "p_up", "p_down")
+        }
+
+    def param_bounds(self) -> dict:
+        return {
+            "rate_lo": _rel_bounds(self.rate_lo),
+            "rate_hi": _rel_bounds(self.rate_hi),
+            "p_up": _rel_bounds(self.p_up, cap=1.0),
+            "p_down": _rel_bounds(self.p_down, cap=1.0),
+        }
+
+    def rate_path(self, key: jax.Array, params: dict | None = None) -> jnp.ndarray:
+        p_up = _gen_param(self, params, "p_up")
+        p_down = _gen_param(self, params, "p_down")
+
         def flip(burst, k):
             u = jax.random.uniform(k)
-            burst = jnp.where(burst, u >= self.p_down, u < self.p_up)
+            burst = jnp.where(burst, u >= p_down, u < p_up)
             return burst, burst
 
         keys = jax.random.split(key, self.horizon)
         _, bursts = jax.lax.scan(flip, jnp.asarray(False), keys)
-        return jnp.where(bursts, self.rate_hi, self.rate_lo).astype(jnp.float32)
+        return jnp.where(bursts, _gen_param(self, params, "rate_hi"),
+                         _gen_param(self, params, "rate_lo"))
 
-    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+    def sample(self, key: jax.Array, params: dict | None = None) -> wl.JaxSchedule:
         k_rate, k_sched = jax.random.split(key)
         return _schedule_from_rates(
-            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+            k_sched, self.rate_path(k_rate, params), self.max_w, self.tasks
         )
 
 
@@ -271,18 +316,29 @@ class Diurnal:
         if self.period <= 0:
             raise ValueError(f"period must be positive, got {self.period}")
 
-    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+    def params_pytree(self) -> dict:
+        return {
+            "rate": jnp.asarray(self.rate, jnp.float32),
+            "amp": jnp.asarray(self.amp, jnp.float32),
+        }
+
+    def param_bounds(self) -> dict:
+        return {"rate": _rel_bounds(self.rate), "amp": (0.0, 1.0)}
+
+    def rate_path(self, key: jax.Array, params: dict | None = None) -> jnp.ndarray:
         phase = 0.0
         if self.random_phase:
             phase = jax.random.uniform(key, maxval=2.0 * jnp.pi)
         t = jnp.arange(self.horizon, dtype=jnp.float32)
-        mod = 1.0 + self.amp * jnp.sin(2.0 * jnp.pi * t / self.period + phase)
-        return jnp.maximum(self.rate * mod, 0.0).astype(jnp.float32)
+        amp = _gen_param(self, params, "amp")
+        mod = 1.0 + amp * jnp.sin(2.0 * jnp.pi * t / self.period + phase)
+        rate = _gen_param(self, params, "rate")
+        return jnp.maximum(rate * mod, 0.0).astype(jnp.float32)
 
-    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+    def sample(self, key: jax.Array, params: dict | None = None) -> wl.JaxSchedule:
         k_rate, k_sched = jax.random.split(key)
         return _schedule_from_rates(
-            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+            k_sched, self.rate_path(k_rate, params), self.max_w, self.tasks
         )
 
 
@@ -310,17 +366,31 @@ class FlashCrowd:
                 f"bad spike: ticks={self.spike_ticks} rate={self.spike_rate}"
             )
 
-    def rate_path(self, key: jax.Array) -> jnp.ndarray:
+    def params_pytree(self) -> dict:
+        return {
+            "rate": jnp.asarray(self.rate, jnp.float32),
+            "spike_rate": jnp.asarray(self.spike_rate, jnp.float32),
+        }
+
+    def param_bounds(self) -> dict:
+        return {
+            "rate": _rel_bounds(self.rate),
+            "spike_rate": _rel_bounds(self.spike_rate),
+        }
+
+    def rate_path(self, key: jax.Array, params: dict | None = None) -> jnp.ndarray:
         hi = max(int(self.horizon * self.spike_window), 1)
         tau = jax.random.randint(key, (), 0, hi)
         t = jnp.arange(self.horizon)
         in_spike = (t >= tau) & (t < tau + self.spike_ticks)
-        return (self.rate + self.spike_rate * in_spike).astype(jnp.float32)
+        rate = _gen_param(self, params, "rate")
+        spike_rate = _gen_param(self, params, "spike_rate")
+        return (rate + spike_rate * in_spike).astype(jnp.float32)
 
-    def sample(self, key: jax.Array) -> wl.JaxSchedule:
+    def sample(self, key: jax.Array, params: dict | None = None) -> wl.JaxSchedule:
         k_rate, k_sched = jax.random.split(key)
         return _schedule_from_rates(
-            k_sched, self.rate_path(k_rate), self.max_w, self.tasks
+            k_sched, self.rate_path(k_rate, params), self.max_w, self.tasks
         )
 
 
@@ -362,8 +432,16 @@ class Replay:
     def max_w(self) -> int:
         return self.schedule.n if self.pad_to is None else self.pad_to
 
-    def sample(self, key: jax.Array) -> wl.JaxSchedule:
-        del key
+    def params_pytree(self) -> dict:
+        # A deterministic replay has no generator knobs — an adversarial
+        # search has nothing to move, and ``opt.adversarial`` rejects it.
+        return {}
+
+    def param_bounds(self) -> dict:
+        return {}
+
+    def sample(self, key: jax.Array, params: dict | None = None) -> wl.JaxSchedule:
+        del key, params
         return wl.pad_schedule(self.schedule.as_jax(), self.max_w)
 
     # Frozen dataclasses hash by field values, but numpy arrays aren't

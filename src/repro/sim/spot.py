@@ -261,8 +261,15 @@ def init(rt: SpotRuntime, key: jax.Array) -> SpotState:
                      key=key, rt=rt)
 
 
-def step(state: SpotState, cfg: SpotConfig, dt: float) -> SpotState:
+def step(state: SpotState, cfg: SpotConfig, dt: float,
+         ema_alpha: jnp.ndarray | float | None = None) -> SpotState:
     """Advance all Table-V prices one monitoring interval of ``dt`` seconds.
+
+    ``ema_alpha`` optionally overrides ``cfg.ema_alpha`` with a *traced*
+    per-hour EMA weight (``core.types.PolicyParams.ema_alpha``) — the hook
+    that makes the market-aware bid policy's smoothing coefficient tunable
+    inside one compiled sweep.  Either path runs the same f32 arithmetic,
+    so the default-valued override is bit-identical to no override.
 
     The hourly AR(1) (rho, vol) is rescaled so each type's stationary
     log-price variance vol²/(1-rho²) is preserved at any dt.  Innovations
@@ -304,7 +311,9 @@ def step(state: SpotState, cfg: SpotConfig, dt: float) -> SpotState:
     prices = SPOT_BASE_TABLE * jnp.exp(x) * spike_mult
     # Running price EMA for the market-aware bid policy, rescaled so its
     # per-hour weight is ``ema_alpha`` at any monitoring interval.
-    a_dt = 1.0 - (1.0 - cfg.ema_alpha) ** h
+    a_hr = jnp.asarray(cfg.ema_alpha if ema_alpha is None else ema_alpha,
+                       jnp.float32)
+    a_dt = 1.0 - (1.0 - a_hr) ** h
     ema = (1.0 - a_dt) * state.ema + a_dt * prices
     return SpotState(x=x, prices=prices, spike_mult=spike_mult, ema=ema,
                      key=key, rt=state.rt)

@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.types import PolicyParams
 from . import runner, spot
 from . import scenarios as scen_lib
 from . import workloads as wl
@@ -261,15 +262,17 @@ def _check_axes(cfg: runner.SimConfig, axes: SweepAxes,
 def _point_sched(cfg: runner.SimConfig, trace: bool = False):
     """One grid point with the schedule as an explicit (traced) argument —
     the single definition of what a sweep runs per point (policy-sentinel
-    resolution, runtime construction, scan, masked summary)."""
+    resolution, runtime construction, scan, masked summary).  ``params``
+    is the traced ``PolicyParams`` pytree every run consumes (its relative
+    ``bid_mult`` multiplies this point's bid-multiple axis)."""
     cfg_policy = spot.bid_policy_index(cfg.spot.bid_policy)
 
-    def one(sched, seed, bid_mult, itype, policy, mix):
+    def one(sched, seed, bid_mult, itype, policy, mix, params):
         policy = jnp.where(policy < 0, cfg_policy, policy)
         rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                                policy=policy, mix=mix)
         final, ys = runner.scan_run(sched, cfg, seed=seed, spot_rt=rt,
-                                    trace=trace)
+                                    trace=trace, params=params)
         summary = summarize(final, sched, cfg)
         return (summary, ys) if trace else summary
 
@@ -279,27 +282,29 @@ def _point_sched(cfg: runner.SimConfig, trace: bool = False):
 def point_fn(schedule: ScheduleLike, cfg: runner.SimConfig,
              trace: bool = False):
     """One grid point as a vmappable closure of (seed, bid_mult, itype,
-    policy, mix, scenario).  With a ``ScenarioSet`` the scenario id picks
-    the generator and the schedule is sampled per (seed, scenario) inside
-    the trace; with a plain schedule the id is ignored.  ``trace=True``
-    additionally returns the per-tick ``ys`` (what
+    policy, mix, scenario, params).  With a ``ScenarioSet`` the scenario
+    id picks the generator and the schedule is sampled per (seed,
+    scenario) inside the trace; with a plain schedule the id is ignored.
+    ``params`` is the (traced) ``PolicyParams`` pytree — the tuner in
+    ``repro.opt`` vmaps candidate populations over exactly this argument.
+    ``trace=True`` additionally returns the per-tick ``ys`` (what
     ``benchmarks.bench_throughput`` sizes the trace-mode baseline with)."""
     base = _point_sched(cfg, trace=trace)
     if isinstance(schedule, scen_lib.ScenarioSet):
         sset = schedule
 
-        def one(seed, bid_mult, itype, policy, mix, scenario):
+        def one(seed, bid_mult, itype, policy, mix, scenario, params):
             sched = sset.sample(scenario,
                                 scen_lib.schedule_key(seed, scenario))
-            return base(sched, seed, bid_mult, itype, policy, mix)
+            return base(sched, seed, bid_mult, itype, policy, mix, params)
 
         return one
 
     sj = wl.as_jax_schedule(schedule)
 
-    def one(seed, bid_mult, itype, policy, mix, scenario):
+    def one(seed, bid_mult, itype, policy, mix, scenario, params):
         del scenario
-        return base(sj, seed, bid_mult, itype, policy, mix)
+        return base(sj, seed, bid_mult, itype, policy, mix, params)
 
     return one
 
@@ -323,25 +328,30 @@ def _sweep_callable(schedule: ScheduleLike, cfg: runner.SimConfig,
     with the schedule broadcast.
     """
     donate = donate and jax.default_backend() != "cpu"
+    # Key on the config with the PolicyParams-traced leaves struck out:
+    # the params pytree is a broadcast *argument* of the compiled sweep,
+    # so sweeps at different tuned coefficients share one compile.
+    cfg_key = runner.strip_tuned(cfg)
     if isinstance(schedule, scen_lib.ScenarioSet):
-        key = ("sweep", schedule, cfg, n_dev, donate)
+        key = ("sweep", schedule, cfg_key, n_dev, donate)
         sched_key_fn = point_fn(schedule, cfg)
 
-        def pt(seed, bid_mult, itype, policy, mix, scenario, sched):
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
             del sched
-            return sched_key_fn(seed, bid_mult, itype, policy, mix, scenario)
+            return sched_key_fn(seed, bid_mult, itype, policy, mix, scenario,
+                                params)
     else:
-        key = ("sweep", wl.schedule_shape(schedule), cfg, n_dev, donate)
+        key = ("sweep", wl.schedule_shape(schedule), cfg_key, n_dev, donate)
         base = _point_sched(cfg)
 
-        def pt(seed, bid_mult, itype, policy, mix, scenario, sched):
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
             del scenario
-            return base(sched, seed, bid_mult, itype, policy, mix)
+            return base(sched, seed, bid_mult, itype, policy, mix, params)
 
     fn = runner._JIT_CACHE.get(key)
     if fn is not None:
         return fn
-    in_axes = (0, 0, 0, 0, 0, 0, None)
+    in_axes = (0, 0, 0, 0, 0, 0, None, None)
     batched = jax.vmap(pt, in_axes=in_axes)
     donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4, 5)) if donate else {}
     if n_dev > 1:
@@ -362,9 +372,14 @@ def _pad_axes(axes: SweepAxes, n: int) -> SweepAxes:
                                mode="edge") for f in axes))
 
 
-def _slice_axes(axes: SweepAxes, lo: int, hi: int) -> SweepAxes:
-    # Fresh copies, never views of the caller's arrays: the chunked path
-    # donates its input buffers to the compiled sweep.
+def _slice_axes(axes: SweepAxes, lo: int, hi: int,
+                copy: bool = True) -> SweepAxes:
+    # With ``copy`` (accelerator backends) the slices are fresh buffers,
+    # never views of the caller's arrays: the chunked path donates its
+    # input buffers to the compiled sweep.  On CPU donation is off, so the
+    # defensive copy would be pure waste — plain slices suffice.
+    if not copy:
+        return SweepAxes(*(f[lo:hi] for f in axes))
     return SweepAxes(*(jnp.array(f[lo:hi], copy=True) for f in axes))
 
 
@@ -377,7 +392,8 @@ def _device_fold(axes: SweepAxes, n_dev: int) -> SweepAxes:
 def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
               axes: SweepAxes,
               chunk_size: int | None = None,
-              devices: int | None = None) -> RunSummary:
+              devices: int | None = None,
+              params: PolicyParams | None = None) -> RunSummary:
     """Every grid point of the axes, summary-mode, sharded and chunked.
 
     ``schedule`` is either one workload schedule (static ``Schedule`` or
@@ -398,10 +414,15 @@ def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
     all — no per-chunk recompiles, results concatenated on host.
     ``devices`` caps the local devices sharded over (default: all); each
     chunk is padded to a device multiple and ``pmap``-sharded.
+
+    ``params`` is one ``PolicyParams`` setting broadcast to every grid
+    point (default: the config's own values) — the per-point *bid* axis
+    still comes from ``axes.bid_mult``, which ``params.bid_mult`` scales.
     """
     _check_axes(cfg, axes, schedule)
     if chunk_size is not None and int(chunk_size) < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    pp = runner.default_params(cfg) if params is None else params
     is_set = isinstance(schedule, scen_lib.ScenarioSet)
     # The dummy stands in for the (unused) schedule argument when the
     # scenario set generates schedules internally.
@@ -412,34 +433,51 @@ def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
     n_dev = min(n_dev, avail, b)
 
     if chunk_size is None and n_dev == 1:
-        return _sweep_callable(schedule, cfg, 1)(*axes, sched)
+        return _sweep_callable(schedule, cfg, 1)(*axes, sched, pp)
 
     chunk = b if chunk_size is None else min(int(chunk_size), b)
     # Each compiled chunk covers a device multiple of runs.
     chunk = -(-chunk // n_dev) * n_dev
+    donating = jax.default_backend() != "cpu"
     fn = _sweep_callable(schedule, cfg, n_dev, donate=True)
 
     outs = []
     for lo in range(0, b, chunk):
-        part = _pad_axes(_slice_axes(axes, lo, min(lo + chunk, b)), chunk)
+        part = _pad_axes(_slice_axes(axes, lo, min(lo + chunk, b),
+                                     copy=donating), chunk)
         if n_dev > 1:
-            res = fn(*_device_fold(part, n_dev), sched)
+            res = fn(*_device_fold(part, n_dev), sched, pp)
             res = jax.tree.map(
                 lambda x: x.reshape((chunk,) + x.shape[2:]), res)
         else:
-            res = fn(*part, sched)
+            res = fn(*part, sched, pp)
         # Off-device before the next chunk so live bytes stay O(chunk).
         outs.append(jax.tree.map(np.asarray, res))
-    total = RunSummary(*(np.concatenate([getattr(o, f) for o in outs])[:b]
-                         for f in RunSummary._fields))
-    return jax.tree.map(jnp.asarray, total)
+
+    # Only the *last* chunk can carry padding (`_pad_axes` repeats its
+    # final row up to the chunk shape); when the grid divides the chunk
+    # size evenly there is none, and the concat/slice round-trip is
+    # skipped entirely.
+    n_pad = -b % chunk
+    fields = []
+    for name in RunSummary._fields:
+        arrs = [getattr(o, name) for o in outs]
+        cat = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+        if cat.shape[0] != b + n_pad:
+            raise AssertionError(
+                f"chunked sweep produced {cat.shape[0]} rows for {b} grid "
+                f"points (+{n_pad} padding) — padded points would leak "
+                "into the summary")
+        fields.append(cat[:b] if n_pad else cat)
+    return RunSummary(*(jnp.asarray(f) for f in fields))
 
 
 def run_single(schedule: ScheduleLike, cfg: runner.SimConfig,
                seed: int, bid_mult: float,
                instance: FleetMix = "m3.medium",
                policy: str | int | None = None,
-               scenario: int = 0) -> RunSummary:
+               scenario: int = 0,
+               params: PolicyParams | None = None) -> RunSummary:
     """One grid point as a standalone jitted run — the reference the
     vmapped sweep is tested against (and a handy debug entry point).
     With a ``ScenarioSet`` the point's schedule is sampled exactly as the
@@ -464,6 +502,7 @@ def run_single(schedule: ScheduleLike, cfg: runner.SimConfig,
         sched = wl.as_jax_schedule(schedule)
     rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                            policy=policy, mix=jnp.asarray(mask))
+    pp = runner.default_params(cfg) if params is None else params
     final, _ = runner.cached_scan(sched, cfg, trace=False,
-                                  with_rt=True)(sched, seed, rt)
+                                  with_rt=True)(sched, seed, rt, pp)
     return summarize(final, sched, cfg)

@@ -243,6 +243,31 @@ def test_scenario_sweep_chunked_equals_unchunked():
         )
 
 
+def test_chunked_prime_grid_drops_all_padding():
+    """A prime-sized grid against every chunking relationship: dividing,
+    non-dividing (padded final chunk) and oversized chunks must all return
+    exactly B unpadded rows equal to the unchunked sweep — padded points
+    can never leak into the summary."""
+    sset = default_set(max_w=32, horizon=15)
+    cfg = _spot_cfg(ticks=40)
+    # 13 grid points: a prime B so only chunk_size ∈ {1, 13} divides it.
+    axes = make_axes(seeds=[0], bid_mults=[1.5, 2.0],
+                     scenarios=sset)  # 1 × 2 × 5 = 10 … plus 3 more below
+    extra = make_axes(seeds=[1], bid_mults=[1.5], scenarios=[0, 1, 2])
+    axes = type(axes)(*(jnp.concatenate([a, b])
+                        for a, b in zip(axes, extra)))
+    b = int(axes.seed.shape[0])
+    assert b == 13
+    whole = run_sweep(sset, cfg, axes)
+    for chunk in (1, 4, 13, 64):
+        parts = run_sweep(sset, cfg, axes, chunk_size=chunk)
+        assert np.asarray(parts.cost).shape[0] == b
+        for f in whole._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(whole, f)), np.asarray(getattr(parts, f)),
+                err_msg=f"{f} @ chunk={chunk}")
+
+
 def test_run_sweep_rejects_out_of_range_scenario():
     cfg = _spot_cfg()
     sset = ScenarioSet((Poisson(horizon=10, max_w=8),))

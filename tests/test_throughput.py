@@ -46,8 +46,8 @@ def _trace_summary(cfg, seed, bid_mult, instance="m3.medium", policy=None):
     rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                            policy=policy, mix=jnp.asarray(mask))
     sched = SCHED.as_jax()
-    final, ys = runner.cached_scan(sched, cfg, trace=True,
-                                   with_rt=True)(sched, seed, rt)
+    final, ys = runner.cached_scan(sched, cfg, trace=True, with_rt=True)(
+        sched, seed, rt, runner.default_params(cfg))
     return sweep.summarize_trace(final, ys, SCHED, cfg)
 
 

@@ -1,0 +1,272 @@
+"""Tuner subsystem (ISSUE 5): traced PolicyParams + in-jit CEM/ES tuning.
+
+The contract under test:
+
+  * promoting the policy coefficients to a traced pytree changed nothing —
+    a run at the default ``PolicyParams`` is bit-identical to a run that
+    never mentions them, across the scan, the cached entry points and
+    ``run_sweep``;
+  * a whole candidate population evaluates under one ``vmap`` with a
+    single trace of the objective (no per-candidate recompiles);
+  * same key ⇒ bit-identical tuning outcome (CEM and ES);
+  * tuning strictly beats the hand-set defaults on MMPP and FlashCrowd;
+  * the adversarial search respects the generator's parameter bounds and
+    never reports a world milder than the nominal one.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import opt
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams, PolicyParams
+from repro.sim import (
+    SimConfig,
+    SpotConfig,
+    default_params,
+    default_set,
+    make_axes,
+    make_policy_params,
+    run_single,
+    run_sweep,
+    runner,
+    spot,
+    sweep,
+)
+from repro.sim.scenarios import FlashCrowd, MMPP
+
+SEEDS = (0, 1, 2)
+
+
+def _cfg(policy="aimd", bid_policy="ttc", ticks=60) -> SimConfig:
+    """A market where every tuned coefficient can matter: spiky m3.xlarge
+    prices, TTC-aware bidding at a floor the market clears above."""
+    return SimConfig(
+        ctrl=ControllerConfig(
+            policy=policy,
+            params=ControlParams(monitor_dt=300.0),
+            billing=BillingParams(terminate="immediate"),
+        ),
+        ticks=ticks,
+        spot=SpotConfig(
+            enabled=True,
+            instance="m3.xlarge",
+            bid_policy=bid_policy,
+            bid_mult=1.5,
+            p_spike_per_core=0.02,
+            spike_hours=3.0,
+        ),
+    )
+
+
+# --------------------------------------------- default-params bit-identity --
+
+
+def test_default_params_bit_identical_across_entry_points():
+    """params=None and an explicitly passed default pytree must be the same
+    program — summaries equal bit for bit (the refactor's no-op proof)."""
+    cfg = _cfg()
+    sset = default_set()
+    for scenario in (0, 1):
+        for seed in SEEDS:
+            plain = run_single(sset, cfg, seed=seed, bid_mult=1.5,
+                               instance="m3.xlarge", scenario=scenario)
+            explicit = run_single(sset, cfg, seed=seed, bid_mult=1.5,
+                                  instance="m3.xlarge", scenario=scenario,
+                                  params=default_params(cfg))
+            for f in sweep.RunSummary._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(plain, f)),
+                    np.asarray(getattr(explicit, f)),
+                    err_msg=f"{f} @ seed={seed} scenario={scenario}")
+
+
+def test_default_params_bit_identical_in_run_sweep():
+    cfg = _cfg()
+    sset = default_set()
+    axes = make_axes(seeds=list(SEEDS), bid_mults=[1.2, 1.5],
+                     instances=["m3.xlarge"], scenarios=sset)
+    plain = run_sweep(sset, cfg, axes)
+    explicit = run_sweep(sset, cfg, axes, params=default_params(cfg))
+    for f in sweep.RunSummary._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(plain, f)),
+                                      np.asarray(getattr(explicit, f)),
+                                      err_msg=f)
+
+
+def test_configs_differing_only_in_tuned_leaves_share_compile():
+    """strip_tuned keys the caches: a config with different AIMD gains must
+    reuse the compiled scan and still produce its own (different) result."""
+    cfg_a = _cfg()
+    params_b = dataclasses.replace(cfg_a.ctrl.params, alpha=9.0, beta=0.7)
+    cfg_b = dataclasses.replace(
+        cfg_a, ctrl=dataclasses.replace(cfg_a.ctrl, params=params_b))
+    sched = default_set()[0].sample(jax.random.PRNGKey(0))
+    f_a = runner.cached_scan(sched, cfg_a, trace=False, with_rt=True)
+    f_b = runner.cached_scan(sched, cfg_b, trace=False, with_rt=True)
+    assert f_a is f_b, "tuned leaves leaked into the compilation cache key"
+    # Same compiled callable, different default params → different runs.
+    rt = spot.make_runtime(cfg_a.spot)
+    out_a, _ = f_a(sched, 0, rt, default_params(cfg_a))
+    out_b, _ = f_b(sched, 0, rt, default_params(cfg_b))
+    assert float(out_a.cluster.cum_cost) != float(out_b.cluster.cum_cost)
+    # And the shared-cache result must equal a *fresh* (uncached) run of
+    # cfg_b bit for bit — i.e. no cfg_b coefficient is still baked into
+    # the compiled scan as cfg_a's trace-time constant (the fairshare
+    # guard band once was).
+    fresh_b, _ = runner.scan_run(sched, cfg_b, seed=0, spot_rt=rt,
+                                 trace=False,
+                                 params=default_params(cfg_b))
+    np.testing.assert_array_equal(np.asarray(out_b.cluster.cum_cost),
+                                  np.asarray(fresh_b.cluster.cum_cost))
+    np.testing.assert_array_equal(np.asarray(out_b.summ.max_committed),
+                                  np.asarray(fresh_b.summ.max_committed))
+
+
+def test_population_single_trace_under_vmap():
+    """64 candidate PolicyParams through one vmapped objective = exactly one
+    trace of the sweep objective (the no-recompile tentpole claim)."""
+    cfg = _cfg()
+    obj = opt.PolicyObjective(cfg, default_set(), seeds=(0, 1),
+                              scenarios=[1], space=opt.policy_space())
+    space = opt.policy_space()
+    pop = jax.vmap(space.from_unit)(
+        jax.random.uniform(jax.random.PRNGKey(0), (64, space.dim)))
+    scores = jax.jit(jax.vmap(obj))(pop)
+    assert scores.shape == (64,)
+    assert obj.n_traces == 1
+    assert bool(np.all(np.isfinite(np.asarray(scores))))
+
+
+# ----------------------------------------------------------- determinism --
+
+
+@pytest.mark.parametrize("method", ["cem", "es"])
+def test_same_seed_tuning_is_bit_deterministic(method):
+    cfg = _cfg()
+    kw = dict(scenarios=[1], method=method, pop_size=6, generations=2)
+    a = opt.tune_policy(cfg, default_set(), seeds=(0, 1),
+                        key=jax.random.PRNGKey(7), **kw)
+    b = opt.tune_policy(cfg, default_set(), seeds=(0, 1),
+                        key=jax.random.PRNGKey(7), **kw)
+    np.testing.assert_array_equal(np.asarray(a.result.best_vec),
+                                  np.asarray(b.result.best_vec))
+    np.testing.assert_array_equal(np.asarray(a.result.best_score),
+                                  np.asarray(b.result.best_score))
+    np.testing.assert_array_equal(np.asarray(a.result.history_best),
+                                  np.asarray(b.result.history_best))
+    # A different key explores differently (not a constant function).
+    c = opt.tune_policy(cfg, default_set(), seeds=(0, 1),
+                        key=jax.random.PRNGKey(8), **kw)
+    assert not np.array_equal(np.asarray(a.result.best_vec),
+                              np.asarray(c.result.best_vec))
+
+
+# ------------------------------------------------- tuned beats defaults --
+
+
+@pytest.mark.parametrize("spec_idx,name", [(1, "mmpp"), (3, "flash")])
+def test_tuned_params_beat_defaults(spec_idx, name):
+    """CEM with the default injected can never lose to it in-sample, and
+    on these scenarios a modest budget finds a strict improvement."""
+    cfg = _cfg()
+    tuning = opt.tune_policy(cfg, default_set(), seeds=(0, 1, 2),
+                             key=jax.random.PRNGKey(0),
+                             scenarios=[spec_idx], pop_size=12,
+                             generations=4)
+    tuned, default = (float(tuning.result.best_score),
+                      float(tuning.default_score))
+    assert tuned <= default, f"{name}: tuned {tuned} worse than {default}"
+    assert tuned < default, f"{name}: no strict improvement over default"
+    assert tuning.objective.n_traces == 1
+    # The tuned vector respects the policy box.
+    assert opt.policy_space().contains(tuning.result.best_vec)
+
+
+# ------------------------------------------------------------ adversarial --
+
+
+def test_adversarial_search_respects_bounds():
+    cfg = _cfg()
+    spec = MMPP(horizon=30, max_w=48)
+    att = opt.attack_policy(cfg, spec, None, seeds=(0, 1),
+                            key=jax.random.PRNGKey(3), pop_size=8,
+                            generations=3)
+    space = opt.scenario_space(spec)
+    assert space.contains(att.worst_vec)
+    assert set(att.worst_params) == set(space.names)
+    # Injecting the nominal world makes the attack's result ≥ nominal.
+    assert float(att.worst_score) >= float(att.nominal_score)
+    assert att.damage >= 0.0
+
+
+def test_adversarial_finds_worse_world_than_nominal():
+    cfg = _cfg()
+    att = opt.attack_policy(cfg, FlashCrowd(horizon=30, max_w=48),
+                            None, seeds=(0, 1),
+                            key=jax.random.PRNGKey(4), pop_size=12,
+                            generations=4)
+    assert float(att.worst_score) > float(att.nominal_score)
+
+
+def test_replay_scenarios_are_not_attackable():
+    from repro.sim.scenarios import paper_scenario
+
+    with pytest.raises(ValueError, match="not attackable|no tunable"):
+        opt.scenario_space(paper_scenario())
+
+
+def test_scenario_param_overrides_change_sampling():
+    """The with-params sampling hook actually moves the generator, and the
+    no-override path is bit-identical to the legacy signature."""
+    spec = MMPP(horizon=40, max_w=96)
+    key = jax.random.PRNGKey(5)
+    base = spec.sample(key)
+    again = spec.sample(key, params=None)
+    for f, a, b in zip(base._fields, base, again):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+    hot = spec.sample(key, params={
+        "rate_lo": jnp.asarray(1.2, jnp.float32),
+        "rate_hi": jnp.asarray(12.0, jnp.float32)})
+    assert int(jnp.sum(hot.valid)) > int(jnp.sum(base.valid))
+
+
+# ------------------------------------------------------- robust min–max --
+
+
+def test_robust_tune_runs_and_tracks_worst_case():
+    cfg = _cfg()
+    rob = opt.robust_tune(cfg, MMPP(horizon=30, max_w=48), seeds=(0, 1),
+                          key=jax.random.PRNGKey(6), rounds=1, pop_size=6,
+                          generations=2)
+    assert isinstance(rob.params, PolicyParams)
+    assert opt.policy_space().contains(rob.vec)
+    assert len(rob.rounds) == 1
+    assert rob.pool.shape[0] == 2  # nominal + one attack world
+    assert float(rob.worst_score) >= 0.0
+
+
+# ------------------------------------------------------- vector plumbing --
+
+
+def test_policy_vector_round_trip():
+    pp = make_policy_params(alpha=7.0, beta=0.8, bid_mult=1.3,
+                            ttc_gain=2.0, ema_alpha=0.5)
+    vec = opt.params_to_vector(pp)
+    back = opt.vector_to_params(vec)
+    for f in PolicyParams._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(pp, f)),
+                                      np.asarray(getattr(back, f)))
+
+
+def test_box_space_unit_round_trip():
+    space = opt.policy_space()
+    vec = opt.default_vector(_cfg())
+    np.testing.assert_allclose(np.asarray(space.from_unit(space.to_unit(vec))),
+                               np.asarray(vec), rtol=1e-6)
+    assert space.contains(vec)
