@@ -1,0 +1,286 @@
+"""Multi-tenant shared-fleet benchmark: consolidation, attribution, profit.
+
+The paper's platform serves one owner; ``sim.tenants`` shares one spot
+fleet across N of them with hierarchical fair-share, per-tenant admission
+and exactly-attributed billing.  This benchmark pins the three claims the
+subsystem makes:
+
+  * **identity** — a one-tenant set is the single-owner simulation bit
+    for bit (every ``RunSummary`` field), and the whole fleet bill lands
+    on that tenant to the last 0.1 m$ unit;
+  * **consolidation** — one shared fleet is cheaper than N dedicated
+    fleets running the *identical* per-tenant workloads (the N_min idle
+    floor and the burst headroom amortize), at an equal-or-better
+    violation count; swept over N ∈ {1, 4, 16, 64} tenants;
+  * **provider profit** — tuning the admission / cross-tenant weight /
+    list-price knobs (``ProfitObjective`` through the stock
+    ``tune_policy`` CEM) strictly improves provider profit over the
+    uniform-price admit-all defaults, in one compile.
+
+Emits ``results/BENCH_tenants.json`` (``kind: "tenants"``), gated in CI
+by ``check_bench_regression.py`` against ``benchmarks/baselines/``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_tenants [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import opt
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import (ScenarioSet, SimConfig, SpotConfig, TenantSet,
+                       TenantSpec, run_single, run_tenants, runner,
+                       tenant_sweep)
+from repro.sim import scenarios as scen
+from repro.sim import tenants as tnt
+
+SCHEMA_VERSION = 1
+TICKS = 60
+MONITOR_DT = 300.0
+MAX_W = 16          # workload rows per tenant
+HORIZON = 20        # arrival window (ticks)
+TTC = 4500.0
+N_LEVELS = (1, 4, 16, 64)
+N_LEVELS_SMOKE = (1, 4)
+ELASTICITY = 0.5    # linear demand shed per unit of price_mult above 1
+MARKET = dict(
+    instance="m3.xlarge",
+    bid_policy="ttc",
+    bid_mult=1.5,
+    p_spike_per_core=0.02,
+    spike_hours=3.0,
+)
+
+
+def _cfg() -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(
+            params=ControlParams(monitor_dt=MONITOR_DT),
+            billing=BillingParams(terminate="immediate"),
+        ),
+        ticks=TICKS,
+        spot=SpotConfig(enabled=True, **MARKET),
+    )
+
+
+def _tenant_kinds() -> tuple:
+    """The four stochastic workload kinds a tenant mix cycles through —
+    per-tenant load light enough that consolidation (not raw capacity) is
+    what the shared fleet exploits."""
+    tm = scen.TaskModel(mean_items=(150.0, 15.0, 100.0, 80.0),
+                        items_sigma=0.8, ttc=TTC)
+    common = dict(horizon=HORIZON, max_w=MAX_W, tasks=tm)
+    return (
+        scen.Poisson(rate=0.3, **common),
+        scen.MMPP(rate_lo=0.1, rate_hi=1.0, p_up=0.1, p_down=0.25,
+                  **common),
+        scen.Diurnal(rate=0.3, amp=0.8, period=24, **common),
+        scen.FlashCrowd(rate=0.15, spike_rate=2.0, spike_ticks=4,
+                        **common),
+    )
+
+
+# Per-kind contract terms: $/CU-hour list price and $/violation credit.
+KIND_PRICE = (0.45, 0.60, 0.45, 0.75)
+KIND_PENALTY = (0.25, 0.50, 0.25, 0.75)
+
+
+def make_mix(n: int) -> TenantSet:
+    """An N-tenant mix cycling through the four workload kinds."""
+    kinds = _tenant_kinds()
+    return TenantSet(tuple(
+        TenantSpec(kinds[i % len(kinds)],
+                   price=KIND_PRICE[i % len(kinds)],
+                   slo_penalty=KIND_PENALTY[i % len(kinds)],
+                   name=f"t{i:02d}_{kinds[i % len(kinds)].name}")
+        for i in range(n)))
+
+
+def run_identity(seeds) -> dict:
+    """One-tenant set vs the single-owner path, bit for bit.
+
+    ``mean_price`` is the one summary field the repo does not promise bit
+    for bit (float accumulation order differs under vmap); every other
+    field must match exactly — the same contract ``tests/test_throughput``
+    pins between trace and summary mode."""
+    cfg = _cfg()
+    spec = _tenant_kinds()[0]
+    ts = TenantSet((TenantSpec(spec),))
+    sset = ScenarioSet((spec,))
+    exact = True
+    attributed = True
+    for seed in seeds:
+        shared = run_tenants(ts, cfg, seed=seed)
+        alone = run_single(sset, cfg, seed=seed, bid_mult=1.0)
+        for f in type(alone)._fields:
+            a = np.asarray(getattr(shared.fleet, f))
+            b = np.asarray(getattr(alone, f))
+            same = (np.allclose(a, b, rtol=1e-6) if f == "mean_price"
+                    else np.array_equal(a, b))
+            exact = exact and bool(same)
+        attributed = attributed and (
+            int(shared.tenants.cost_units[0])
+            == int(np.round(float(alone.cost_horizon)
+                            * runner._COST_UNIT)))
+    return {"n_seeds": len(list(seeds)), "exact_match": bool(exact),
+            "attribution_exact": bool(attributed)}
+
+
+def run_consolidation(n_levels, seeds) -> dict:
+    """Shared fleet vs N dedicated fleets on identical workloads."""
+    cfg = _cfg()
+    out = {}
+    for n in n_levels:
+        ts = make_mix(n)
+        t0 = time.perf_counter()
+        shared = jax.block_until_ready(tenant_sweep(ts, cfg, seeds))
+        wall = time.perf_counter() - t0
+        sh_cost = float(np.mean(np.asarray(shared.fleet.cost_horizon)))
+        sh_viol = int(np.sum(np.asarray(shared.fleet.violations)))
+        att_ok = bool(np.all(
+            np.sum(np.asarray(shared.tenants.cost_units), axis=-1)
+            == np.round(np.asarray(shared.fleet.cost_horizon)
+                        * runner._COST_UNIT).astype(np.int64)))
+        iso_cost, iso_viol = 0.0, 0
+        for seed in seeds:
+            iso = tnt.isolated_runs(ts, cfg, seed=seed)
+            iso_cost += float(np.sum(np.asarray(iso.cost_horizon)))
+            iso_viol += int(np.sum(np.asarray(iso.violations)))
+        iso_cost /= len(list(seeds))
+        saving = 100.0 * (iso_cost - sh_cost) / max(iso_cost, 1e-9)
+        out[str(n)] = {
+            "n_tenants": n,
+            "shared_cost": sh_cost,
+            "isolated_cost": iso_cost,
+            "saving_pct": saving,
+            "shared_violations": sh_viol,
+            "isolated_violations": iso_viol,
+            "attribution_exact": att_ok,
+            "shared_runs_per_s": len(list(seeds)) / wall,
+        }
+    return out
+
+
+def run_profit(seeds, pop_size, generations) -> dict:
+    """Tuned admission/weights/pricing vs uniform defaults, one compile."""
+    cfg = _cfg()
+    ts = make_mix(4)
+    obj = opt.ProfitObjective(cfg, ts, seeds=seeds, elasticity=ELASTICITY)
+    tuning = opt.tune_policy(cfg, None, None, jax.random.PRNGKey(7),
+                             objective=obj, pop_size=pop_size,
+                             generations=generations)
+    uniform_profit = -float(tuning.default_score)
+    tuned_profit = -float(tuning.result.best_score)
+    return {
+        "n_tenants": ts.n,
+        "n_seeds": len(list(seeds)),
+        "pop_size": pop_size,
+        "generations": generations,
+        "elasticity": ELASTICITY,
+        "uniform_profit": uniform_profit,
+        "tuned_profit": tuned_profit,
+        "improvement_pct": 100.0 * (tuned_profit - uniform_profit)
+                           / max(abs(uniform_profit), 1e-9),
+        "objective_traces": int(obj.n_traces),
+        "tuned_params": {
+            n: float(np.asarray(tuning.result.best_vec)[i])
+            for i, n in enumerate(obj.space.names)
+        },
+    }
+
+
+def main(emit, smoke: bool = False) -> dict:
+    n_levels = N_LEVELS_SMOKE if smoke else N_LEVELS
+    id_seeds = (0, 1) if smoke else (0, 1, 2)
+    con_seeds = tuple(range(2 if smoke else 4))
+    prof_seeds = tuple(range(3 if smoke else 4))
+    pop, gens = (8, 4) if smoke else (16, 6)
+
+    identity = run_identity(id_seeds)
+    emit("ten_identity_exact", float(identity["exact_match"]),
+         f"attribution={identity['attribution_exact']}")
+
+    consolidation = run_consolidation(n_levels, con_seeds)
+    for n, row in consolidation.items():
+        emit(f"ten_consolidation_n{n}_saving_pct", row["saving_pct"],
+             f"shared={row['shared_cost']:.4f};iso={row['isolated_cost']:.4f};"
+             f"sviol={row['shared_violations']};iviol={row['isolated_violations']};"
+             f"runs_per_s={row['shared_runs_per_s']:.2f}")
+
+    profit = run_profit(prof_seeds, pop, gens)
+    emit("ten_profit_improvement_pct", profit["improvement_pct"],
+         f"uniform={profit['uniform_profit']:.4f};"
+         f"tuned={profit['tuned_profit']:.4f};"
+         f"traces={profit['objective_traces']}")
+
+    # The acceptance N: the headline 4-tenant mix (present in both modes).
+    head = consolidation["4"]
+    acceptance = {
+        "single_owner_exact": bool(identity["exact_match"]
+                                   and identity["attribution_exact"]),
+        "attribution_exact_all": bool(all(
+            r["attribution_exact"] for r in consolidation.values())),
+        "consolidation_saves": bool(head["saving_pct"] > 0.0),
+        "consolidation_viol_ok": bool(head["shared_violations"]
+                                      <= head["isolated_violations"]),
+        "tuned_ge_uniform": bool(profit["tuned_profit"]
+                                 >= profit["uniform_profit"] - 1e-6),
+        "single_compile": bool(profit["objective_traces"] == 1),
+    }
+    for flag, value in acceptance.items():
+        emit(f"ten_acceptance_{flag}", float(value), "bool")
+
+    report = {
+        "kind": "tenants",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "config": {
+            "ticks": TICKS,
+            "monitor_dt": MONITOR_DT,
+            "max_w": MAX_W,
+            "horizon": HORIZON,
+            "ttc": TTC,
+            "market": dict(MARKET),
+            "n_levels": list(n_levels),
+            "identity_seeds": list(id_seeds),
+            "consolidation_seeds": list(con_seeds),
+            "profit_seeds": list(prof_seeds),
+        },
+        "identity": identity,
+        "consolidation": consolidation,
+        "profit": profit,
+        "acceptance": acceptance,
+    }
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_tenants.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    if not all(acceptance.values()):
+        raise SystemExit(f"tenants acceptance not met: {acceptance}")
+    return report
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI; same acceptance checks")
+    args = ap.parse_args()
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,value,derived")
+    main(emit, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    _cli()

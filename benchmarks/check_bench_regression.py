@@ -50,6 +50,18 @@ spot/bidding report).
     its tuned score inflates beyond ``COST_TOLERANCE`` × baseline;
   * a scenario's tuned-vs-default improvement goes negative.
 
+``BENCH_tenants.json`` (``bench_tenants --smoke``):
+
+  * an acceptance flag flips: ``single_owner_exact`` (a one-tenant set is
+    no longer bit-identical to the single-owner path),
+    ``attribution_exact_all`` (per-tenant billed cost stopped summing
+    exactly to the fleet bill), ``consolidation_saves`` /
+    ``consolidation_viol_ok`` (the shared fleet stopped dominating N
+    dedicated fleets), ``tuned_ge_uniform`` or ``single_compile`` (the
+    profit tuner regressed);
+  * any tracked tenant level's consolidation saving goes non-positive, or
+    its shared-fleet violation count grows beyond baseline.
+
 Exit code 0 = gate passed.  Anything else fails the job; the JSON is
 uploaded as an artifact either way so the trajectory stays inspectable.
 
@@ -75,6 +87,11 @@ BYTES_TOLERANCE = 1.05
 # Wall-clock only catches order-of-magnitude cliffs (e.g. a per-chunk
 # recompile): CI runner generations legitimately differ by a few x.
 SPEED_TOLERANCE = 5.0
+# Summary mode must stay within noise of trace-mode speed (the register
+# carry reached parity in PR 6; the ratio is machine-relative, so the
+# floor leaves slack for scheduler jitter while catching a reintroduced
+# per-tick select chain).
+SPEED_PARITY_FLOOR = 0.85
 
 
 def _schema_smoke_errors(current: dict, baseline: dict) -> list[str]:
@@ -172,6 +189,13 @@ def check_throughput(current: dict, baseline: dict) -> list[str]:
                 f"grids[{grid}] summary runs/sec collapsed: {cur_r} < "
                 f"baseline {base_r} / {SPEED_TOLERANCE}"
             )
+    ratio = current.get("grids", {}).get("frontier", {}).get("speed_ratio")
+    if ratio is not None and ratio < SPEED_PARITY_FLOOR:
+        errors.append(
+            f"frontier summary/trace speed ratio {ratio} fell below the "
+            f"{SPEED_PARITY_FLOOR} parity floor — the summary scan is "
+            "paying per-tick overhead again"
+        )
     return errors
 
 
@@ -269,6 +293,66 @@ def check_tuning(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_tenants(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: tenants`` report (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
+        return errors
+
+    acc = current.get("acceptance", {})
+    for flag, why in (
+        (
+            "single_owner_exact",
+            "a one-tenant set no longer reproduces the single-owner "
+            "simulation bit for bit",
+        ),
+        (
+            "attribution_exact_all",
+            "per-tenant attributed cost no longer sums exactly to the fleet "
+            "bill on some tenant count",
+        ),
+        (
+            "consolidation_saves",
+            "the shared fleet stopped beating N dedicated fleets on cost",
+        ),
+        (
+            "consolidation_viol_ok",
+            "consolidation now violates more TTCs than the dedicated fleets",
+        ),
+        (
+            "tuned_ge_uniform",
+            "profit tuning returned worse-than-uniform provider profit — the "
+            "incumbent injection guarantee broke",
+        ),
+        (
+            "single_compile",
+            "the profit tuning run traced its objective more than once",
+        ),
+    ):
+        if not acc.get(flag):
+            errors.append(f"acceptance flag {flag} is false: {why}")
+
+    for n, base_row in baseline.get("consolidation", {}).items():
+        cur_row = current.get("consolidation", {}).get(n)
+        if cur_row is None:
+            errors.append(f"consolidation[{n}] missing from current results")
+            continue
+        # N=1 is the identity case: one tenant's "shared" fleet IS its
+        # dedicated fleet, so the saving is definitionally zero there.
+        if int(n) > 1 and cur_row["saving_pct"] <= 0.0:
+            errors.append(
+                f"consolidation[{n}] shared-fleet saving went non-positive: "
+                f"{cur_row['saving_pct']:.2f}%"
+            )
+        if cur_row["shared_violations"] > base_row["shared_violations"]:
+            errors.append(
+                f"consolidation[{n}] shared violations grew: "
+                f"{cur_row['shared_violations']} > baseline "
+                f"{base_row['shared_violations']}"
+            )
+    return errors
+
+
 def check_pair(current_path: str, baseline_path: str) -> int:
     """Gate one (current, baseline) JSON pair; returns the exit code."""
     with open(current_path) as f:
@@ -319,6 +403,20 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"paper_exact={acc.get('paper_exact')} "
             f"single_compile={acc.get('single_compile')} "
             f"improvements_pct={improvements}"
+        )
+    elif kind_cur == "tenants":
+        errors = check_tenants(current, baseline)
+        savings = {
+            n: round(row.get("saving_pct", float("nan")), 1)
+            for n, row in current.get("consolidation", {}).items()
+        }
+        acc = current.get("acceptance", {})
+        print(
+            f"bench gate [tenants]: single_owner_exact="
+            f"{acc.get('single_owner_exact')} "
+            f"attribution_exact_all={acc.get('attribution_exact_all')} "
+            f"tuned_ge_uniform={acc.get('tuned_ge_uniform')} "
+            f"consolidation_savings_pct={savings}"
         )
     else:
         errors = check(current, baseline)

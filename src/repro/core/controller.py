@@ -109,6 +109,7 @@ def step(state: ControllerState,
          cfg: ControllerConfig,
          cores: jnp.ndarray | float | None = None,  # CUs per instance/slot
          pp: PolicyParams | None = None,  # traced policy gains (tuning)
+         tenants: tuple | None = None,    # (tenant_id (W,), n, base_w (N,))
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
     # CUs per instance — a traced scalar when the spot fleet's granularity
@@ -151,7 +152,15 @@ def step(state: ControllerState,
     # -- 3. proportional-fair service rates (eqs. 11-14) ---------------------
     n_usable = billing_lib.usable(cluster, cores)
     sched = work.active & confirmed
-    alloc = fairshare.allocate(r, d, sched, n_usable, p, pp=pp)
+    if tenants is None:
+        alloc = fairshare.allocate(r, d, sched, n_usable, p, pp=pp)
+    else:
+        # Multi-tenant shared fleet: the allocation is hierarchical (fleet
+        # → tenant weight → per-task eqs. 13-14).  A single tenant routes
+        # back through ``allocate`` inside, bit-identically.
+        tid, n_tenants, base_w = tenants
+        alloc = fairshare.allocate_tenants(r, d, sched, n_usable, p,
+                                           tid, n_tenants, base_w, pp=pp)
     # Pre-confirmation bootstrap: run a trickle so measurements arrive.
     boot = work.active & ~confirmed
     s = jnp.where(boot, cfg.bootstrap_rate, alloc.s)

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from .types import ControlParams, PolicyParams
@@ -69,6 +70,65 @@ def allocate(r: jnp.ndarray,
 
     # Granted rates are physically capped at N_{w,max} CUs per workload.
     s = jnp.minimum(s_star * scale, params.n_w_max)
+    s = jnp.where(active, s, 0.0)
+    return Allocation(s=s, s_star=s_star, n_star=n_star)
+
+
+def allocate_tenants(r: jnp.ndarray,
+                     d: jnp.ndarray,
+                     active: jnp.ndarray,
+                     n_tot: jnp.ndarray,
+                     params: ControlParams,
+                     tenant_id: jnp.ndarray,
+                     n_tenants: int,
+                     base_w: jnp.ndarray,
+                     pp: PolicyParams | None = None) -> Allocation:
+    """Hierarchical cross-tenant allocation: fleet → tenant → per-task.
+
+    The single-owner ``allocate`` rescales every workload against one
+    fleet-wide AIMD band; with tenants sharing the fleet the band is first
+    split *between* tenants.  Each tenant's demand D_i (its workloads'
+    surge-capped Σ s*, eq. 12 restricted to the tenant) competes for a CU
+    budget proportional to its share weight; the eq. 13-14 multiplicative
+    rescale then runs per tenant against its own budget and band slice, and
+    the per-task N_{w,max} cap applies unchanged.  Weights are the
+    contracted ``base_w`` tilted by ``pp.tenant_wg`` toward high-demand
+    tenants (``exp(wg · demand_share)``; wg = 0 — the default — keeps pure
+    contracted weights) and tenants with no demand cede their budget.
+
+    ``n_tenants == 1`` routes through ``allocate`` itself — a trace-time
+    branch, so a single-tenant shared fleet is *bit-identical* to the
+    single-owner path by construction, not by numerical luck.
+
+    Reported ``n_star`` stays the fleet-wide Σ D_i, so the AIMD scaler sees
+    aggregate demand exactly as in the single-owner case.
+    """
+    if n_tenants == 1:
+        return allocate(r, d, active, n_tot, params, pp=pp)
+    alpha = params.alpha if pp is None else pp.alpha
+    beta = params.beta if pp is None else pp.beta
+    wg = jnp.asarray(0.0) if pp is None else pp.tenant_wg
+
+    s_star = optimal_rates(r, d, active)
+    contrib = jnp.minimum(s_star, params.surge_mult * params.n_w_max)
+    demand = jax.ops.segment_sum(contrib, tenant_id,
+                                 num_segments=n_tenants)          # (N,) D_i
+    n_star = jnp.sum(demand)
+
+    d_share = demand / jnp.maximum(n_star, _EPS)
+    w = base_w * jnp.exp(wg * d_share)
+    w = jnp.where(demand > 0.0, w, 0.0)
+    frac = w / jnp.maximum(jnp.sum(w), _EPS)      # budget fractions, Σ ≤ 1
+    budget = n_tot * frac
+    alpha_i = alpha * frac                        # each tenant's band slice
+
+    over = demand > budget + alpha_i
+    under = demand < beta * budget
+    scale_down = (budget + alpha_i) / jnp.maximum(demand, _EPS)   # eq. 13
+    scale_up = (beta * budget) / jnp.maximum(demand, _EPS)        # eq. 14
+    scale = jnp.where(over, scale_down, jnp.where(under, scale_up, 1.0))
+
+    s = jnp.minimum(s_star * scale[tenant_id], params.n_w_max)
     s = jnp.where(active, s, 0.0)
     return Allocation(s=s, s_star=s_star, n_star=n_star)
 

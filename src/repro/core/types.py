@@ -75,6 +75,68 @@ class BillingParams:
     terminate: str = "boundary"
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """Static multi-tenant layout of a shared-fleet simulation (hashable —
+    part of the compile-cache key via ``SimConfig``).
+
+    The workload axis of a multi-tenant schedule is the concatenation of
+    ``n`` per-tenant blocks of ``max_w`` rows (``sim.tenants`` builds it),
+    so row ``w`` belongs to tenant ``w // max_w``.  ``weights`` are the
+    contracted fair-share weights the hierarchical allocator
+    (``fairshare.allocate_tenants``) and the idle-cost attribution split
+    by; empty means uniform.
+    """
+
+    n: int                              # tenants sharing the fleet
+    max_w: int                          # workload rows per tenant
+    weights: tuple[float, ...] = ()     # per-tenant share weights (uniform
+                                        # when empty)
+    budgets: tuple[float, ...] = ()     # per-tenant $ caps: arrivals are
+                                        # refused once the tenant's
+                                        # attributed bill reaches its cap
+                                        # (empty = uncapped)
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"need at least one tenant, got n={self.n}")
+        if self.max_w < 1:
+            raise ValueError(f"need max_w >= 1, got {self.max_w}")
+        if self.weights and len(self.weights) != self.n:
+            raise ValueError(
+                f"{len(self.weights)} weights for {self.n} tenants")
+        if any(w <= 0.0 for w in self.weights):
+            raise ValueError("tenant weights must be positive")
+        object.__setattr__(self, "weights",
+                           tuple(float(w) for w in self.weights))
+        if self.budgets and len(self.budgets) != self.n:
+            raise ValueError(
+                f"{len(self.budgets)} budgets for {self.n} tenants")
+        if any(b <= 0.0 for b in self.budgets):
+            raise ValueError("tenant budgets must be positive")
+        object.__setattr__(self, "budgets",
+                           tuple(float(b) for b in self.budgets))
+
+    @property
+    def w_total(self) -> int:
+        """Total workload rows of the concatenated schedule."""
+        return self.n * self.max_w
+
+    def weight_vec(self) -> jnp.ndarray:
+        if self.weights:
+            return jnp.asarray(self.weights, jnp.float32)
+        return jnp.ones((self.n,), jnp.float32)
+
+    def budget_vec(self) -> jnp.ndarray:
+        if self.budgets:
+            return jnp.asarray(self.budgets, jnp.float32)
+        return jnp.full((self.n,), jnp.inf, jnp.float32)
+
+    def tenant_ids(self) -> jnp.ndarray:
+        """(n·max_w,) int32 tenant id of every workload row."""
+        return jnp.repeat(jnp.arange(self.n, dtype=jnp.int32), self.max_w)
+
+
 class KalmanState(NamedTuple):
     """Per-(workload, type) scalar Kalman filter (eqs. 4-9)."""
 
@@ -157,6 +219,12 @@ class PolicyParams(NamedTuple):
     ``bid_mult`` is *relative*: it multiplies the configured (or swept)
     bid multiple, so 1.0 — the default — leaves the bid axis untouched and
     a tuner candidate of ``b`` bids ``b ×`` the config/axis multiple.
+
+    The three trailing multi-tenant leaves (``tenant_wg``, ``adm_frac``,
+    ``price_mult``) are neutral at their defaults — zero demand tilt,
+    admit-everything, list pricing — and are only consumed on the
+    ``SimConfig.tenants`` code path (plus provider-revenue scoring), so
+    single-owner simulations are bit-for-bit unchanged by their presence.
     """
 
     alpha: jnp.ndarray      # () AIMD additive increase (CUs per instant)
@@ -164,16 +232,28 @@ class PolicyParams(NamedTuple):
     bid_mult: jnp.ndarray   # () multiplier on the configured bid multiple
     ttc_gain: jnp.ndarray   # () TTC-aware bid-escalation gain
     ema_alpha: jnp.ndarray  # () per-hour weight of the EMA bid policy
+    tenant_wg: jnp.ndarray  # () cross-tenant demand-tilt exponent (0 = pure
+                            #    contracted weights)
+    adm_frac: jnp.ndarray   # () admission: reject a tenant's arrivals while
+                            #    its active rows ≥ adm_frac × max_w (1 =
+                            #    admit everything)
+    price_mult: jnp.ndarray # () provider price multiplier on per-tenant
+                            #    list prices (revenue knob; 1 = list price)
 
 
 def make_policy_params(alpha: float = 5.0, beta: float = 0.9,
                        bid_mult: float = 1.0, ttc_gain: float = 4.0,
-                       ema_alpha: float = 0.3) -> PolicyParams:
+                       ema_alpha: float = 0.3, tenant_wg: float = 0.0,
+                       adm_frac: float = 1.0,
+                       price_mult: float = 1.0) -> PolicyParams:
     """Build a ``PolicyParams`` pytree of f32 scalars (args may be traced)."""
     as_f32 = lambda v: jnp.asarray(v, jnp.float32)  # noqa: E731
     return PolicyParams(alpha=as_f32(alpha), beta=as_f32(beta),
                         bid_mult=as_f32(bid_mult), ttc_gain=as_f32(ttc_gain),
-                        ema_alpha=as_f32(ema_alpha))
+                        ema_alpha=as_f32(ema_alpha),
+                        tenant_wg=as_f32(tenant_wg),
+                        adm_frac=as_f32(adm_frac),
+                        price_mult=as_f32(price_mult))
 
 
 class AimdState(NamedTuple):

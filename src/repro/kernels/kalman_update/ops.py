@@ -5,6 +5,15 @@ compiled for real on TPU and emulated with the interpreter everywhere else
 (CPU CI, tests) — callers no longer have to remember that the previous
 hard-coded ``interpret=True`` silently ran the emulator even under jit on
 TPU hosts.
+
+``kalman_update`` is also explicitly **batchable**: a ``custom_vmap`` rule
+merges any leading batch axis into the kernel's row grid (one ``(B·W, K)``
+launch, rows padded to the block multiple with masked no-op rows) instead
+of letting each ``vmap`` level prepend another grid dimension to the
+``pallas_call``.  That is what lets ``ControllerConfig.kalman_kernel=True``
+run inside the vmapped sweep engine — and inside ``jit(vmap(vmap(...)))``
+tuning stacks — with the same single-pass memory behavior the unbatched
+kernel was written for.
 """
 
 from __future__ import annotations
@@ -12,11 +21,54 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from .kernel import kalman_fused as _kernel
+from .kernel import BLOCK_R, kalman_fused as _kernel
 from .kernel import resolve_interpret
 
 __all__ = ["kalman_update", "resolve_interpret"]
+
+
+@functools.lru_cache(maxsize=None)
+def _batchable(sigma_z2: float, sigma_v2: float, interpret: bool):
+    """The fused update for fixed statics, with an explicit batch rule."""
+
+    @jax.custom_batching.custom_vmap
+    def update(b_hat, pi, b_meas_prev, mask):
+        return _kernel(b_hat, pi, b_meas_prev, mask, sigma_z2, sigma_v2,
+                       interpret=interpret)
+
+    @update.def_vmap
+    def _batched(axis_size, in_batched, b_hat, pi, b_meas_prev, mask):
+        def bcast(x, b):
+            return x if b else jnp.broadcast_to(
+                x, (axis_size,) + tuple(x.shape))
+
+        b_hat, pi, b_meas_prev, mask = (
+            bcast(x, b) for x, b in zip((b_hat, pi, b_meas_prev, mask),
+                                        in_batched))
+        bsz, w, k = b_hat.shape
+        rows = bsz * w
+        # The update is elementwise, so the batch axis folds into the row
+        # axis: one (B·W, K) launch.  Pad the fold to the kernel's row
+        # block with mask-0 rows (a masked row is a no-op pass-through),
+        # then slice the padding back off.
+        pad = -rows % min(BLOCK_R, rows)
+        mask = mask.astype(jnp.int8)
+
+        def fold(x):
+            x = x.reshape((rows, k))
+            return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+        b2, p2 = _kernel(fold(b_hat), fold(pi), fold(b_meas_prev),
+                         fold(mask), sigma_z2, sigma_v2,
+                         interpret=interpret)
+        if pad:
+            b2, p2 = b2[:rows], p2[:rows]
+        out = (b2.reshape((bsz, w, k)), p2.reshape((bsz, w, k)))
+        return out, (True, True)
+
+    return update
 
 
 @functools.partial(jax.jit,
@@ -24,5 +76,6 @@ __all__ = ["kalman_update", "resolve_interpret"]
 def kalman_update(b_hat, pi, b_meas_prev, mask,
                   sigma_z2: float = 0.5, sigma_v2: float = 0.5,
                   interpret: bool | None = None):
-    return _kernel(b_hat, pi, b_meas_prev, mask, sigma_z2, sigma_v2,
-                   interpret=resolve_interpret(interpret))
+    fn = _batchable(float(sigma_z2), float(sigma_v2),
+                    resolve_interpret(interpret))
+    return fn(b_hat, pi, b_meas_prev, mask)

@@ -21,18 +21,20 @@ from . import adversarial, cem, es, objective, robust, space, tuner
 from .adversarial import AttackResult, attack_policy
 from .cem import TuneResult, cem_minimize
 from .es import es_minimize
-from .objective import PolicyObjective, ScenarioObjective, score_summary
+from .objective import (PolicyObjective, ProfitObjective, ScenarioObjective,
+                        score_summary)
 from .robust import RobustResult, robust_tune
-from .space import (BoxSpace, default_vector, nominal_scenario_vector,
-                    params_to_vector, policy_space, scenario_space,
-                    vector_to_params)
+from .space import (TUNED_FIELDS, BoxSpace, default_vector,
+                    nominal_scenario_vector, params_to_vector, policy_space,
+                    scenario_space, vector_to_params)
 from .tuner import PolicyTuning, tune_policy
 
 __all__ = [
     "adversarial", "cem", "es", "objective", "robust", "space", "tuner",
     "AttackResult", "attack_policy", "TuneResult", "cem_minimize",
-    "es_minimize", "PolicyObjective", "ScenarioObjective", "score_summary",
-    "RobustResult", "robust_tune", "BoxSpace", "default_vector",
-    "nominal_scenario_vector", "params_to_vector", "policy_space",
-    "scenario_space", "vector_to_params", "PolicyTuning", "tune_policy",
+    "es_minimize", "PolicyObjective", "ProfitObjective", "ScenarioObjective",
+    "score_summary", "RobustResult", "robust_tune", "BoxSpace",
+    "TUNED_FIELDS", "default_vector", "nominal_scenario_vector",
+    "params_to_vector", "policy_space", "scenario_space",
+    "vector_to_params", "PolicyTuning", "tune_policy",
 ]

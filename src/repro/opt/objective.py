@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from ..core.types import PolicyParams
 from ..sim import runner, spot, sweep
 from ..sim import scenarios as scen_lib
-from .space import BoxSpace, vector_to_params
+from ..sim import tenants as tenants_lib
+from .space import BoxSpace, policy_space, vector_to_params
 
 DEFAULT_PENALTY = 1.0  # $ charged per TTC violation in the score
 
@@ -92,8 +93,10 @@ class PolicyObjective:
         return self._traces
 
     def params_of(self, vec: jnp.ndarray) -> PolicyParams:
-        return vector_to_params(self.space.clip(vec) if self.space is not None
-                                else vec)
+        if self.space is not None:
+            return vector_to_params(self.space.clip(vec),
+                                    names=self.space.names)
+        return vector_to_params(vec)
 
     def _grid(self, vec: jnp.ndarray) -> sweep.RunSummary:
         pp = self.params_of(vec)
@@ -111,6 +114,106 @@ class PolicyObjective:
 
     def evaluate(self, vec: jnp.ndarray) -> sweep.RunSummary:
         """Per-(seed, scenario) summaries of one candidate (host-jitted)."""
+        return self._eval(jnp.asarray(vec, jnp.float32))
+
+
+# Which policy leaves a provider tunes by default: the cross-tenant weight
+# tilt, the admission squeeze, and the list-price multiple.
+PROVIDER_FIELDS: tuple[str, ...] = ("tenant_wg", "adm_frac", "price_mult")
+
+
+class ProfitObjective:
+    """Provider profit over a seeds batch of shared-fleet runs, negated
+    (the tuners minimize).
+
+    Profit of one run = Σ_i revenue_i − fleet spot bill − Σ_i
+    ``slo_penalty_i`` · violations_i, where tenant ``i``'s revenue is
+    their contracted $/CU-hour price × the candidate's ``price_mult`` ×
+    the service they actually received.  Raising the list price sheds
+    demand: delivered service is scaled by ``max(0, 1 − elasticity ·
+    (price_mult − 1))`` — the linear-demand model under which the
+    revenue-optimal multiple sits at ``(1 + elasticity) / (2 ·
+    elasticity)`` rather than at either bound.  ``tenant_wg`` and
+    ``adm_frac`` act inside the simulation itself (allocation tilt,
+    admission control); ``price_mult`` only reprices.
+
+    Drop-in for ``tune_policy(objective=...)``: exposes ``space`` (default
+    ``PROVIDER_FIELDS``), ``default_score``, ``n_traces`` and
+    ``evaluate``, and compiles its seeds batch exactly once.
+    """
+
+    def __init__(self, cfg: runner.SimConfig, tset, seeds,
+                 elasticity: float = 0.5, space: BoxSpace | None = None):
+        if not 0.0 <= elasticity <= 1.0:
+            raise ValueError(
+                f"elasticity must be in [0, 1], got {elasticity}")
+        self.cfg = cfg
+        self.tset = tset
+        self.elasticity = float(elasticity)
+        self.space = (policy_space(names=PROVIDER_FIELDS) if space is None
+                      else space)
+        self.seeds = jnp.asarray(list(seeds), jnp.int32)
+        self.scfg = tset.sim_config(cfg)
+        self._itype, self._mix, self._bid, self._pol = run_env(cfg)
+        self._prices = jnp.asarray([s.price for s in tset.specs],
+                                   jnp.float32)
+        self._pens = jnp.asarray([s.slo_penalty for s in tset.specs],
+                                 jnp.float32)
+        self._traces = 0
+        self._eval = jax.jit(self._runs)
+        self._score = jax.jit(self._profit)
+
+    @property
+    def n_traces(self) -> int:
+        return self._traces
+
+    def params_of(self, vec: jnp.ndarray) -> PolicyParams:
+        return vector_to_params(self.space.clip(vec),
+                                names=self.space.names)
+
+    def _runs(self, vec: jnp.ndarray) -> tenants_lib.TenantRun:
+        pp = self.params_of(vec)
+
+        def one(seed):
+            sched = self.tset.sample(seed)
+            rt = spot.make_runtime(self.scfg.spot, itype=self._itype,
+                                   bid_mult=self._bid, policy=self._pol,
+                                   mix=self._mix)
+            final, _ = runner.scan_run(sched, self.scfg, seed=seed,
+                                       spot_rt=rt, trace=False, params=pp)
+            return tenants_lib.TenantRun(
+                fleet=sweep.summarize(final, sched, self.scfg),
+                tenants=tenants_lib.summarize_tenants(final, sched,
+                                                      self.scfg))
+
+        return jax.vmap(one)(self.seeds)
+
+    def _profit(self, vec: jnp.ndarray) -> jnp.ndarray:
+        """Mean provider profit ($ per run) of one candidate."""
+        pm = self.params_of(vec).price_mult
+        runs = self._runs(vec)
+        shed = jnp.maximum(0.0, 1.0 - self.elasticity * (pm - 1.0))
+        revenue = jnp.sum(runs.tenants.service / 3600.0 * self._prices
+                          * pm * shed, axis=-1)
+        fines = jnp.sum(
+            runs.tenants.violations.astype(jnp.float32) * self._pens,
+            axis=-1)
+        return jnp.mean(revenue - runs.fleet.cost_horizon - fines)
+
+    def __call__(self, vec: jnp.ndarray) -> jnp.ndarray:
+        self._traces += 1
+        return -self._profit(vec)
+
+    def default_score(self, vec: jnp.ndarray) -> jnp.ndarray:
+        """The (negated) profit of the incumbent vector, own jit."""
+        return -self._score(jnp.asarray(vec, jnp.float32))
+
+    def profit(self, vec: jnp.ndarray) -> jnp.ndarray:
+        """Mean profit ($, positive-good) of a vector, host-jitted."""
+        return self._score(jnp.asarray(vec, jnp.float32))
+
+    def evaluate(self, vec: jnp.ndarray) -> tenants_lib.TenantRun:
+        """Per-seed ``TenantRun`` batch of one candidate (host-jitted)."""
         return self._eval(jnp.asarray(vec, jnp.float32))
 
 

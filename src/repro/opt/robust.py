@@ -56,7 +56,8 @@ class _PoolObjective:
         self._itype, self._mix, self._bid, self._pol = run_env(cfg)
 
     def __call__(self, vec: jnp.ndarray) -> jnp.ndarray:
-        pp = vector_to_params(self.pspace.clip(vec))
+        pp = vector_to_params(self.pspace.clip(vec),
+                              names=self.pspace.names)
 
         def world(wvec):
             gen = self.sspace.to_dict(wvec)
@@ -105,7 +106,7 @@ def robust_tune(cfg: runner.SimConfig, spec, seeds, key: jax.Array,
         raise ValueError(f"rounds must be >= 1, got {rounds}")
     pspace = policy_space(bounds)
     sspace = scenario_space(spec)
-    d0 = pspace.clip(default_vector(cfg))
+    d0 = pspace.clip(default_vector(cfg, names=pspace.names))
     pol_vec = d0
     pool = [nominal_scenario_vector(spec, sspace)]
     for world in initial_worlds or ():
@@ -121,7 +122,9 @@ def robust_tune(cfg: runner.SimConfig, spec, seeds, key: jax.Array,
             o, pspace, k, pop_size=pop_size, generations=generations,
             init=v, inject=i))(k_tune)
         pol_vec = pspace.clip(jnp.asarray(tuned.best_vec))
-        att = attack_policy(cfg, spec, vector_to_params(pol_vec), seeds,
+        att = attack_policy(cfg, spec,
+                            vector_to_params(pol_vec, names=pspace.names),
+                            seeds,
                             k_att, pop_size=pop_size,
                             generations=generations, penalty=penalty,
                             scenario_id=scenario_id)
@@ -131,7 +134,9 @@ def robust_tune(cfg: runner.SimConfig, spec, seeds, key: jax.Array,
             "worst_score": float(att.worst_score),
             "worst_params": att.worst_params,
         })
-    return RobustResult(params=vector_to_params(pol_vec), vec=pol_vec,
+    return RobustResult(params=vector_to_params(pol_vec,
+                                                names=pspace.names),
+                        vec=pol_vec,
                         worst_score=att.worst_score,
                         pool=jnp.stack(pool), rounds=tuple(history),
                         final_attack=att)

@@ -26,21 +26,33 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.types import PolicyParams
+from ..core.types import PolicyParams, make_policy_params
 from ..sim import runner
 
 # Default tuning box for the policy coefficients.  The AIMD band keeps the
 # additive gain within the N_min..N_max head-room and the multiplicative
 # decrease a genuine decrease; the relative bid multiple spans cautious
 # (0.4×) to aggressive (2.5×) versions of the configured bid; the EMA
-# weight covers sluggish to near-instant market tracking.
+# weight covers sluggish to near-instant market tracking.  The three
+# multi-tenant leaves span strong anti- to pro-demand weight tilt, a real
+# admission squeeze up to admit-all, and quarter- to triple-list pricing.
 POLICY_BOUNDS: dict[str, tuple[float, float]] = {
     "alpha": (1.0, 20.0),
     "beta": (0.5, 0.99),
     "bid_mult": (0.4, 2.5),
     "ttc_gain": (0.5, 12.0),
     "ema_alpha": (0.05, 0.9),
+    "tenant_wg": (-4.0, 4.0),
+    "adm_frac": (0.05, 1.0),
+    "price_mult": (0.25, 3.0),
 }
+
+# The classic five-coefficient tuning subset — the default ``policy_space``
+# and the exact space every pre-tenant benchmark/tuning baseline ran in.
+# The multi-tenant leaves join a space only when explicitly named (or given
+# bounds), so committed tuning baselines stay byte-identical.
+TUNED_FIELDS: tuple[str, ...] = ("alpha", "beta", "bid_mult", "ttc_gain",
+                                 "ema_alpha")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,9 +123,31 @@ class BoxSpace:
         return bool(np.all(v >= lo) and np.all(v <= hi))
 
 
-def policy_space(bounds: dict[str, tuple[float, float]] | None = None) -> BoxSpace:
-    """The ``PolicyParams`` tuning box, leaves in field order.  ``bounds``
-    overrides individual parameter boxes (e.g. pin one by a tight box)."""
+def _check_names(names) -> tuple[str, ...]:
+    names = tuple(names)
+    unknown = set(names) - set(PolicyParams._fields)
+    if unknown:
+        raise ValueError(
+            f"unknown PolicyParams fields {sorted(unknown)}; "
+            f"fields are {PolicyParams._fields}"
+        )
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate fields in {names}")
+    # Field order keeps vectors comparable regardless of how a caller
+    # spelled the subset.
+    return tuple(f for f in PolicyParams._fields if f in set(names))
+
+
+def policy_space(bounds: dict[str, tuple[float, float]] | None = None,
+                 names=None) -> BoxSpace:
+    """A ``PolicyParams`` tuning box, leaves in field order.
+
+    ``names`` selects which leaves are tuned (default: the classic
+    ``TUNED_FIELDS`` five, *plus* any field given explicit ``bounds`` — so
+    ``policy_space(bounds={"tenant_wg": (-2, 2)})`` opts the tenant knob
+    into the space without touching the default baseline space).
+    ``bounds`` overrides individual parameter boxes.
+    """
     merged = dict(POLICY_BOUNDS)
     if bounds:
         unknown = set(bounds) - set(PolicyParams._fields)
@@ -123,7 +157,9 @@ def policy_space(bounds: dict[str, tuple[float, float]] | None = None) -> BoxSpa
                 f"fields are {PolicyParams._fields}"
             )
         merged.update(bounds)
-    names = PolicyParams._fields
+    if names is None:
+        names = set(TUNED_FIELDS) | set(bounds or {})
+    names = _check_names(names)
     return BoxSpace(
         names=names,
         lo=tuple(merged[n][0] for n in names),
@@ -131,21 +167,48 @@ def policy_space(bounds: dict[str, tuple[float, float]] | None = None) -> BoxSpa
     )
 
 
-def params_to_vector(pp: PolicyParams) -> jnp.ndarray:
-    """PolicyParams pytree → flat (5,) f32 vector, field order."""
-    return jnp.stack([jnp.asarray(v, jnp.float32) for v in pp])
+def params_to_vector(pp: PolicyParams, names=None) -> jnp.ndarray:
+    """PolicyParams pytree → flat f32 vector (``names`` order; default:
+    every field)."""
+    names = PolicyParams._fields if names is None else _check_names(names)
+    return jnp.stack([jnp.asarray(getattr(pp, n), jnp.float32)
+                      for n in names])
 
 
-def vector_to_params(vec: jnp.ndarray) -> PolicyParams:
-    """Flat (5,) vector → PolicyParams pytree (vec may be traced)."""
+def vector_to_params(vec: jnp.ndarray, names=None) -> PolicyParams:
+    """Flat vector → PolicyParams pytree (vec may be traced).
+
+    ``names`` says which fields the vector's components are (field order);
+    the rest take their neutral defaults.  With ``names=None`` the length
+    disambiguates: a full-width vector maps every field, a
+    ``len(TUNED_FIELDS)`` vector maps the classic tuned subset.
+    """
     vec = jnp.asarray(vec, jnp.float32)
-    return PolicyParams(*(vec[i] for i in range(len(PolicyParams._fields))))
+    if names is None:
+        if vec.shape[0] == len(PolicyParams._fields):
+            names = PolicyParams._fields
+        elif vec.shape[0] == len(TUNED_FIELDS):
+            names = TUNED_FIELDS
+        else:
+            raise ValueError(
+                f"cannot infer fields for a {vec.shape[0]}-vector; pass "
+                "names=")
+    else:
+        names = _check_names(names)
+        if vec.shape[0] != len(names):
+            raise ValueError(
+                f"{vec.shape[0]}-vector for {len(names)} names {names}")
+    kwargs = {n: vec[i] for i, n in enumerate(names)}
+    return make_policy_params(**kwargs)
 
 
-def default_vector(cfg) -> jnp.ndarray:
+def default_vector(cfg, names=None) -> jnp.ndarray:
     """The config's hand-set coefficients as a policy vector — the tuners'
-    init / injected incumbent, and the baseline tuned runs must beat."""
-    return params_to_vector(runner.default_params(cfg))
+    init / injected incumbent, and the baseline tuned runs must beat.
+    ``names`` defaults to the classic ``TUNED_FIELDS`` subset (the default
+    ``policy_space``)."""
+    return params_to_vector(runner.default_params(cfg),
+                            names=TUNED_FIELDS if names is None else names)
 
 
 def scenario_space(spec) -> BoxSpace:

@@ -47,19 +47,35 @@ class PolicyTuning(NamedTuple):
 def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
                 scenarios=None, method: str = "cem", pop_size: int = 32,
                 generations: int = 8, penalty: float = DEFAULT_PENALTY,
-                bounds: dict | None = None) -> PolicyTuning:
-    """Tune the five ``PolicyParams`` coefficients for this config on this
+                bounds: dict | None = None,
+                objective=None, space=None) -> PolicyTuning:
+    """Tune the ``PolicyParams`` coefficients for this config on this
     workload batch.  ``schedule`` is anything ``run_sweep`` accepts — a
     static schedule or a ``ScenarioSet`` with ``scenarios`` selecting ids
     (default: all).  Returns tuned params plus the default's score on the
     identical batch; same ``key`` ⇒ bit-identical outcome.
+
+    The default objective is the classic cost+penalty ``PolicyObjective``
+    over ``TUNED_FIELDS`` (``bounds`` opts further fields in, e.g. the
+    multi-tenant knobs).  Pass ``objective`` — any callable of a vector
+    with ``space``/``default_score`` attributes, e.g. a provider
+    ``ProfitObjective`` — to tune a different score through the identical
+    CEM/ES machinery; ``schedule``/``seeds``/``scenarios``/``penalty`` are
+    then the objective's business and ignored here.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; choose one of {METHODS}")
-    space = policy_space(bounds)
-    obj = PolicyObjective(cfg, schedule, seeds, scenarios=scenarios,
-                          penalty=penalty, space=space)
-    d0 = space.clip(default_vector(cfg))
+    if objective is None:
+        space = policy_space(bounds) if space is None else space
+        obj = PolicyObjective(cfg, schedule, seeds, scenarios=scenarios,
+                              penalty=penalty, space=space)
+    else:
+        obj = objective
+        space = obj.space if space is None else space
+        if space is None:
+            raise ValueError("a custom objective needs a space (obj.space "
+                             "or the space= argument)")
+    d0 = space.clip(default_vector(cfg, names=space.names))
     if method == "cem":
         run = jax.jit(lambda k: cem_minimize(
             obj, space, k, pop_size=pop_size, generations=generations,
@@ -77,10 +93,15 @@ def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
     # raw vector instead could make "tuned ≥ default" fail spuriously on
     # a discretely sensitive objective (a flipped violation).
     d0_eval = space.from_unit(space.to_unit(d0))
-    default_score = obj.evaluate(d0_eval)
-    default_score = jnp.mean(default_score.cost + penalty
-                             * default_score.violations.astype(jnp.float32))
+    if objective is None:
+        default_score = obj.evaluate(d0_eval)
+        default_score = jnp.mean(
+            default_score.cost
+            + penalty * default_score.violations.astype(jnp.float32))
+    else:
+        default_score = jnp.asarray(obj.default_score(d0_eval))
     return PolicyTuning(result=result,
-                        params=vector_to_params(result.best_vec),
+                        params=vector_to_params(result.best_vec,
+                                                names=space.names),
                         default_vec=d0_eval, default_score=default_score,
                         objective=obj)

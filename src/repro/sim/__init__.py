@@ -1,20 +1,25 @@
 # §V testbed: discrete-time cloud simulator, the 30-workload suite, the
 # stochastic workload scenario generators, the Lambda billing model, the
 # JAX spot market and its vmapped sweep harness (``market`` is the numpy
-# facade kept for ft/failures compat).
-from ..core.types import PolicyParams, make_policy_params
+# facade kept for ft/failures compat).  ``tenants`` extends the testbed to
+# a multi-tenant shared fleet with attributed billing.
+from ..core.types import PolicyParams, TenantConfig, make_policy_params
 from . import (lambda_model, market, runner, scenarios, spot, sweep,
-               workloads)
+               tenants, workloads)
 from .runner import SimConfig, SimTrace, default_params, run
 from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
 from .sweep import SweepAxes, make_axes, run_single, run_sweep
+from .tenants import (TenantRun, TenantSet, TenantSpec, TenantSummary,
+                      isolated_runs, run_tenants, tenant_sweep)
 from .workloads import (JaxSchedule, Schedule, paper_schedule,
                         uniform_schedule)
 
 __all__ = ["lambda_model", "market", "runner", "scenarios", "spot", "sweep",
-           "workloads", "SimConfig", "SimTrace", "run", "ScenarioSet",
-           "default_set", "paper_scenario", "SpotConfig", "SweepAxes",
-           "make_axes", "run_single", "run_sweep", "JaxSchedule",
-           "Schedule", "paper_schedule", "uniform_schedule",
-           "PolicyParams", "make_policy_params", "default_params"]
+           "tenants", "workloads", "SimConfig", "SimTrace", "run",
+           "ScenarioSet", "default_set", "paper_scenario", "SpotConfig",
+           "SweepAxes", "make_axes", "run_single", "run_sweep",
+           "JaxSchedule", "Schedule", "paper_schedule", "uniform_schedule",
+           "PolicyParams", "TenantConfig", "make_policy_params",
+           "default_params", "TenantRun", "TenantSet", "TenantSpec",
+           "TenantSummary", "isolated_runs", "run_tenants", "tenant_sweep"]

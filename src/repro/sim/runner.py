@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from ..core import billing as billing_lib
 from ..core import controller as ctrl
 from ..core.types import (ClusterState, ControlParams, PolicyParams,
-                          WorkloadState, make_policy_params)
+                          TenantConfig, WorkloadState, make_policy_params)
 from . import spot as spot_lib
 from . import workloads as wl
 
@@ -54,6 +54,13 @@ class SimConfig:
     # untouched.  Enable to bill at the live spot price and lose slots
     # whose bid the market clears above.
     spot: spot_lib.SpotConfig = spot_lib.SpotConfig()
+    # Multi-tenant shared fleet (``sim.tenants``): the schedule's workload
+    # axis becomes ``n`` concatenated per-tenant blocks of ``max_w`` rows,
+    # the allocator arbitrates hierarchically across tenants, arrivals pass
+    # an admission gate, and billing is attributed per tenant in the scan
+    # carry.  None (default) is the single-owner path, byte-identical to
+    # every pre-tenant simulation.
+    tenants: TenantConfig | None = None
 
     @property
     def dt(self) -> float:
@@ -111,15 +118,92 @@ class SummaryCarry(NamedTuple):
     price_sum: jnp.ndarray      # () Σ_t spot price of the primary type
     price_max: jnp.ndarray      # () running max of that price
     cost_at_done: jnp.ndarray   # () cum_cost registered on the tick *after*
-                                #    the latest completion so far — at the
-                                #    end of the run this is exactly
-                                #    ``cum_cost[t_end + 1]`` of the trace
+                                #    any completion — the latest write is
+                                #    exactly ``cum_cost[t_end + 1]`` of the
+                                #    trace
+    fire: jnp.ndarray           # () bool: a completion happened this tick,
+                                #    so next tick's cum_cost is a completion
+                                #    endpoint (cheap re-use of the step's
+                                #    own ``done_now`` predicate instead of a
+                                #    per-tick W-wide max over ``t_done``)
+    # Per-tenant attribution registers (``SimConfig.tenants``); None in
+    # single-owner mode, so the carry — and the compiled scan — of every
+    # existing run is untouched.
+    tenant: "TenantCarry | None" = None
 
 
-def summary_init() -> SummaryCarry:
+class TenantCarry(NamedTuple):
+    """Per-tenant billing-attribution registers (O(N) per run).
+
+    Costs are integers in ``_COST_UNIT``-ths of a dollar so the conservation
+    invariant — per-tick attributed cost sums *exactly* to the fleet's
+    billed cost — holds in integer arithmetic, immune to float rounding.
+    """
+
+    cost_u: jnp.ndarray   # (N,) int32 attributed cost, units of 1/_COST_UNIT $
+    service: jnp.ndarray  # (N,) f32 delivered CU-seconds
+    q_prev: jnp.ndarray   # ()  int32 fleet cum_cost already attributed, units
+
+
+# Attribution cost quantum: 0.1 milli-dollar.  f32 dollars convert to exact
+# int32 units up to ~$200k cumulative — far beyond any simulated bill.
+_COST_UNIT = 1e4
+
+
+def summary_init(n_tenants: int | None = None) -> SummaryCarry:
     z = jnp.asarray(0.0, jnp.float32)
+    tenant = None
+    if n_tenants is not None:
+        tenant = TenantCarry(
+            cost_u=jnp.zeros((n_tenants,), jnp.int32),
+            service=jnp.zeros((n_tenants,), jnp.float32),
+            q_prev=jnp.asarray(0, jnp.int32))
     return SummaryCarry(max_committed=z, price_sum=z, price_max=z,
-                        cost_at_done=z)
+                        cost_at_done=z, fire=jnp.asarray(False),
+                        tenant=tenant)
+
+
+def _attribute(tc: TenantCarry, cum_cost: jnp.ndarray,
+               exec_time: jnp.ndarray, valid: jnp.ndarray,
+               tid: jnp.ndarray, base_w: jnp.ndarray,
+               n: int) -> TenantCarry:
+    """One tick of exact cost attribution (tentpole billing invariant).
+
+    The tick's newly billed fleet cost — quantized to ``_COST_UNIT`` integer
+    units — is split across tenants in proportion to delivered service
+    (CU-seconds executed this tick).  On idle ticks (no service anywhere:
+    warm-up, drain-out) the cost is shared base-fleet overhead, split by
+    contracted weight over tenants that have any valid workload rows — so a
+    tenant whose rows are all padding can never be billed.  Integer units
+    are apportioned by largest-remainder rounding, which sums to the tick's
+    delta exactly: Σ_i cost_u_i telescopes to the quantized fleet bill.
+    """
+    serv = jax.ops.segment_sum(jnp.sum(exec_time, -1), tid, num_segments=n)
+    tot = jnp.sum(serv)
+    elig = jax.ops.segment_sum(valid.astype(jnp.float32), tid,
+                               num_segments=n) > 0.0
+    w_fall = base_w * elig
+    w_tot = jnp.sum(w_fall)
+    fallback = jnp.where(w_tot > 0.0, w_fall / jnp.maximum(w_tot, 1e-9),
+                         1.0 / n)
+    share = jnp.where(tot > 0.0, serv / jnp.maximum(tot, 1e-9), fallback)
+
+    q_now = jnp.round(cum_cost * _COST_UNIT).astype(jnp.int32)
+    delta_q = q_now - tc.q_prev
+    raw = delta_q.astype(jnp.float32) * share
+    base = jnp.floor(raw).astype(jnp.int32)
+    rem = delta_q - jnp.sum(base)
+    # rem = q·n + r with 0 ≤ r < n: every tenant absorbs q units and the
+    # r leftover units go to the largest fractional shares — exact for any
+    # rem, including the (f32 round-up) case where Σ base overshoots.
+    frac = raw - base.astype(jnp.float32)
+    order = jnp.argsort(-frac)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    adj = (rem // n) + (rank < (rem % n)).astype(jnp.int32)
+    return TenantCarry(cost_u=tc.cost_u + base + adj,
+                       service=tc.service + serv,
+                       q_prev=q_now)
 
 
 class SimState(NamedTuple):
@@ -227,6 +311,16 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     sched = wl.as_jax_schedule(schedule)
     use_spot = cfg.spot.enabled
     pp = default_params(cfg) if params is None else params
+    tcfg = cfg.tenants
+    if tcfg is not None:
+        w_rows = sched.t_arrive.shape[0]
+        if w_rows != tcfg.w_total:
+            raise ValueError(
+                f"schedule has {w_rows} workload rows but TenantConfig "
+                f"(n={tcfg.n}, max_w={tcfg.max_w}) expects {tcfg.w_total} — "
+                "build the schedule with sim.tenants")
+        tid = tcfg.tenant_ids()
+        base_w = tcfg.weight_vec()
 
     def step(state: SimState, _):
         t = state.t
@@ -234,6 +328,20 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
 
         # --- arrivals ------------------------------------------------------
         arrive = (sched.t_arrive == t) & sched.valid
+        if tcfg is not None:
+            # Admission gate: a tenant already occupying ≥ adm_frac of its
+            # row budget has new arrivals rejected outright (they never
+            # submit, so they neither execute nor count as violations).
+            # The default adm_frac = 1.0 admits everything: an arriving row
+            # is itself inactive, so occupancy is at most max_w - 1.
+            occ = jax.ops.segment_sum(state.work.active.astype(jnp.float32),
+                                      tid, num_segments=tcfg.n)
+            admit = occ < pp.adm_frac * tcfg.max_w
+            # Budget cap: a tenant whose attributed bill has reached its
+            # contracted cap stops admitting work (default: uncapped).
+            spent = state.summ.tenant.cost_u.astype(jnp.float32) / _COST_UNIT
+            admit = admit & (spent < tcfg.budget_vec())
+            arrive = arrive & admit[tid]
         work = state.work._replace(
             active=state.work.active | arrive,
             m=jnp.where(arrive[:, None], sched.m0, state.work.m),
@@ -289,7 +397,8 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         # --- control --------------------------------------------------------
         c_state, work, dec = ctrl.step(
             c_state, work, cluster, b_meas, meas_mask, exec_time, items_done,
-            cfg.ctrl, cores=cores, pp=pp)
+            cfg.ctrl, cores=cores, pp=pp,
+            tenants=(None if tcfg is None else (tid, tcfg.n, base_w)))
         if use_spot:
             rt = spot_state.rt
             # Dynamic bid policy: the TTC-aware signal is how far the most
@@ -328,16 +437,22 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
                                        jnp.float32))
 
         # Summary registers (see SummaryCarry).  The cost register fires on
-        # the tick *after* the latest completion so far — the trace index
+        # the tick *after* a completion — the trace index
         # ``cost_at_completion`` reads — and is overwritten whenever a later
-        # completion moves that endpoint.
+        # completion moves that endpoint, so its final value is
+        # ``cum_cost[max(t_done) + 1]``.  The fire flag re-uses this tick's
+        # ``done_now`` instead of re-deriving the endpoint from a W-wide
+        # ``max(t_done)`` every tick (summary-mode hot-loop cost).
         summ = SummaryCarry(
             max_committed=jnp.maximum(state.summ.max_committed, n_committed),
             price_sum=state.summ.price_sum + spot_price,
             price_max=jnp.maximum(state.summ.price_max, spot_price),
-            cost_at_done=jnp.where(jnp.max(work.t_done) == t - 1,
-                                   cluster.cum_cost,
+            cost_at_done=jnp.where(state.summ.fire, cluster.cum_cost,
                                    state.summ.cost_at_done),
+            fire=jnp.any(done_now),
+            tenant=(None if tcfg is None else _attribute(
+                state.summ.tenant, cluster.cum_cost, exec_time, sched.valid,
+                tid, base_w, tcfg.n)),
         )
 
         new_state = SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
@@ -425,7 +540,7 @@ def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
         key=jax.random.PRNGKey(seed),
         t=jnp.asarray(0),
         spot=spot_state,
-        summ=summary_init(),
+        summ=summary_init(None if cfg.tenants is None else cfg.tenants.n),
     )
 
 
@@ -457,7 +572,11 @@ def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     spot_rt = spot_rt._replace(bid_mult=spot_rt.bid_mult * pp.bid_mult)
     step = make_step(sched, cfg, trace=trace, params=pp)
     state = init_state(sched, cfg, seed=seed, spot_rt=spot_rt)
-    return jax.lax.scan(step, state, None, length=cfg.ticks)
+    # Summary mode keeps no per-tick outputs, so unrolling pairs of steps
+    # costs no memory and buys back the loop overhead that otherwise
+    # leaves the register-carry scan slower than the traced one.
+    unroll = 1 if trace else 2
+    return jax.lax.scan(step, state, None, length=cfg.ticks, unroll=unroll)
 
 
 # --------------------------------------------------------------------------
@@ -530,11 +649,11 @@ def cost_at_completion(work_final: WorkloadState, cum_cost: jnp.ndarray,
     return jnp.where(unfinished | (t_end < 0), cum_cost[-1], cum_cost[idx])
 
 
-def count_violations(work_final: WorkloadState,
-                     schedule: wl.Schedule | wl.JaxSchedule,
-                     cfg: SimConfig,
-                     valid: jnp.ndarray | None = None) -> jnp.ndarray:
-    """TTC violations, jnp-pure (shared by ``run`` and ``sim.sweep``).
+def violation_rows(work_final: WorkloadState,
+                   schedule: wl.Schedule | wl.JaxSchedule,
+                   cfg: SimConfig,
+                   valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(W,) bool: which workload rows violated their TTC.
 
     ``valid`` is the explicit workload-valid mask; it defaults to the
     schedule's own mask, so padded rows never count as violations even if a
@@ -550,8 +669,16 @@ def count_violations(work_final: WorkloadState,
     # grace).  A confirmed-but-extended deadline (infeasible request) is
     # therefore still counted as a violation of the original ask.
     lateness = (work_final.t_done - work_final.t_submit) - ticks_allowed
-    return jnp.sum((submitted & finished & (lateness > 1)) |
-                   (submitted & ~finished))
+    return ((submitted & finished & (lateness > 1)) |
+            (submitted & ~finished))
+
+
+def count_violations(work_final: WorkloadState,
+                     schedule: wl.Schedule | wl.JaxSchedule,
+                     cfg: SimConfig,
+                     valid: jnp.ndarray | None = None) -> jnp.ndarray:
+    """TTC violations, jnp-pure (shared by ``run`` and ``sim.sweep``)."""
+    return jnp.sum(violation_rows(work_final, schedule, cfg, valid=valid))
 
 
 def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,

@@ -1,0 +1,293 @@
+"""Multi-tenant CaaS: several tenants, one shared spot fleet.
+
+The paper's platform serves one owner; a real Computation-as-a-Service
+provider consolidates many.  This module turns the single-owner simulator
+into a shared-fleet one without touching its scan shape:
+
+  * a :class:`TenantSpec` bundles one tenant's contract — their workload
+    *scenario* (any ``sim.scenarios`` spec, which carries the TTC SLO in
+    its task model), the $/CU-hour price they pay, the $ credited back
+    per TTC violation, their fair-share weight, and an optional budget
+    cap;
+  * a :class:`TenantSet` concatenates the tenants' schedules into one
+    ``n·max_w``-row schedule (row ``w`` belongs to tenant ``w // max_w``)
+    and stamps the matching ``core.types.TenantConfig`` onto the
+    ``SimConfig`` — the switch that makes ``runner.make_step`` arbitrate
+    allocation hierarchically (``fairshare.allocate_tenants``), gate
+    admission per tenant, and attribute every billed cent to a tenant in
+    the scan carry;
+  * :func:`run_tenants` / :func:`tenant_sweep` run it, summary mode, via
+    the same compile cache every other entry point shares, and read the
+    per-tenant registers out as a :class:`TenantSummary`.
+
+Tenant ``i``'s schedule is sampled under ``scenarios.schedule_key(seed,
+i)`` — the *same* key ``run_sweep``/``run_single`` would use for scenario
+``i`` of a ``ScenarioSet`` — so the isolated-fleet baseline (one
+single-owner run per tenant, via ``TenantSet.scenario_set()``) replays
+bit-identical workloads, and a one-tenant set *is* the single-owner
+simulation (``tests/test_tenants.py`` pins this bit for bit).
+
+Attribution is exact by construction: the carry splits each tick's billed
+delta in integer units of ``1/runner._COST_UNIT`` dollars (largest
+remainder), so the per-tenant bills sum to the fleet bill at every tick,
+preemption or not, and padded tenants (no valid rows) can never bill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import PolicyParams, TenantConfig
+from . import runner
+from . import scenarios as scen_lib
+from . import spot, sweep
+from . import workloads as wl
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's contract with the provider (hashable).
+
+    ``price`` is what the tenant pays per CU-hour of *delivered* service;
+    ``slo_penalty`` is the $ the provider credits back per TTC violation;
+    ``weight`` the contracted fair-share weight; ``budget`` an optional $
+    cap after which the tenant's new arrivals are refused.  The TTC each
+    workload requests lives in the scenario's task model, exactly as in
+    the single-owner world.
+    """
+
+    scenario: object                 # a sim.scenarios spec (sample() hook)
+    price: float = 0.35              # $ per delivered CU-hour
+    slo_penalty: float = 0.5         # $ credited per TTC violation
+    weight: float = 1.0              # fair-share weight
+    budget: float = float("inf")     # $ admission cap (inf = uncapped)
+    name: str | None = None
+
+    def __post_init__(self):
+        if not hasattr(self.scenario, "sample"):
+            raise TypeError(
+                f"scenario {self.scenario!r} has no sample() hook — pass a "
+                "sim.scenarios spec")
+        if self.price < 0.0:
+            raise ValueError(f"price must be >= 0, got {self.price}")
+        if self.slo_penalty < 0.0:
+            raise ValueError(
+                f"slo_penalty must be >= 0, got {self.slo_penalty}")
+        if not self.weight > 0.0:
+            raise ValueError(f"weight must be positive, got {self.weight}")
+        if not self.budget > 0.0:
+            raise ValueError(f"budget must be positive, got {self.budget}")
+        if self.name is None:
+            object.__setattr__(self, "name",
+                               getattr(self.scenario, "name", "tenant"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSet:
+    """An ordered bundle of tenants sharing one fleet (hashable — the
+    compile caches key on it).  All scenarios must share one ``max_w`` so
+    the concatenated schedule has a static ``n·max_w`` row shape."""
+
+    specs: tuple
+
+    def __post_init__(self):
+        specs = tuple(self.specs)
+        object.__setattr__(self, "specs", specs)
+        if not specs:
+            raise ValueError("a TenantSet needs at least one tenant")
+        widths = {s.scenario.max_w for s in specs}
+        if len(widths) > 1:
+            raise ValueError(
+                "all tenant scenarios must share one max_w so the "
+                f"concatenated schedule is static; got {sorted(widths)}")
+
+    @property
+    def n(self) -> int:
+        return len(self.specs)
+
+    @property
+    def max_w(self) -> int:
+        return self.specs[0].scenario.max_w
+
+    @property
+    def names(self) -> tuple:
+        return tuple(s.name for s in self.specs)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def __getitem__(self, i) -> TenantSpec:
+        return self.specs[i]
+
+    def tenant_config(self) -> TenantConfig:
+        return TenantConfig(
+            n=self.n, max_w=self.max_w,
+            weights=tuple(s.weight for s in self.specs),
+            budgets=(tuple(s.budget for s in self.specs)
+                     if any(s.budget != float("inf") for s in self.specs)
+                     else ()),
+        )
+
+    def sim_config(self, cfg: runner.SimConfig) -> runner.SimConfig:
+        """``cfg`` with this set's tenant layout stamped on."""
+        return dataclasses.replace(cfg, tenants=self.tenant_config())
+
+    def sample(self, seed):
+        """The shared-fleet schedule for ``seed`` (traced ok): tenant
+        ``i``'s block is their scenario sampled under
+        ``scenarios.schedule_key(seed, i)`` — the key scenario ``i`` of a
+        ``ScenarioSet`` gets, so isolated baselines replay identical
+        workloads."""
+        scheds = [self.sample_one(seed, i) for i in range(self.n)]
+        if len(scheds) == 1:
+            return scheds[0]
+        return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                            *scheds)
+
+    def sample_one(self, seed, i: int):
+        """Tenant ``i``'s own ``max_w``-row schedule for ``seed``."""
+        return self.specs[i].scenario.sample(
+            scen_lib.schedule_key(seed, i))
+
+    def scenario_set(self) -> scen_lib.ScenarioSet:
+        """The tenants' scenarios as a ``ScenarioSet`` whose scenario ids
+        line up with tenant ids — the isolated-fleet baseline axis
+        (``run_single(set, scenario=i)`` replays tenant ``i``'s exact
+        workload).  Duplicate scenario names are suffixed per tenant."""
+        specs, seen = [], set()
+        for i, s in enumerate(self.specs):
+            spec = s.scenario
+            if spec.name in seen:
+                spec = dataclasses.replace(spec, name=f"{spec.name}.{i}")
+            seen.add(spec.name)
+            specs.append(spec)
+        return scen_lib.ScenarioSet(tuple(specs))
+
+
+class TenantSummary(NamedTuple):
+    """Per-tenant read-out of one shared-fleet run (each field (N,))."""
+
+    cost: jnp.ndarray        # $ attributed (sums exactly to the fleet bill)
+    cost_units: jnp.ndarray  # the same, in exact 1/_COST_UNIT $ integers
+    service: jnp.ndarray     # delivered CU-seconds
+    violations: jnp.ndarray  # TTC violations among the tenant's rows
+    finished: jnp.ndarray    # workloads completed
+    submitted: jnp.ndarray   # workloads admitted
+    rejected: jnp.ndarray    # arrivals refused by admission control
+
+
+class TenantRun(NamedTuple):
+    """One shared-fleet run: fleet-level and per-tenant summaries."""
+
+    fleet: sweep.RunSummary
+    tenants: TenantSummary
+
+
+def summarize_tenants(final, schedule, cfg: runner.SimConfig
+                      ) -> TenantSummary:
+    """Per-tenant registers out of a final scan carry, jnp-pure."""
+    tcfg = cfg.tenants
+    if tcfg is None:
+        raise ValueError("config has no tenants — use sweep.summarize")
+    sched = wl.as_jax_schedule(schedule)
+    tid = tcfg.tenant_ids()
+    work = final.work
+    valid = sched.valid
+
+    def seg(rows):
+        return jax.ops.segment_sum(rows.astype(jnp.int32), tid,
+                                   num_segments=tcfg.n)
+
+    submitted = (work.t_submit >= 0) & valid
+    finished = (work.t_done >= 0) & valid
+    arrived = valid & (sched.t_arrive >= 0) & (sched.t_arrive < cfg.ticks)
+    tc = final.summ.tenant
+    return TenantSummary(
+        cost=tc.cost_u.astype(jnp.float32) / runner._COST_UNIT,
+        cost_units=tc.cost_u,
+        service=tc.service,
+        violations=seg(runner.violation_rows(work, sched, cfg)),
+        finished=seg(finished),
+        submitted=seg(submitted),
+        rejected=seg(arrived & ~submitted),
+    )
+
+
+def _run_fn(tset: TenantSet, scfg: runner.SimConfig):
+    """The cached jitted (seeds,)-vmapped shared-fleet program."""
+    key = ("tenants", tset, runner.strip_tuned(scfg))
+    fn = runner._JIT_CACHE.get(key)
+    if fn is None:
+        def one(seed, bid, itype, pol, mix, pp):
+            sched = tset.sample(seed)
+            rt = spot.make_runtime(scfg.spot, itype=itype, bid_mult=bid,
+                                   policy=pol, mix=mix)
+            final, _ = runner.scan_run(sched, scfg, seed=seed, spot_rt=rt,
+                                       trace=False, params=pp)
+            return TenantRun(fleet=sweep.summarize(final, sched, scfg),
+                             tenants=summarize_tenants(final, sched, scfg))
+
+        fn = jax.jit(jax.vmap(one, in_axes=(0, None, None, None, None,
+                                            None)))
+        runner._cache_put(key, fn)
+    return fn
+
+
+def _env(cfg: runner.SimConfig, bid_mult, instance, policy):
+    itype, mask = sweep._as_mix(instance)
+    if policy is None:
+        policy = spot.bid_policy_index(cfg.spot.bid_policy)
+    return (jnp.asarray(bid_mult, jnp.float32),
+            jnp.asarray(itype, jnp.int32),
+            jnp.asarray(policy, jnp.int32),
+            jnp.asarray(mask, jnp.float32))
+
+
+def tenant_sweep(tset: TenantSet, cfg: runner.SimConfig, seeds,
+                 bid_mult: float = 1.0, instance="m3.medium",
+                 policy=None,
+                 params: PolicyParams | None = None) -> TenantRun:
+    """Shared-fleet runs over a batch of seeds (each field (S,)-leading).
+
+    One compile per (tenant set, stripped config): seeds, bid multiple,
+    fleet mix and the policy pytree are traced inputs, and the schedules
+    are sampled per (seed, tenant) inside the trace, exactly as the
+    scenario sweep samples per (seed, scenario)."""
+    scfg = tset.sim_config(cfg)
+    bid, itype, pol, mix = _env(scfg, bid_mult, instance, policy)
+    pp = runner.default_params(scfg) if params is None else params
+    seeds = jnp.asarray(list(seeds), jnp.int32)
+    return _run_fn(tset, scfg)(seeds, bid, itype, pol, mix, pp)
+
+
+def run_tenants(tset: TenantSet, cfg: runner.SimConfig, seed: int,
+                bid_mult: float = 1.0, instance="m3.medium",
+                policy=None,
+                params: PolicyParams | None = None) -> TenantRun:
+    """One shared-fleet run — ``tenant_sweep`` at a single seed, scalars."""
+    out = tenant_sweep(tset, cfg, [seed], bid_mult=bid_mult,
+                       instance=instance, policy=policy, params=params)
+    return jax.tree.map(lambda x: x[0], out)
+
+
+def isolated_runs(tset: TenantSet, cfg: runner.SimConfig, seed: int,
+                  bid_mult: float = 1.0, instance="m3.medium",
+                  policy=None,
+                  params: PolicyParams | None = None) -> sweep.RunSummary:
+    """The no-consolidation baseline: each tenant on their own dedicated
+    fleet (one single-owner run per tenant, identical workloads), stacked
+    to (N,)-leading ``RunSummary`` fields.  Sum costs across tenants to
+    compare against one shared fleet's bill."""
+    sset = tset.scenario_set()
+    outs = [sweep.run_single(sset, cfg, seed=seed, bid_mult=bid_mult,
+                             instance=instance, policy=policy, scenario=i,
+                             params=params)
+            for i in range(tset.n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)

@@ -264,3 +264,21 @@ def test_full_run_with_kalman_kernel_matches_default():
     np.testing.assert_array_equal(np.asarray(a.b_hat), np.asarray(b.b_hat))
     np.testing.assert_array_equal(np.asarray(a.reliable),
                                   np.asarray(b.reliable))
+
+
+def test_kalman_kernel_inside_vmapped_sweep_matches_default():
+    """The kernel's batch rule folds the sweep's vmap axis into its row
+    grid; the whole vmapped sweep must still match the jnp path bit for
+    bit."""
+    cfg = _spot_cfg()
+    cfg_k = SimConfig(
+        ctrl=ControllerConfig(params=PARAMS, billing=BILL,
+                              kalman_kernel=True),
+        ticks=130, spot=SpotConfig(enabled=True))
+    axes = make_axes(seeds=[0, 1], bid_mults=[1.0, 1.5])
+    a = run_sweep(SCHED, cfg, axes)
+    b = run_sweep(SCHED, cfg_k, axes)
+    for f in sweep.RunSummary._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
