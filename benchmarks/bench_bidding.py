@@ -37,7 +37,9 @@ import numpy as np
 
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
-from repro.sim import SimConfig, SpotConfig, make_axes, paper_schedule, run_sweep
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, make_axes,
+                       paper_schedule)
+from repro.sim.sweep import sweep
 
 try:  # package-relative when run via ``-m benchmarks...``; standalone too
     from . import bench_spot
@@ -103,7 +105,7 @@ def run_policy_frontier(seeds, bid_mults) -> dict:
         instances=[MARKET["instance"]],
         policies=list(POLICIES),
     )
-    s = run_sweep(sched, cfg, axes)
+    s = sweep(SweepSpec(axes=axes, workload=sched), cfg)
     shape = (len(seeds), len(bid_mults), len(POLICIES))
     out = {
         "bid_mults": list(bid_mults),
@@ -113,10 +115,13 @@ def run_policy_frontier(seeds, bid_mults) -> dict:
     }
 
     # Reactive scaling at the never-preempted bid: the cost-delta reference.
-    r = run_sweep(
-        sched,
+    r = sweep(
+        SweepSpec(
+            axes=make_axes(seeds=list(seeds), bid_mults=[1.0],
+                           instances=[MARKET["instance"]]),
+            workload=sched,
+        ),
         _cfg(policy="reactive", bid_policy="on_demand"),
-        make_axes(seeds=list(seeds), bid_mults=[1.0], instances=[MARKET["instance"]]),
     )
     out["reactive_cost"] = float(np.mean(np.asarray(r.cost)))
     out["reactive_violations"] = int(np.sum(np.asarray(r.violations)))
@@ -133,7 +138,7 @@ def run_mix_frontier(seeds) -> dict:
         instances=list(MIXES.values()),
         policies=["on_demand"],
     )
-    s = run_sweep(sched, cfg, axes)
+    s = sweep(SweepSpec(axes=axes, workload=sched), cfg)
     shape = (len(seeds), len(MIXES))
     return {
         "names": list(MIXES),

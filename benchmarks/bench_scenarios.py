@@ -6,7 +6,8 @@ benchmark evaluates the AIMD-vs-Reactive comparison across the stochastic
 scenario families of ``sim.scenarios`` (Poisson, bursty MMPP, diurnal,
 flash-crowd, heavy-tailed Pareto sizes) — each grid point samples its own
 workload world from (seed, scenario) *inside* one jitted
-``run_sweep(ScenarioSet, ...)`` call — and re-runs the paper headline
+``sweep(SweepSpec(workload=ScenarioSet, ...))`` call — and re-runs the
+paper headline
 through the scenario engine's replay path, asserting the result is
 **bit-for-bit identical** to today's static-schedule path
 (``bench_spot.run_headline``).
@@ -32,11 +33,12 @@ from repro.sim import (
     ScenarioSet,
     SimConfig,
     SpotConfig,
+    SweepSpec,
     default_set,
     make_axes,
     paper_schedule,
-    run_sweep,
 )
+from repro.sim.sweep import sweep
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
 from repro.sim.scenarios import Replay
@@ -85,7 +87,7 @@ def run_paper_replay(seeds) -> dict:
         cfg = bench_spot._spot_cfg(
             policy, monitor_dt=60.0, ticks=650, bid_policy="on_demand"
         )
-        s = run_sweep(sset, cfg, axes)
+        s = sweep(SweepSpec(axes=axes, workload=sset), cfg)
         cost = float(np.mean(np.asarray(s.cost)))
         viol = int(np.sum(np.asarray(s.violations)))
         same = cost == ref[policy]["cost"] and viol == ref[policy]["violations"]
@@ -115,7 +117,7 @@ def run_scenario_frontier(seeds) -> dict:
     shape = (len(list(seeds)), len(sset))
     per_policy = {}
     for policy in ("aimd", "reactive"):
-        s = run_sweep(sset, _cfg(policy), axes)
+        s = sweep(SweepSpec(axes=axes, workload=sset), _cfg(policy))
         per_policy[policy] = {
             "cost": np.asarray(s.cost).reshape(shape),
             "violations": np.asarray(s.violations).reshape(shape),

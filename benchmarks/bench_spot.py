@@ -33,8 +33,9 @@ import numpy as np
 
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
-from repro.sim import (SimConfig, SpotConfig, make_axes, paper_schedule,
-                       run_sweep)
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, make_axes,
+                       paper_schedule)
+from repro.sim.sweep import sweep
 from repro.sim.spot import INSTANCE_NAMES
 
 try:  # package-relative when run via ``-m benchmarks...``; standalone too
@@ -65,7 +66,7 @@ def run_headline(seeds=(0, 1, 2)) -> dict:
     for policy in ("aimd", "reactive"):
         cfg = _spot_cfg(policy, monitor_dt=60.0, ticks=650,
                         bid_policy="on_demand")
-        s = run_sweep(sched, cfg, axes)
+        s = sweep(SweepSpec(axes=axes, workload=sched), cfg)
         out[policy] = {
             "cost": float(np.mean(s.cost)),
             "violations": int(np.sum(s.violations)),
@@ -82,7 +83,7 @@ def run_bid_sweep(seeds=(0, 1, 2), bid_mults=BID_LEVELS) -> dict:
     sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
     cfg = _spot_cfg("aimd", monitor_dt=300.0, ticks=130)
     axes = make_axes(seeds=list(seeds), bid_mults=list(bid_mults))
-    s = run_sweep(sched, cfg, axes)
+    s = sweep(SweepSpec(axes=axes, workload=sched), cfg)
     shape = (len(seeds), len(bid_mults))
     return {
         "axes": axes,
@@ -102,7 +103,7 @@ def run_granularity(seeds=(0, 1, 2), instances=INSTANCE_NAMES) -> dict:
                     bid_policy="on_demand")
     axes = make_axes(seeds=list(seeds), bid_mults=[1.0],
                      instances=list(instances))
-    s = run_sweep(sched, cfg, axes)
+    s = sweep(SweepSpec(axes=axes, workload=sched), cfg)
     shape = (len(seeds), len(instances))
     return {
         "instances": list(instances),

@@ -36,9 +36,10 @@ import numpy as np
 from repro import opt
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
-from repro.sim import (ScenarioSet, SimConfig, SpotConfig, TenantSet,
-                       TenantSpec, run_single, run_tenants, runner,
-                       tenant_sweep)
+from repro.sim import (ScenarioSet, SimConfig, SpotConfig, SweepSpec,
+                       TenantSet, TenantSpec, make_axes, run_single,
+                       run_tenants, runner)
+from repro.sim.sweep import sweep
 from repro.sim import scenarios as scen
 from repro.sim import tenants as tnt
 
@@ -141,7 +142,8 @@ def run_consolidation(n_levels, seeds) -> dict:
     for n in n_levels:
         ts = make_mix(n)
         t0 = time.perf_counter()
-        shared = jax.block_until_ready(tenant_sweep(ts, cfg, seeds))
+        spec = SweepSpec(axes=make_axes(list(seeds), [1.0]), workload=ts)
+        shared = jax.block_until_ready(sweep(spec, cfg))
         wall = time.perf_counter() - t0
         sh_cost = float(np.mean(np.asarray(shared.fleet.cost_horizon)))
         sh_viol = int(np.sum(np.asarray(shared.fleet.violations)))

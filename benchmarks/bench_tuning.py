@@ -46,10 +46,11 @@ from repro.sim import (
     SpotConfig,
     default_set,
     make_axes,
+    SweepSpec,
     paper_schedule,
-    run_sweep,
     runner,
 )
+from repro.sim.sweep import sweep
 from repro.sim.scenarios import Replay
 
 try:  # package-relative when run via ``-m benchmarks...``; standalone too
@@ -105,7 +106,8 @@ def run_paper_replay(seeds) -> dict:
         cfg = bench_spot._spot_cfg(
             policy, monitor_dt=60.0, ticks=650, bid_policy="on_demand"
         )
-        s = run_sweep(sset, cfg, axes, params=runner.default_params(cfg))
+        s = sweep(SweepSpec(axes=axes, workload=sset,
+                            params=runner.default_params(cfg)), cfg)
         cost = float(np.mean(np.asarray(s.cost)))
         viol = int(np.sum(np.asarray(s.violations)))
         same = cost == ref[policy]["cost"] and viol == ref[policy]["violations"]

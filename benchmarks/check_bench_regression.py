@@ -25,7 +25,13 @@ spot/bidding report).
     payload again;
   * summary-mode runs/sec falls below baseline / ``SPEED_TOLERANCE``
     (very loose: CI machines differ by a few x, order-of-magnitude
-    cliffs — e.g. a reintroduced per-chunk recompile — don't).
+    cliffs — e.g. a reintroduced per-chunk recompile — don't);
+  * the streamed executor loses bit-parity with the in-memory path,
+    fails its kill-and-resume round-trip, or lets the grid-to-live-bytes
+    ratio fall below ``STREAM_RATIO_FLOOR`` (hard floor: the whole point
+    of streaming is a grid ≥10× larger than peak host live bytes);
+  * the sharded sweep reports non-null parity that is false (null is
+    fine — single-device CI hosts cannot exercise the mesh).
 
 ``BENCH_scenarios.json`` (``bench_scenarios --smoke``):
 
@@ -92,6 +98,9 @@ SPEED_TOLERANCE = 5.0
 # floor leaves slack for scheduler jitter while catching a reintroduced
 # per-tick select chain).
 SPEED_PARITY_FLOOR = 0.85
+# The streamed sweep must keep the full grid of summaries at least this
+# many times larger than the live bytes of one padded chunk.
+STREAM_RATIO_FLOOR = 10.0
 
 
 def _schema_smoke_errors(current: dict, baseline: dict) -> list[str]:
@@ -195,6 +204,36 @@ def check_throughput(current: dict, baseline: dict) -> list[str]:
             f"frontier summary/trace speed ratio {ratio} fell below the "
             f"{SPEED_PARITY_FLOOR} parity floor — the summary scan is "
             "paying per-tick overhead again"
+        )
+
+    streamed = current.get("grids", {}).get("streamed")
+    if streamed is None:
+        if "streamed" in baseline.get("grids", {}):
+            errors.append("grids[streamed] missing from current results")
+    else:
+        if not streamed.get("parity"):
+            errors.append(
+                "streamed sweep lost bit-parity with the in-memory path"
+            )
+        if not streamed.get("resume_ok"):
+            errors.append(
+                "streamed sweep failed its kill-and-resume round-trip"
+            )
+        s_ratio = streamed.get("stream_ratio")
+        if s_ratio is None or s_ratio < STREAM_RATIO_FLOOR:
+            errors.append(
+                f"streamed grid/live-bytes ratio {s_ratio} fell below the "
+                f"{STREAM_RATIO_FLOOR} floor — streaming no longer bounds "
+                "host memory"
+            )
+
+    # Single-device hosts report null sharded parity; a non-null false
+    # means shard_map diverged from the single-device program.
+    sharded_parity = current.get("grids", {}).get("sharded", {}).get("parity")
+    if sharded_parity is False:
+        errors.append(
+            "sharded sweep is no longer bit-identical to the "
+            "single-device path"
         )
     return errors
 
@@ -373,10 +412,13 @@ def check_pair(current_path: str, baseline_path: str) -> int:
     if kind_cur == "throughput":
         errors = check_throughput(current, baseline)
         front = current.get("grids", {}).get("frontier", {})
+        streamed = current.get("grids", {}).get("streamed", {})
         print(
             f"bench gate [throughput]: memory_ratio={front.get('memory_ratio')} "
             f"speed_ratio={front.get('speed_ratio')} "
-            f"summary_mode_ok={current.get('acceptance', {}).get('summary_mode_ok')}"
+            f"summary_mode_ok={current.get('acceptance', {}).get('summary_mode_ok')} "
+            f"stream_ratio={streamed.get('stream_ratio')} "
+            f"streamed_ok={current.get('acceptance', {}).get('streamed_ok')}"
         )
     elif kind_cur == "scenarios":
         errors = check_scenarios(current, baseline)

@@ -27,7 +27,9 @@ import numpy as np
 from repro import opt
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
-from repro.sim import SimConfig, SpotConfig, TenantSet, TenantSpec, tenants
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, TenantSet,
+                       TenantSpec, make_axes, tenants)
+from repro.sim.sweep import sweep
 from repro.sim.scenarios import MMPP, Diurnal, FlashCrowd, Poisson, TaskModel
 
 SEEDS = (0, 1, 2)
@@ -66,7 +68,8 @@ def make_mix(budget_cap: float | None = None) -> TenantSet:
 
 def act_1_share(cfg: SimConfig, mix: TenantSet) -> None:
     print("=== 1. four tenants, one spot fleet " + "=" * 30)
-    runs = tenants.tenant_sweep(mix, cfg, seeds=SEEDS)
+    runs = sweep(SweepSpec(axes=make_axes(SEEDS, [1.0]), workload=mix),
+                 cfg)
     cost = np.asarray(runs.tenants.cost)           # (seeds, N)
     fleet = np.asarray(runs.fleet.cost_horizon)    # (seeds,)
     for i, name in enumerate(mix.names):
@@ -80,7 +83,8 @@ def act_1_share(cfg: SimConfig, mix: TenantSet) -> None:
 
 def act_2_consolidate(cfg: SimConfig, mix: TenantSet) -> None:
     print("=== 2. shared fleet vs four dedicated fleets " + "=" * 21)
-    shared = tenants.tenant_sweep(mix, cfg, seeds=SEEDS)
+    shared = sweep(SweepSpec(axes=make_axes(SEEDS, [1.0]), workload=mix),
+                   cfg)
     sh = float(np.mean(np.asarray(shared.fleet.cost_horizon)))
     iso = np.mean([float(np.sum(np.asarray(
         tenants.isolated_runs(mix, cfg, seed=s).cost_horizon)))

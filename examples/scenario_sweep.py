@@ -3,7 +3,8 @@
 Three stochastic workload worlds (steady Poisson, bursty MMPP, flash
 crowd) × two bid policies (static multiple vs TTC-aware) × Monte-Carlo
 seeds — every grid point samples its own schedule from (seed, scenario)
-inside a single ``run_sweep(ScenarioSet, ...)`` dispatch, then the
+inside a single ``sweep(SweepSpec(workload=ScenarioSet, ...))`` dispatch,
+then the
 per-scenario cost/violation frontier is printed.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py
@@ -15,7 +16,9 @@ import numpy as np
 
 from repro.core.controller import ControllerConfig
 from repro.core.types import BillingParams, ControlParams
-from repro.sim import ScenarioSet, SimConfig, SpotConfig, make_axes, run_sweep
+from repro.sim import (ScenarioSet, SimConfig, SpotConfig, SweepSpec,
+                       make_axes)
+from repro.sim.sweep import sweep
 from repro.sim.scenarios import MMPP, FlashCrowd, Poisson, TaskModel
 
 SEEDS = (0, 1, 2, 3)
@@ -56,7 +59,8 @@ def main() -> None:
         policies=list(POLICIES),
         scenarios=sset,
     )
-    s = run_sweep(sset, cfg, axes)  # one compile, one dispatch, B=24 runs
+    s = sweep(SweepSpec(axes=axes, workload=sset), cfg)  # one compile,
+    # one dispatch, B=24 runs
 
     shape = (len(SEEDS), len(POLICIES), len(sset))
     cost = np.asarray(s.cost).reshape(shape)

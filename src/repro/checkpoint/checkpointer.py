@@ -19,12 +19,20 @@ import jax
 import numpy as np
 
 
+def _path_part(p) -> str:
+    # DictKey carries .key, SequenceKey .idx, GetAttrKey (NamedTuples,
+    # dataclass pytrees) .name; anything else falls back to its repr.
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
+        key = "/".join(_path_part(p) for p in path)
         out[key] = leaf
     return out, treedef
 
@@ -60,13 +68,21 @@ def save(directory: str, step: int, tree) -> str:
     return d
 
 
-def latest_step(directory: str) -> int | None:
+def committed_steps(directory: str) -> list[int]:
+    """All steps with a commit marker, sorted.  A crash mid-save leaves a
+    ``.tmp`` (or renamed-but-unmarked) directory and no ``.done`` file, so
+    torn writes never appear here — the resume contract of both the elastic
+    trainer and the streaming sweep executor (``sim.sweep``)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(n[len("step_"):-len(".done")])
-             for n in os.listdir(directory)
-             if n.startswith("step_") and n.endswith(".done")]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(n[len("step_"):-len(".done")])
+                  for n in os.listdir(directory)
+                  if n.startswith("step_") and n.endswith(".done"))
+
+
+def latest_step(directory: str) -> int | None:
+    steps = committed_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore(directory: str, step: int, like):

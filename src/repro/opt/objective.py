@@ -3,7 +3,8 @@
 Both tuners and the adversarial search optimize the same quantity the
 benchmarks report: **mean cost plus a violation penalty** over a seeds ×
 scenarios batch of full simulations.  The batch runs through
-``sim.sweep.point_fn`` — the exact per-point program ``run_sweep``
+``sim.sweep.point_fn`` (or ``sim.tenants.point_fn`` for provider-profit
+tuning) — the exact per-point program ``sweep(SweepSpec(...), cfg)``
 executes, summary mode, schedule sampled per (seed, scenario) inside the
 trace — so one tuning run *is* one big sweep and compiles once: the
 candidate's ``PolicyParams`` (or the attacked generator's parameters) are
@@ -159,6 +160,7 @@ class ProfitObjective:
                                    jnp.float32)
         self._pens = jnp.asarray([s.slo_penalty for s in tset.specs],
                                  jnp.float32)
+        self._point = tenants_lib.point_fn(tset, cfg)
         self._traces = 0
         self._eval = jax.jit(self._runs)
         self._score = jax.jit(self._profit)
@@ -172,19 +174,14 @@ class ProfitObjective:
                                 names=self.space.names)
 
     def _runs(self, vec: jnp.ndarray) -> tenants_lib.TenantRun:
+        # The per-seed body IS ``tenants.point_fn`` — the same program the
+        # unified sweep executor vmaps, so the objective and the reported
+        # benchmarks can never drift apart.
         pp = self.params_of(vec)
 
         def one(seed):
-            sched = self.tset.sample(seed)
-            rt = spot.make_runtime(self.scfg.spot, itype=self._itype,
-                                   bid_mult=self._bid, policy=self._pol,
-                                   mix=self._mix)
-            final, _ = runner.scan_run(sched, self.scfg, seed=seed,
-                                       spot_rt=rt, trace=False, params=pp)
-            return tenants_lib.TenantRun(
-                fleet=sweep.summarize(final, sched, self.scfg),
-                tenants=tenants_lib.summarize_tenants(final, sched,
-                                                      self.scfg))
+            return self._point(seed, self._bid, self._itype, self._pol,
+                               self._mix, jnp.int32(0), pp)
 
         return jax.vmap(one)(self.seeds)
 

@@ -9,7 +9,8 @@ from . import (lambda_model, market, runner, scenarios, spot, sweep,
 from .runner import SimConfig, SimTrace, default_params, run
 from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
-from .sweep import SweepAxes, make_axes, run_single, run_sweep
+from .sweep import (SweepAxes, SweepSpec, SweepStream, make_axes,
+                    run_single, run_sweep)
 from .tenants import (TenantRun, TenantSet, TenantSpec, TenantSummary,
                       isolated_runs, run_tenants, tenant_sweep)
 from .workloads import (JaxSchedule, Schedule, paper_schedule,
@@ -18,7 +19,8 @@ from .workloads import (JaxSchedule, Schedule, paper_schedule,
 __all__ = ["lambda_model", "market", "runner", "scenarios", "spot", "sweep",
            "tenants", "workloads", "SimConfig", "SimTrace", "run",
            "ScenarioSet", "default_set", "paper_scenario", "SpotConfig",
-           "SweepAxes", "make_axes", "run_single", "run_sweep",
+           "SweepAxes", "SweepSpec", "SweepStream", "make_axes",
+           "run_single", "run_sweep",
            "JaxSchedule", "Schedule", "paper_schedule", "uniform_schedule",
            "PolicyParams", "TenantConfig", "make_policy_params",
            "default_params", "TenantRun", "TenantSet", "TenantSpec",

@@ -283,7 +283,7 @@ def _execute(work: WorkloadState, sched: wl.JaxSchedule, s: jnp.ndarray,
             exec_time[:, None], items_done[:, None], util, done_acc_new)
 
 
-def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
               trace: bool = True,
               params: PolicyParams | None = None) -> Callable:
     """One monitoring instant as a ``lax.scan`` step.
@@ -483,7 +483,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     return step
 
 
-def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
                seed: jnp.ndarray | int | None = None,
                spot_rt: spot_lib.SpotRuntime | None = None) -> SimState:
     """Build the t=0 state.  ``seed``, ``spot_rt`` and the schedule itself
@@ -544,7 +544,7 @@ def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
     )
 
 
-def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
              seed: jnp.ndarray | int | None = None,
              spot_rt: spot_lib.SpotRuntime | None = None,
              trace: bool = True,
@@ -599,7 +599,7 @@ def _cache_put(key, fn) -> None:
     _JIT_CACHE[key] = fn
 
 
-def cached_scan(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+def cached_scan(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
                 trace: bool, with_rt: bool) -> Callable:
     """The jitted ``scan_run`` entry point for this (schedule shape, cfg,
     mode).  ``schedule`` is consulted only for its *scenario shape*
@@ -681,7 +681,7 @@ def count_violations(work_final: WorkloadState,
     return jnp.sum(violation_rows(work_final, schedule, cfg, valid=valid))
 
 
-def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig,
+def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         seed: int | None = None,
         spot_rt: spot_lib.SpotRuntime | None = None,
         params: PolicyParams | None = None) -> SimTrace:

@@ -43,9 +43,9 @@ pick ``max_w`` with headroom over ``rate × horizon``.
 
 A ``ScenarioSet`` bundles specs of one shape into a sweep axis:
 ``sweep.make_axes(..., scenarios=sset)`` enumerates it and
-``sweep.run_sweep(sset, cfg, axes)`` evaluates seeds × bids × policies ×
-fleets × scenarios in one jitted call via ``lax.switch`` over the
-samplers.
+``sweep.sweep(SweepSpec(axes=axes, workload=sset), cfg)`` evaluates
+seeds × bids × policies × fleets × scenarios in one jitted call via
+``lax.switch`` over the samplers.
 """
 
 from __future__ import annotations

@@ -1,25 +1,44 @@
-"""Vmapped Monte-Carlo experiment harness over the spot-market simulator.
+"""Mesh-sharded, disk-streaming, resumable sweeps over the simulator.
 
 The entire simulation — correlated multi-type market process, billing,
 preemption, controller, workload execution — is one pure ``lax.scan``
 (``runner.scan_run``), so a cost sweep over seeds × bid levels × bid
 policies × fleet mixes × workload scenarios is a single
 ``jax.jit(jax.vmap(...))`` call: one compile, one device dispatch, every
-grid point in parallel.  A 3 × 5 × 4 × 2 grid of full 130-tick
-experiments costs about as much wall-clock as three sequential runs.
+grid point in parallel.  Sweeps run the scan in **summary mode**
+(``runner.scan_run(trace=False)``): the eight per-run scalars accumulate
+inside the scan carry and the scan emits no per-tick outputs, so a B-point
+grid moves O(B) floats instead of the O(B·T·W·K) a stacked trace would.
 
-Sweeps run the scan in **summary mode** (``runner.scan_run(trace=False)``):
-the eight per-run scalars accumulate inside the scan carry and the scan
-emits no per-tick outputs, so a B-point grid moves O(B) floats instead of
-the O(B·T·W·K) a stacked trace would — which is what makes 10⁴–10⁵-point
-grids affordable on one host.  Two scaling knobs on ``run_sweep``:
+The public entry point is one facade over one frozen spec::
 
-  * ``chunk_size`` — micro-batch the B axis: every chunk is padded to the
-    same shape and pushed through one cached, donated-buffer compiled
-    callable (one compile for any grid size, bounded live memory);
-  * device sharding — with more than one local device the B axis is padded
-    to a device multiple and ``pmap``-sharded, each device vmapping its
-    shard (``devices=1`` forces single-device; the default uses all).
+    spec = SweepSpec(axes=make_axes(...), workload=schedule_or_set,
+                     chunk_size=1024, devices=4, stream_dir="out/sweep")
+    result = sweep(spec, cfg)
+
+``SweepSpec`` bundles the experiment grid (:class:`SweepAxes`), the
+workload world (a static schedule, a ``scenarios.ScenarioSet``, or a
+``tenants.TenantSet`` for shared-fleet runs) and the execution options —
+validated in exactly one place (``SweepSpec.__post_init__``):
+
+  * ``chunk_size`` — micro-batch the B axis: every chunk is padded to one
+    shape and pushed through one cached compiled callable (one compile for
+    any grid size, live memory bounded by the chunk);
+  * ``devices`` / ``mesh`` — shard each chunk's B axis over a 1-D
+    ``("batch",)`` device mesh (``launch.mesh.make_sweep_mesh``) with
+    ``jax.shard_map``, every device vmapping its shard (no collectives).
+    Chunks are padded up to a device multiple — explicitly, and asserted
+    never to reach a result;
+  * ``stream_dir`` — stream each completed chunk's summaries to disk
+    (atomic ``checkpoint.checkpointer`` chunk files + a manifest) instead
+    of returning in-memory arrays: ``sweep`` then returns a
+    :class:`SweepStream` handle, an interrupted sweep resumes from the
+    last committed chunk, and peak host memory stays O(chunk) no matter
+    the grid size.
+
+``run_sweep`` / ``tenants.tenant_sweep`` survive as thin deprecated
+wrappers that build the equivalent ``SweepSpec``; ``run_single`` is the
+loop-of-one reference the vmapped engine is tested against.
 
 Axes:
   * ``seed``      — Monte-Carlo replication (market + execution noise +
@@ -32,36 +51,40 @@ Axes:
                     sentinel -1 defers to ``cfg.spot.bid_policy``;
   * ``itype`` / ``mix`` — fleet mix over the Appendix-A Table V types:
                     ``mix`` is the (T,)-mask of allowed types,  ``itype``
-                    the mix's primary type (reported in the trace).  A
-                    one-type mask is the classic granularity axis (many
-                    m3.medium vs few m4.10xlarge); a wider mask lets every
-                    acquisition pick the cheapest-per-CU available type;
+                    the mix's primary type (reported in the trace);
   * ``scenario``  — which workload world the run lives in.  With a
                     ``scenarios.ScenarioSet`` the id picks the generator
                     (``lax.switch``) and each grid point samples its own
                     schedule from (seed, scenario); with a plain
-                    ``Schedule`` the axis must be all-zero.
+                    ``Schedule`` or a ``TenantSet`` the axis must be
+                    all-zero.
 
 Schedules are *traced pytree inputs* of the compiled sweep, not constants
 closed over at trace time: compilation caches key on the schedule's shape
-(``workloads.schedule_shape``) or on the scenario specs, so two schedules
-of one shape — or any number of generated scenarios — share one compile.
-
-Summaries are per-run scalars, so the sweep output is a struct of
-(B,)-shaped arrays — ready for the policy/granularity frontier plots in
-``benchmarks.bench_spot``, ``benchmarks.bench_bidding`` and the
-per-scenario frontiers in ``benchmarks.bench_scenarios``.
+(``workloads.schedule_shape``) or on the scenario/tenant specs, so two
+schedules of one shape — or any number of generated scenarios — share one
+compile.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
+from ..checkpoint import checkpointer
 from ..core.types import PolicyParams
+from ..launch import mesh as mesh_lib
 from . import runner, spot
 from . import scenarios as scen_lib
 from . import workloads as wl
@@ -235,27 +258,129 @@ def make_axes(seeds: Sequence[int],
                      scenario=jnp.asarray(c.ravel(), jnp.int32))
 
 
+# --------------------------------------------------------------------------
+# The unified spec: one frozen object holds the grid, the workload world
+# and every execution option, validated in exactly one place.
+
+def _is_tenant_set(workload) -> bool:
+    # Lazy import: sim.tenants imports this module.
+    from . import tenants as tenants_lib
+    return isinstance(workload, tenants_lib.TenantSet)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepSpec:
+    """Everything one sweep needs, besides the ``SimConfig``.
+
+    ``axes`` is the flattened grid (``make_axes``); ``workload`` the world
+    every grid point runs in — a static ``workloads.Schedule`` /
+    ``JaxSchedule``, a ``scenarios.ScenarioSet`` (the ``scenario`` axis
+    picks the generator, each point samples its own schedule from (seed,
+    scenario)), or a ``tenants.TenantSet`` (shared-fleet runs returning a
+    ``TenantRun`` instead of a ``RunSummary``); ``params`` one
+    ``PolicyParams`` pytree broadcast to every point (default: the
+    config's own coefficients).
+
+    Execution options (keyword-only, validated here and nowhere else):
+
+      * ``chunk_size`` — micro-batch size (≥ 1).  ``None`` = whole grid in
+        one batch.  Chunks are padded up to one common, device-divisible
+        shape; padded rows are asserted never to reach a result or a chunk
+        file.
+      * ``devices`` — shard each chunk over this many local devices (≥ 1,
+        capped at the host's device count and the grid size) via
+        ``jax.shard_map`` on a 1-D ``("batch",)`` mesh.  ``None`` = all
+        local devices.  Mutually exclusive with ``mesh``.
+      * ``mesh`` — an explicit 1-axis ``jax.sharding.Mesh`` to shard over
+        instead (e.g. ``launch.mesh.make_sweep_mesh()``).
+      * ``stream_dir`` — stream completed chunks to this directory instead
+        of returning in-memory arrays: ``sweep`` returns a
+        :class:`SweepStream` handle (call ``.load()`` to materialize), and
+        an interrupted sweep re-run with the same spec resumes from the
+        last committed chunk.
+      * ``resume`` — with ``stream_dir``: reuse committed chunks found in
+        the directory (the default).  ``False`` discards them and
+        recomputes from scratch.
+    """
+
+    axes: SweepAxes
+    workload: object
+    params: PolicyParams | None = None
+    chunk_size: int | None = dataclasses.field(default=None, kw_only=True)
+    devices: int | None = dataclasses.field(default=None, kw_only=True)
+    mesh: Mesh | None = dataclasses.field(default=None, kw_only=True)
+    stream_dir: str | os.PathLike | None = dataclasses.field(
+        default=None, kw_only=True)
+    resume: bool = dataclasses.field(default=True, kw_only=True)
+
+    def __post_init__(self):
+        # THE validation point for every execution option (the per-function
+        # ad-hoc checks the old run_sweep grew are all retired into here).
+        if not isinstance(self.axes, SweepAxes):
+            raise TypeError(
+                f"axes must be a SweepAxes (see make_axes), got "
+                f"{type(self.axes).__name__}")
+        b = int(np.shape(self.axes.seed)[0])
+        if b < 1:
+            raise ValueError("the sweep grid is empty (B = 0)")
+        lens = {f: int(np.shape(getattr(self.axes, f))[0])
+                for f in SweepAxes._fields}
+        if set(lens.values()) != {b}:
+            raise ValueError(
+                f"axes fields disagree on the grid size: {lens}")
+        if self.chunk_size is not None and int(self.chunk_size) < 1:
+            raise ValueError(
+                f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.devices is not None and int(self.devices) < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.mesh is not None:
+            if self.devices is not None:
+                raise ValueError(
+                    "pass either devices= or mesh=, not both")
+            if len(self.mesh.axis_names) != 1:
+                raise ValueError(
+                    "the sweep mesh must have exactly one (batch) axis, "
+                    f"got axes {self.mesh.axis_names} — use "
+                    "launch.mesh.make_sweep_mesh")
+        if self.stream_dir is not None:
+            sd = os.fspath(self.stream_dir)
+            if not sd:
+                raise ValueError("stream_dir must be a non-empty path")
+            if os.path.isfile(sd):
+                raise ValueError(f"stream_dir {sd!r} is a file")
+
+    @property
+    def n_points(self) -> int:
+        return int(np.shape(self.axes.seed)[0])
+
+
+# --------------------------------------------------------------------------
+# Per-point programs (the in-jit surface ``repro.opt`` builds on).
+
 def _check_axes(cfg: runner.SimConfig, axes: SweepAxes,
-                schedule=None) -> None:
-    """Shared run_sweep input validation."""
+                workload=None) -> None:
+    """Config-dependent grid validation shared by every executor entry."""
     if not cfg.spot.enabled:
-        raise ValueError("run_sweep needs SimConfig.spot.enabled=True")
+        raise ValueError("sweeps need SimConfig.spot.enabled=True")
     # Guard a silent trap: a config that names a non-default instance while
     # the axes (which win) never visit it almost certainly means make_axes
-    # was left at its m3.medium default.
+    # was left at its m3.medium default.  Tenant sweeps are exempt — their
+    # legacy entry points always defaulted the fleet to m3.medium
+    # regardless of the config, and the committed baselines pin that.
     cfg_itype = spot.instance_index(cfg.spot.instance)
-    if cfg_itype != 0 and not np.any(np.asarray(axes.mix)[:, cfg_itype] > 0):
+    if (cfg_itype != 0 and not _is_tenant_set(workload)
+            and not np.any(np.asarray(axes.mix)[:, cfg_itype] > 0)):
         raise ValueError(
             f"SpotConfig.instance={cfg.spot.instance!r} never appears in "
             "the sweep axes, which override the config — pass "
             "instances=[...] to make_axes")
-    n_scen = (len(schedule)
-              if isinstance(schedule, scen_lib.ScenarioSet) else 1)
+    n_scen = (len(workload)
+              if isinstance(workload, scen_lib.ScenarioSet) else 1)
     scen = np.asarray(axes.scenario)
     if scen.size and (scen.min() < 0 or scen.max() >= n_scen):
         raise ValueError(
             f"scenario axis references id {int(scen.max())} but the "
-            f"schedule provides {n_scen} scenario(s) — pass a ScenarioSet "
+            f"workload provides {n_scen} scenario(s) — pass a ScenarioSet "
             "and scenarios=... to make_axes")
 
 
@@ -282,13 +407,16 @@ def _point_sched(cfg: runner.SimConfig, trace: bool = False):
 def point_fn(schedule: ScheduleLike, cfg: runner.SimConfig,
              trace: bool = False):
     """One grid point as a vmappable closure of (seed, bid_mult, itype,
-    policy, mix, scenario, params).  With a ``ScenarioSet`` the scenario
-    id picks the generator and the schedule is sampled per (seed,
-    scenario) inside the trace; with a plain schedule the id is ignored.
-    ``params`` is the (traced) ``PolicyParams`` pytree — the tuner in
-    ``repro.opt`` vmaps candidate populations over exactly this argument.
-    ``trace=True`` additionally returns the per-tick ``ys`` (what
-    ``benchmarks.bench_throughput`` sizes the trace-mode baseline with)."""
+    policy, mix, scenario, params) — the low-level *in-jit* program the
+    executor vmaps and ``repro.opt`` builds objectives from (host-side
+    callers should go through ``sweep(SweepSpec(...), cfg)`` instead).
+    With a ``ScenarioSet`` the scenario id picks the generator and the
+    schedule is sampled per (seed, scenario) inside the trace; with a
+    plain schedule the id is ignored.  ``params`` is the (traced)
+    ``PolicyParams`` pytree — the tuner in ``repro.opt`` vmaps candidate
+    populations over exactly this argument.  ``trace=True`` additionally
+    returns the per-tick ``ys`` (what ``benchmarks.bench_throughput``
+    sizes the trace-mode baseline with)."""
     base = _point_sched(cfg, trace=trace)
     if isinstance(schedule, scen_lib.ScenarioSet):
         sset = schedule
@@ -309,39 +437,62 @@ def point_fn(schedule: ScheduleLike, cfg: runner.SimConfig,
     return one
 
 
-def _sweep_callable(schedule: ScheduleLike, cfg: runner.SimConfig,
-                    n_dev: int, donate: bool = False):
+# --------------------------------------------------------------------------
+# The compiled chunk program: vmap over the chunk's rows, shard_map over
+# the batch mesh when it spans more than one device.
+
+def _sweep_callable(workload, cfg: runner.SimConfig,
+                    mesh: Mesh | None, donate: bool = False):
     """Cached compiled sweep over a fixed-shape batch of axes.
 
-    One entry per (scenario set | schedule shape, cfg, device count,
+    One entry per (scenario set | tenant set | schedule shape, cfg, mesh,
     donation): chunked sweeps reuse it for every micro-batch and *every
     same-shape schedule*, so a 10⁵-point grid — or a loop over many
     schedules — compiles exactly once.  The returned callable takes
-    ``(*axes_fields, sched)`` (``sched`` ignored under a ScenarioSet,
-    whose generators are compiled in).  With ``donate=True`` the axis
-    buffers are donated — each chunk's inputs are freed the moment the
-    device is done with them (the chunked path passes per-chunk copies,
-    never the caller's arrays; donation is a no-op on CPU, where XLA
-    ignores it, so it is requested only on accelerator backends); the
-    schedule argument is never donated.  With ``n_dev > 1`` the leading
-    axis is the device axis (``pmap``), each device vmapping its shard
-    with the schedule broadcast.
+    ``(*axes_fields, sched, params)`` (``sched`` ignored under a
+    ScenarioSet/TenantSet, whose generators are compiled in).  With
+    ``donate=True`` the axis buffers are donated — each chunk's inputs are
+    freed the moment the device is done with them (the chunked path passes
+    per-chunk copies, never the caller's arrays; donation is a no-op on
+    CPU, where XLA ignores it, so it is requested only on accelerator
+    backends); the schedule argument is never donated.  With a multi-device
+    ``mesh`` the chunk's B axis is partitioned over the mesh's ``batch``
+    axis by ``jax.shard_map`` — each device vmaps its shard of full
+    simulations, schedule and params fully replicated, no collectives — so
+    the same compiled program scales from 1 host CPU to a real accelerator
+    mesh.  Results come back as ordinary global (B,)-leading arrays: no
+    device-axis reshapes, directly host-transferable.
     """
     donate = donate and jax.default_backend() != "cpu"
+    mesh = None if (mesh is not None and mesh.size == 1) else mesh
     # Key on the config with the PolicyParams-traced leaves struck out:
     # the params pytree is a broadcast *argument* of the compiled sweep,
     # so sweeps at different tuned coefficients share one compile.
-    cfg_key = runner.strip_tuned(cfg)
-    if isinstance(schedule, scen_lib.ScenarioSet):
-        key = ("sweep", schedule, cfg_key, n_dev, donate)
-        sched_key_fn = point_fn(schedule, cfg)
+    mesh_key = 1 if mesh is None else mesh
+    if isinstance(workload, scen_lib.ScenarioSet):
+        cfg_key = runner.strip_tuned(cfg)
+        key = ("sweep", workload, cfg_key, mesh_key, donate)
+        sched_key_fn = point_fn(workload, cfg)
 
         def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
             del sched
             return sched_key_fn(seed, bid_mult, itype, policy, mix, scenario,
                                 params)
+    elif _is_tenant_set(workload):
+        from . import tenants as tenants_lib
+        scfg = workload.sim_config(cfg)
+        cfg_key = runner.strip_tuned(scfg)
+        key = ("sweep", workload, cfg_key, mesh_key, donate)
+        tenant_fn = tenants_lib.point_fn(workload, cfg)
+
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
+            del sched
+            return tenant_fn(seed, bid_mult, itype, policy, mix, scenario,
+                             params)
     else:
-        key = ("sweep", wl.schedule_shape(schedule), cfg_key, n_dev, donate)
+        cfg_key = runner.strip_tuned(cfg)
+        key = ("sweep", wl.schedule_shape(workload), cfg_key, mesh_key,
+               donate)
         base = _point_sched(cfg)
 
         def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
@@ -353,18 +504,22 @@ def _sweep_callable(schedule: ScheduleLike, cfg: runner.SimConfig,
         return fn
     in_axes = (0, 0, 0, 0, 0, 0, None, None)
     batched = jax.vmap(pt, in_axes=in_axes)
+    if mesh is not None:
+        p_b = PartitionSpec(mesh.axis_names[0])
+        p_r = PartitionSpec()
+        batched = shard_map(batched, mesh=mesh,
+                            in_specs=(p_b,) * 6 + (p_r, p_r),
+                            out_specs=p_b, check_rep=False)
     donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4, 5)) if donate else {}
-    if n_dev > 1:
-        fn = jax.pmap(batched, in_axes=in_axes, **donate_kw)
-    else:
-        fn = jax.jit(batched, **donate_kw)
+    fn = jax.jit(batched, **donate_kw)
     runner._cache_put(key, fn)
     return fn
 
 
 def _pad_axes(axes: SweepAxes, n: int) -> SweepAxes:
     """Pad the B axis up to ``n`` rows by repeating the last row (the
-    padded results are sliced off before returning)."""
+    padded results are sliced off — and asserted gone — before any result
+    or chunk file is produced)."""
     b = axes.seed.shape[0]
     if b == n:
         return axes
@@ -383,24 +538,148 @@ def _slice_axes(axes: SweepAxes, lo: int, hi: int,
     return SweepAxes(*(jnp.array(f[lo:hi], copy=True) for f in axes))
 
 
-def _device_fold(axes: SweepAxes, n_dev: int) -> SweepAxes:
-    """(B,) → (n_dev, B // n_dev) leading device axis for pmap."""
-    return SweepAxes(*(f.reshape((n_dev, f.shape[0] // n_dev)
-                                 + f.shape[1:]) for f in axes))
+def _take_rows(host_tree, rows: int, chunk: int, where: str):
+    """Slice one computed chunk down to its live rows, asserting that the
+    compiled call produced exactly the padded chunk shape — the guarantee
+    that ``_pad_axes``'s repeated rows can never leak into a summary or a
+    written chunk file."""
+    def cut(leaf):
+        if leaf.shape[0] != chunk:
+            raise AssertionError(
+                f"sweep chunk produced {leaf.shape[0]} rows where the "
+                f"padded chunk shape is {chunk} — padded points would leak "
+                f"into {where}")
+        return leaf[:rows] if rows != chunk else leaf
+
+    return jax.tree.map(cut, host_tree)
 
 
-def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
-              axes: SweepAxes,
-              chunk_size: int | None = None,
-              devices: int | None = None,
-              params: PolicyParams | None = None) -> RunSummary:
-    """Every grid point of the axes, summary-mode, sharded and chunked.
+# --------------------------------------------------------------------------
+# Streaming executor: chunk files + manifest, resumable after a kill.
 
-    ``schedule`` is either one workload schedule (static ``Schedule`` or
-    ``JaxSchedule`` pytree — passed to the compiled sweep as a traced
-    input) or a ``scenarios.ScenarioSet``, in which case the ``scenario``
-    axis picks the generator and every grid point samples its own schedule
-    from (seed, scenario) inside the jitted call.
+_MANIFEST = "sweep_manifest.json"
+_STREAM_SCHEMA = 1
+
+
+def _workload_token(workload) -> str:
+    """A process-stable identity string for the manifest (guards a
+    stream_dir against being resumed with a different sweep)."""
+    if isinstance(workload, scen_lib.ScenarioSet):
+        return f"scenarios:{','.join(workload.names)}:{workload.max_w}"
+    if _is_tenant_set(workload):
+        return (f"tenants:{','.join(workload.names)}:"
+                f"{workload.n}x{workload.max_w}")
+    sched = wl.as_jax_schedule(workload)
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(sched):
+        h.update(np.asarray(leaf).tobytes())
+    return f"schedule:{h.hexdigest()[:16]}"
+
+
+def _spec_digest(axes: SweepAxes, b: int, chunk: int, cfg_token: str,
+                 workload_token: str, pp) -> str:
+    h = hashlib.sha256()
+    h.update(f"{b}:{chunk}:{cfg_token}:{workload_token}".encode())
+    for f in axes:
+        h.update(np.asarray(f).tobytes())
+    for leaf in jax.tree.leaves(pp):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepStream:
+    """Handle to a streamed sweep's on-disk result.
+
+    The executor wrote one atomic chunk file per micro-batch
+    (``checkpoint.checkpointer`` layout: ``step_<i>/`` + ``.done``
+    marker); this handle reads them back.  ``load()`` concatenates every
+    chunk into the exact pytree the in-memory path would have returned —
+    bit-identical, the contract ``tests/test_sweepspec.py`` pins —
+    while ``load_chunk(i)`` keeps peak memory at one chunk for
+    reduce-style consumers.
+    """
+
+    directory: str
+    n_points: int
+    chunk_size: int      # padded rows per full chunk
+    n_chunks: int
+    manifest: dict = dataclasses.field(repr=False)
+    _struct: object = dataclasses.field(repr=False)   # padded-chunk shapes
+
+    def rows(self, i: int) -> int:
+        """Live (un-padded) rows of chunk ``i``."""
+        if not 0 <= i < self.n_chunks:
+            raise IndexError(f"chunk {i} out of range [0, {self.n_chunks})")
+        return min(self.chunk_size, self.n_points - i * self.chunk_size)
+
+    def completed(self) -> list[int]:
+        """Committed chunk ids present on disk (sorted)."""
+        return [s for s in checkpointer.committed_steps(self.directory)
+                if s < self.n_chunks]
+
+    def load_chunk(self, i: int):
+        """One chunk's summaries as a (rows(i),)-leading pytree."""
+        rows = self.rows(i)
+        like = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((rows,) + s.shape[1:], s.dtype),
+            self._struct)
+        return checkpointer.restore(self.directory, i, like)
+
+    def load(self):
+        """Every chunk, concatenated — the in-memory path's return value."""
+        chunks = [jax.tree.map(np.asarray, self.load_chunk(i))
+                  for i in range(self.n_chunks)]
+        cat = (chunks[0] if len(chunks) == 1 else
+               jax.tree.map(lambda *xs: np.concatenate(xs), *chunks))
+        return jax.tree.map(jnp.asarray, cat)
+
+
+def _stream_init(directory: str, digest: str, b: int, chunk: int,
+                 n_chunks: int, resume: bool) -> dict:
+    """Create or validate the stream manifest; returns it.  A directory
+    holding a *different* sweep's manifest is refused outright; with
+    ``resume=False`` any previous chunks (and manifest) are discarded."""
+    path = os.path.join(directory, _MANIFEST)
+    manifest = {"schema": _STREAM_SCHEMA, "digest": digest, "n_points": b,
+                "chunk": chunk, "n_chunks": n_chunks}
+    os.makedirs(directory, exist_ok=True)
+    if not resume:
+        for name in os.listdir(directory):
+            if name == _MANIFEST or name.startswith("step_"):
+                full = os.path.join(directory, name)
+                if os.path.isdir(full):
+                    shutil.rmtree(full)
+                else:
+                    os.remove(full)
+    elif os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev != manifest:
+            raise ValueError(
+                f"stream_dir {directory!r} holds a different sweep "
+                f"(manifest {prev} != {manifest}) — point stream_dir at a "
+                "fresh directory or pass resume=False to discard it")
+        return manifest
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, path)
+    return manifest
+
+
+# --------------------------------------------------------------------------
+# The facade.
+
+def sweep(spec: SweepSpec, cfg: runner.SimConfig):
+    """Run every grid point of ``spec`` under ``cfg`` — THE sweep entry
+    point (summary mode, chunked, mesh-sharded, optionally streamed).
+
+    Returns a :class:`RunSummary` of (B,)-shaped arrays — or a
+    ``tenants.TenantRun`` when ``spec.workload`` is a ``TenantSet`` — in
+    grid order, or a :class:`SweepStream` handle when ``spec.stream_dir``
+    is set (the streamed path never materializes the full grid in memory;
+    call ``.load()`` to do that explicitly).
 
     The *axes* choose each run's fleet mix, bid policy, bid multiple and
     scenario; ``cfg.spot.instance``/``fleet``/``bid_mult`` are not
@@ -408,71 +687,132 @@ def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
     ``cfg.spot.bid_policy`` *is* the policy of every grid point whose
     ``policy`` axis is the -1 sentinel (the ``make_axes`` default).
 
-    ``chunk_size`` bounds the live batch: the grid is processed in
-    micro-batches of that many runs, every chunk padded to the same shape
-    so one cached compiled callable (donated input buffers) serves them
-    all — no per-chunk recompiles, results concatenated on host.
-    ``devices`` caps the local devices sharded over (default: all); each
-    chunk is padded to a device multiple and ``pmap``-sharded.
-
-    ``params`` is one ``PolicyParams`` setting broadcast to every grid
-    point (default: the config's own values) — the per-point *bid* axis
-    still comes from ``axes.bid_mult``, which ``params.bid_mult`` scales.
+    Execution options live on the spec (see :class:`SweepSpec`); an
+    interrupted streamed sweep resumes from its last committed chunk when
+    re-invoked with the same spec and ``stream_dir``.
     """
-    _check_axes(cfg, axes, schedule)
-    if chunk_size is not None and int(chunk_size) < 1:
-        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    pp = runner.default_params(cfg) if params is None else params
-    is_set = isinstance(schedule, scen_lib.ScenarioSet)
+    workload = spec.workload
+    is_set = isinstance(workload, scen_lib.ScenarioSet)
+    is_tenants = _is_tenant_set(workload)
+    check_cfg = workload.sim_config(cfg) if is_tenants else cfg
+    _check_axes(check_cfg, spec.axes, workload)
+    pp = (runner.default_params(check_cfg) if spec.params is None
+          else spec.params)
     # The dummy stands in for the (unused) schedule argument when the
-    # scenario set generates schedules internally.
-    sched = (jnp.zeros((0,)) if is_set else wl.as_jax_schedule(schedule))
-    b = int(axes.seed.shape[0])
+    # scenario set / tenant set generates schedules internally.
+    sched = (jnp.zeros((0,)) if (is_set or is_tenants)
+             else wl.as_jax_schedule(workload))
+    axes = spec.axes
+    b = spec.n_points
+
     avail = len(jax.devices())
-    n_dev = avail if devices is None else max(int(devices), 1)
-    n_dev = min(n_dev, avail, b)
+    if spec.mesh is not None:
+        n_dev = min(spec.mesh.size, b)
+        mesh = spec.mesh if n_dev == spec.mesh.size else None
+    else:
+        n_dev = avail if spec.devices is None else min(int(spec.devices),
+                                                       avail)
+        n_dev = min(n_dev, b)
+        mesh = None
+    if n_dev > 1 and mesh is None:
+        mesh = mesh_lib.make_sweep_mesh(n_dev)
 
-    if chunk_size is None and n_dev == 1:
-        return _sweep_callable(schedule, cfg, 1)(*axes, sched, pp)
+    if spec.chunk_size is None and n_dev == 1 and spec.stream_dir is None:
+        return _sweep_callable(workload, cfg, None)(*axes, sched, pp)
 
-    chunk = b if chunk_size is None else min(int(chunk_size), b)
-    # Each compiled chunk covers a device multiple of runs.
+    chunk = b if spec.chunk_size is None else min(int(spec.chunk_size), b)
+    # Each compiled chunk covers a device multiple of runs (the explicit
+    # padding policy: the grid never has to divide the device count).
     chunk = -(-chunk // n_dev) * n_dev
     donating = jax.default_backend() != "cpu"
-    fn = _sweep_callable(schedule, cfg, n_dev, donate=True)
+    fn = _sweep_callable(workload, cfg, mesh, donate=True)
+    n_chunks = -(-b // chunk)
+
+    if spec.stream_dir is not None:
+        return _run_streamed(fn, axes, sched, pp, b, chunk, n_chunks,
+                             os.fspath(spec.stream_dir), spec.resume,
+                             donating, workload, check_cfg)
 
     outs = []
-    for lo in range(0, b, chunk):
-        part = _pad_axes(_slice_axes(axes, lo, min(lo + chunk, b),
-                                     copy=donating), chunk)
-        if n_dev > 1:
-            res = fn(*_device_fold(part, n_dev), sched, pp)
-            res = jax.tree.map(
-                lambda x: x.reshape((chunk,) + x.shape[2:]), res)
-        else:
-            res = fn(*part, sched, pp)
-        # Off-device before the next chunk so live bytes stay O(chunk).
-        outs.append(jax.tree.map(np.asarray, res))
-
-    # Only the *last* chunk can carry padding (`_pad_axes` repeats its
-    # final row up to the chunk shape); when the grid divides the chunk
-    # size evenly there is none, and the concat/slice round-trip is
-    # skipped entirely.
-    n_pad = -b % chunk
-    fields = []
-    for name in RunSummary._fields:
-        arrs = [getattr(o, name) for o in outs]
-        cat = arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
-        if cat.shape[0] != b + n_pad:
+    for i in range(n_chunks):
+        lo = i * chunk
+        hi = min(lo + chunk, b)
+        part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
+        res = fn(*part, sched, pp)
+        # Off-device before the next chunk so live bytes stay O(chunk);
+        # summaries are plain pytrees of dense arrays, so the transfer is
+        # reformat-free.
+        host = jax.tree.map(np.asarray, res)
+        outs.append(_take_rows(host, hi - lo, chunk, "the summary"))
+    cat = (outs[0] if len(outs) == 1 else
+           jax.tree.map(lambda *xs: np.concatenate(xs), *outs))
+    for leaf in jax.tree.leaves(cat):
+        if leaf.shape[0] != b:
             raise AssertionError(
-                f"chunked sweep produced {cat.shape[0]} rows for {b} grid "
-                f"points (+{n_pad} padding) — padded points would leak "
-                "into the summary")
-        fields.append(cat[:b] if n_pad else cat)
-    return RunSummary(*(jnp.asarray(f) for f in fields))
+                f"chunked sweep produced {leaf.shape[0]} rows for {b} grid "
+                "points — padded points would leak into the summary")
+    return jax.tree.map(jnp.asarray, cat)
 
 
-def run_single(schedule: ScheduleLike, cfg: runner.SimConfig,
+def _run_streamed(fn, axes: SweepAxes, sched, pp, b: int, chunk: int,
+                  n_chunks: int, directory: str, resume: bool,
+                  donating: bool, workload, check_cfg) -> SweepStream:
+    """Stream each completed chunk's summaries to disk; resumable.
+
+    Chunk ``i`` is written atomically as ``step_<i>`` via the
+    checkpointer (a crash mid-write leaves no ``.done`` marker, so the
+    chunk is simply recomputed on resume), *already sliced to its live
+    rows* — padded rows never reach a chunk file.  A manifest pins the
+    sweep's identity (axes/config/workload/params digest + chunking), so
+    a directory can only ever be resumed with the sweep that started it.
+    """
+    cfg_token = repr(runner.strip_tuned(check_cfg))
+    digest = _spec_digest(axes, b, chunk, cfg_token,
+                          _workload_token(workload), pp)
+    manifest = _stream_init(directory, digest, b, chunk, n_chunks, resume)
+    done = set(checkpointer.committed_steps(directory))
+
+    part0 = _pad_axes(_slice_axes(axes, 0, min(chunk, b), copy=False), chunk)
+    struct = jax.eval_shape(fn, *part0, sched, pp)
+
+    for i in range(n_chunks):
+        if i in done:
+            continue
+        lo = i * chunk
+        hi = min(lo + chunk, b)
+        part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
+        res = fn(*part, sched, pp)
+        host = jax.tree.map(np.asarray, res)
+        host = _take_rows(host, hi - lo, chunk, "a written chunk file")
+        checkpointer.save(directory, i, host)
+        del res, host   # live bytes stay O(chunk) no matter the grid
+
+    return SweepStream(directory=directory, n_points=b, chunk_size=chunk,
+                       n_chunks=n_chunks, manifest=manifest, _struct=struct)
+
+
+# --------------------------------------------------------------------------
+# Deprecated wrappers (PR-3-era entry points) and the loop-of-one reference.
+
+def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
+              axes: SweepAxes, *,
+              chunk_size: int | None = None,
+              devices: int | None = None,
+              params: PolicyParams | None = None) -> RunSummary:
+    """Deprecated: build a :class:`SweepSpec` and call :func:`sweep`.
+
+    Thin keyword-only wrapper kept so PR-3..6 callers keep working; the
+    execution is byte-for-byte the new engine's (same compile cache, same
+    chunk padding, same results)."""
+    warnings.warn(
+        "run_sweep is deprecated — build a SweepSpec and call "
+        "repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
+        stacklevel=2)
+    return sweep(SweepSpec(axes=axes, workload=schedule, params=params,
+                           chunk_size=chunk_size, devices=devices), cfg)
+
+
+def run_single(schedule: ScheduleLike, cfg: runner.SimConfig, *,
                seed: int, bid_mult: float,
                instance: FleetMix = "m3.medium",
                policy: str | int | None = None,

@@ -16,9 +16,14 @@ into a shared-fleet one without touching its scan shape:
     allocation hierarchically (``fairshare.allocate_tenants``), gate
     admission per tenant, and attribute every billed cent to a tenant in
     the scan carry;
-  * :func:`run_tenants` / :func:`tenant_sweep` run it, summary mode, via
-    the same compile cache every other entry point shares, and read the
-    per-tenant registers out as a :class:`TenantSummary`.
+  * :func:`point_fn` exposes one shared-fleet run as the same vmappable
+    ``(seed, bid_mult, itype, policy, mix, scenario, params)`` closure the
+    single-owner sweep uses, so a ``TenantSet`` rides the unified sweep
+    executor unchanged — ``sweep(SweepSpec(axes=..., workload=tset), cfg)``
+    is THE entry point (chunked, mesh-sharded, streamable, resumable),
+    returning a :class:`TenantRun` of (B,)-leading fields;
+  * :func:`run_tenants` runs one seed through it; :func:`tenant_sweep` is
+    the deprecated PR-6-era wrapper.
 
 Tenant ``i``'s schedule is sampled under ``scenarios.schedule_key(seed,
 i)`` — the *same* key ``run_sweep``/``run_single`` would use for scenario
@@ -36,6 +41,7 @@ preemption or not, and padded tenants (no valid rows) can never bill.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -220,64 +226,67 @@ def summarize_tenants(final, schedule, cfg: runner.SimConfig
     )
 
 
-def _run_fn(tset: TenantSet, scfg: runner.SimConfig):
-    """The cached jitted (seeds,)-vmapped shared-fleet program."""
-    key = ("tenants", tset, runner.strip_tuned(scfg))
-    fn = runner._JIT_CACHE.get(key)
-    if fn is None:
-        def one(seed, bid, itype, pol, mix, pp):
-            sched = tset.sample(seed)
-            rt = spot.make_runtime(scfg.spot, itype=itype, bid_mult=bid,
-                                   policy=pol, mix=mix)
-            final, _ = runner.scan_run(sched, scfg, seed=seed, spot_rt=rt,
-                                       trace=False, params=pp)
-            return TenantRun(fleet=sweep.summarize(final, sched, scfg),
-                             tenants=summarize_tenants(final, sched, scfg))
+def point_fn(tset: TenantSet, cfg: runner.SimConfig):
+    """One shared-fleet run as the sweep executor's vmappable closure of
+    ``(seed, bid_mult, itype, policy, mix, scenario, params)`` — the
+    tenant twin of ``sweep.point_fn`` (``scenario`` is ignored: the tenant
+    set *is* the workload world; schedules are sampled per (seed, tenant)
+    inside the trace).  ``cfg`` is the caller's plain config; the tenant
+    layout is stamped on here, in one place.  ``repro.opt``'s profit
+    objective builds on exactly this closure."""
+    scfg = tset.sim_config(cfg)
+    cfg_policy = spot.bid_policy_index(scfg.spot.bid_policy)
 
-        fn = jax.jit(jax.vmap(one, in_axes=(0, None, None, None, None,
-                                            None)))
-        runner._cache_put(key, fn)
-    return fn
+    def one(seed, bid_mult, itype, policy, mix, scenario, params):
+        del scenario
+        policy = jnp.where(policy < 0, cfg_policy, policy)
+        sched = tset.sample(seed)
+        rt = spot.make_runtime(scfg.spot, itype=itype, bid_mult=bid_mult,
+                               policy=policy, mix=mix)
+        final, _ = runner.scan_run(sched, scfg, seed=seed, spot_rt=rt,
+                                   trace=False, params=params)
+        return TenantRun(fleet=sweep.summarize(final, sched, scfg),
+                         tenants=summarize_tenants(final, sched, scfg))
 
-
-def _env(cfg: runner.SimConfig, bid_mult, instance, policy):
-    itype, mask = sweep._as_mix(instance)
-    if policy is None:
-        policy = spot.bid_policy_index(cfg.spot.bid_policy)
-    return (jnp.asarray(bid_mult, jnp.float32),
-            jnp.asarray(itype, jnp.int32),
-            jnp.asarray(policy, jnp.int32),
-            jnp.asarray(mask, jnp.float32))
+    return one
 
 
-def tenant_sweep(tset: TenantSet, cfg: runner.SimConfig, seeds,
+def _tenant_axes(tset: TenantSet, seeds, bid_mult, instance,
+                 policy) -> sweep.SweepAxes:
+    """The (S,)-row grid the legacy per-seed entry points map onto."""
+    return sweep.make_axes(list(seeds), [bid_mult], instances=[instance],
+                           policies=None if policy is None else [policy])
+
+
+def tenant_sweep(tset: TenantSet, cfg: runner.SimConfig, seeds, *,
                  bid_mult: float = 1.0, instance="m3.medium",
                  policy=None,
                  params: PolicyParams | None = None) -> TenantRun:
-    """Shared-fleet runs over a batch of seeds (each field (S,)-leading).
+    """Deprecated: build a :class:`sweep.SweepSpec` with the ``TenantSet``
+    as the workload and call ``sweep.sweep(spec, cfg)`` — which also
+    unlocks the chunked / mesh-sharded / streamed execution options this
+    per-seed wrapper never had."""
+    warnings.warn(
+        "tenant_sweep is deprecated — build a SweepSpec(workload=tset) "
+        "and call repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
+        stacklevel=2)
+    axes = _tenant_axes(tset, seeds, bid_mult, instance, policy)
+    return sweep.sweep(sweep.SweepSpec(axes=axes, workload=tset,
+                                       params=params), cfg)
 
-    One compile per (tenant set, stripped config): seeds, bid multiple,
-    fleet mix and the policy pytree are traced inputs, and the schedules
-    are sampled per (seed, tenant) inside the trace, exactly as the
-    scenario sweep samples per (seed, scenario)."""
-    scfg = tset.sim_config(cfg)
-    bid, itype, pol, mix = _env(scfg, bid_mult, instance, policy)
-    pp = runner.default_params(scfg) if params is None else params
-    seeds = jnp.asarray(list(seeds), jnp.int32)
-    return _run_fn(tset, scfg)(seeds, bid, itype, pol, mix, pp)
 
-
-def run_tenants(tset: TenantSet, cfg: runner.SimConfig, seed: int,
+def run_tenants(tset: TenantSet, cfg: runner.SimConfig, seed: int, *,
                 bid_mult: float = 1.0, instance="m3.medium",
                 policy=None,
                 params: PolicyParams | None = None) -> TenantRun:
-    """One shared-fleet run — ``tenant_sweep`` at a single seed, scalars."""
-    out = tenant_sweep(tset, cfg, [seed], bid_mult=bid_mult,
-                       instance=instance, policy=policy, params=params)
+    """One shared-fleet run — a one-point sweep, squeezed to scalars."""
+    axes = _tenant_axes(tset, [seed], bid_mult, instance, policy)
+    out = sweep.sweep(sweep.SweepSpec(axes=axes, workload=tset,
+                                      params=params), cfg)
     return jax.tree.map(lambda x: x[0], out)
 
 
-def isolated_runs(tset: TenantSet, cfg: runner.SimConfig, seed: int,
+def isolated_runs(tset: TenantSet, cfg: runner.SimConfig, seed: int, *,
                   bid_mult: float = 1.0, instance="m3.medium",
                   policy=None,
                   params: PolicyParams | None = None) -> sweep.RunSummary:

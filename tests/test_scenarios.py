@@ -314,8 +314,8 @@ def test_same_shape_scenarios_share_one_sweep_compile():
     cfg = _spot_cfg(ticks=40)
     a = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=0)
     b = paper_schedule(ttc=7500.0, arrival_gap_ticks=1, seed=1)
-    f1 = sweep._sweep_callable(a, cfg, 1)
-    f2 = sweep._sweep_callable(b, cfg, 1)
+    f1 = sweep._sweep_callable(a, cfg, None)
+    f2 = sweep._sweep_callable(b, cfg, None)
     assert f1 is f2
     # ... and the two sweeps still see their own bytes.
     axes = make_axes(seeds=[0], bid_mults=[1.5])

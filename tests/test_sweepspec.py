@@ -1,0 +1,300 @@
+"""The unified SweepSpec entry point: validation, bit-parity of every
+execution path (facade vs deprecated shims, chunked, streamed, sharded),
+padding containment, and kill-and-resume semantics.
+
+The sharding-parity test launches a subprocess because
+``XLA_FLAGS=--xla_force_host_platform_device_count`` must be set before
+the first jax import; the multi-device CI job additionally runs this
+whole module under 4 forced host CPU devices.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, SweepStream,
+                       TenantSet, TenantSpec, make_axes, paper_schedule,
+                       tenants)
+from repro.sim import scenarios as scen
+from repro.sim import sweep as sweep_mod
+from repro.sim.sweep import sweep
+
+SEEDS = (0, 1, 2)
+
+
+def _cfg(**spot_kw) -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(params=ControlParams(monitor_dt=300.0),
+                              billing=BillingParams(terminate="immediate")),
+        ticks=130, spot=SpotConfig(enabled=True, **spot_kw))
+
+
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+# A prime grid size: 13 points never divide any chunk or device count, so
+# every chunked/sharded path below exercises `_pad_axes` padding.
+PRIME_AXES = make_axes(range(13), [1.1])
+assert int(PRIME_AXES.seed.shape[0]) == 13
+
+
+def _assert_same(a, b, exact=True):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.shape == y.shape
+        if exact:
+            np.testing.assert_array_equal(x, y)
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- validation
+
+def test_spec_rejects_bad_chunk_size():
+    with pytest.raises(ValueError, match="chunk_size"):
+        SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=0)
+
+
+def test_spec_rejects_bad_devices():
+    with pytest.raises(ValueError, match="devices"):
+        SweepSpec(axes=PRIME_AXES, workload=SCHED, devices=0)
+
+
+def test_spec_rejects_devices_and_mesh():
+    from repro.launch import mesh as mesh_lib
+    with pytest.raises(ValueError, match="not both"):
+        SweepSpec(axes=PRIME_AXES, workload=SCHED, devices=1,
+                  mesh=mesh_lib.make_sweep_mesh(1))
+
+
+def test_spec_rejects_multi_axis_mesh():
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+    with pytest.raises(ValueError, match="one .batch. axis"):
+        SweepSpec(axes=PRIME_AXES, workload=SCHED, mesh=mesh)
+
+
+def test_spec_rejects_file_stream_dir(tmp_path):
+    f = tmp_path / "not_a_dir"
+    f.write_text("x")
+    with pytest.raises(ValueError, match="is a file"):
+        SweepSpec(axes=PRIME_AXES, workload=SCHED, stream_dir=str(f))
+
+
+def test_spec_rejects_non_axes():
+    with pytest.raises(TypeError, match="SweepAxes"):
+        SweepSpec(axes=np.arange(3), workload=SCHED)
+
+
+def test_spec_options_are_keyword_only():
+    with pytest.raises(TypeError):
+        SweepSpec(PRIME_AXES, SCHED, None, 4)  # chunk_size positionally
+
+
+def test_sweep_requires_spot_enabled():
+    cfg = SimConfig(ticks=130, spot=SpotConfig(enabled=False))
+    with pytest.raises(ValueError, match="spot.enabled"):
+        sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
+
+
+def test_runner_options_are_keyword_only():
+    from repro.sim import runner
+    with pytest.raises(TypeError):
+        runner.scan_run(SCHED, _cfg(), 0)  # seed positionally
+
+
+# ------------------------------------------------- facade vs deprecated shims
+
+def test_run_sweep_shim_warns_and_matches_facade():
+    cfg = _cfg()
+    ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        legacy = sweep_mod.run_sweep(SCHED, cfg, PRIME_AXES)
+    _assert_same(ref, legacy)
+
+
+def test_tenant_sweep_shim_warns_and_matches_facade():
+    cfg = _cfg()
+    sset = scen.default_set()
+    tset = TenantSet(tuple(TenantSpec(scenario=s, name=f"t{i}")
+                           for i, s in enumerate(sset.specs[:2])))
+    axes = make_axes(list(SEEDS), [1.0])
+    ref = sweep(SweepSpec(axes=axes, workload=tset), cfg)
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        legacy = tenants.tenant_sweep(tset, cfg, SEEDS)
+    _assert_same(ref, legacy)
+    one = tenants.run_tenants(tset, cfg, SEEDS[1])
+    _assert_same(one, jax.tree.map(lambda x: x[1], ref))
+
+
+def test_scenario_set_rides_the_facade():
+    cfg = _cfg()
+    sset = scen.default_set()
+    axes = make_axes(list(SEEDS), [1.0], scenarios=sset)
+    ref = sweep(SweepSpec(axes=axes, workload=sset), cfg)
+    chunked = sweep(SweepSpec(axes=axes, workload=sset, chunk_size=4), cfg)
+    _assert_same(ref, chunked)
+
+
+# --------------------------------------------- padding containment (streamed)
+
+def test_prime_grid_stream_chunks_hold_no_padding(tmp_path):
+    """ISSUE 7 bugfix satellite: `_pad_axes` repeats the last grid row up
+    to the padded chunk shape — no written chunk file may contain those
+    rows.  B=13 (prime) with chunk 4 pads the last chunk 13→16."""
+    cfg = _cfg()
+    d = str(tmp_path / "stream")
+    handle = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                             stream_dir=d), cfg)
+    assert isinstance(handle, SweepStream)
+    assert handle.n_chunks == 4 and handle.completed() == [0, 1, 2, 3]
+    rows = [handle.rows(i) for i in range(4)]
+    assert rows == [4, 4, 4, 1]  # last chunk sliced to its single live row
+    for i, r in enumerate(rows):
+        chunk = handle.load_chunk(i)
+        for leaf in jax.tree.leaves(chunk):
+            assert np.asarray(leaf).shape[0] == r
+    ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
+    _assert_same(ref, handle.load())
+
+
+def test_take_rows_asserts_on_shape_drift():
+    with pytest.raises(AssertionError, match="padded points would leak"):
+        sweep_mod._take_rows({"x": np.zeros((5,))}, rows=3, chunk=4,
+                             where="the summary")
+
+
+# ----------------------------------------------------------- kill-and-resume
+
+def test_kill_and_resume_is_bit_identical(tmp_path):
+    cfg = _cfg()
+    d = str(tmp_path / "stream")
+    spec = SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                     stream_dir=d)
+    ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
+    handle = sweep(spec, cfg)
+    uninterrupted = handle.load()
+
+    # Kill after k=2 chunks: drop the last two commits, and leave chunk 1
+    # as a torn, uncommitted write (renamed dir, no .done marker) — the
+    # crash-mid-save shape the checkpointer's commit protocol must mask.
+    import shutil
+    for i in (2, 3):
+        shutil.rmtree(os.path.join(d, f"step_{i:08d}"))
+        os.remove(os.path.join(d, f"step_{i:08d}.done"))
+    os.remove(os.path.join(d, "step_00000001.done"))
+    assert sweep_mod.checkpointer.committed_steps(d) == [0]
+
+    mtime0 = os.path.getmtime(os.path.join(d, "step_00000000"))
+    resumed = sweep(spec, cfg)
+    assert resumed.completed() == [0, 1, 2, 3]
+    # Chunk 0 was reused, not recomputed.
+    assert os.path.getmtime(os.path.join(d, "step_00000000")) == mtime0
+    _assert_same(uninterrupted, resumed.load())
+    _assert_same(ref, resumed.load())
+
+
+def test_stream_dir_refuses_a_different_sweep(tmp_path):
+    cfg = _cfg()
+    d = str(tmp_path / "stream")
+    sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                    stream_dir=d), cfg)
+    other = make_axes(range(7), [1.1])
+    with pytest.raises(ValueError, match="different sweep"):
+        sweep(SweepSpec(axes=other, workload=SCHED, chunk_size=4,
+                        stream_dir=d), cfg)
+    # resume=False discards the old stream instead.
+    h = sweep(SweepSpec(axes=other, workload=SCHED, chunk_size=4,
+                        stream_dir=d, resume=False), cfg)
+    assert h.n_points == 7
+    ref = sweep(SweepSpec(axes=other, workload=SCHED), cfg)
+    _assert_same(ref, h.load())
+
+
+def test_streamed_tenant_run_round_trip(tmp_path):
+    cfg = _cfg()
+    sset = scen.default_set()
+    tset = TenantSet(tuple(TenantSpec(scenario=s, name=f"t{i}")
+                           for i, s in enumerate(sset.specs[:2])))
+    axes = make_axes(list(SEEDS), [1.0])
+    ref = sweep(SweepSpec(axes=axes, workload=tset), cfg)
+    h = sweep(SweepSpec(axes=axes, workload=tset, chunk_size=2,
+                        stream_dir=str(tmp_path / "t")), cfg)
+    back = h.load()
+    assert type(back).__name__ == "TenantRun"
+    _assert_same(ref, back)
+
+
+# ------------------------------------------------------------- mesh sharding
+
+_SHARD_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+import numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.sim import SimConfig, SpotConfig, SweepSpec, make_axes, paper_schedule
+from repro.sim.sweep import sweep
+
+cfg = SimConfig(
+    ctrl=ControllerConfig(params=ControlParams(monitor_dt=300.0),
+                          billing=BillingParams(terminate="immediate")),
+    ticks=130, spot=SpotConfig(enabled=True))
+sched = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+axes = make_axes(range(13), [1.1])  # prime: pads 13 -> 16 on 4 devices
+r1 = sweep(SweepSpec(axes=axes, workload=sched, devices=1), cfg)
+r4 = sweep(SweepSpec(axes=axes, workload=sched), cfg)
+for name, a, b in zip(type(r1)._fields, r1, r4):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape == (13,), (name, a.shape, b.shape)
+    assert np.array_equal(a, b), name
+print("SHARD_PARITY_OK")
+"""
+
+
+def test_shard_map_matches_single_device_forced_4cpu():
+    """Bit-parity of the shard_map path on a forced 4-device CPU host.
+
+    Runs in a subprocess: the device-count flag only takes effect before
+    jax initializes, so it cannot be set inside this process."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src)
+    out = subprocess.run([sys.executable, "-c", _SHARD_PARITY_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_PARITY_OK" in out.stdout
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device host (CI forces 4 CPU "
+                           "devices for this)")
+def test_sharded_streamed_resume_in_process(tmp_path):
+    """On a genuinely multi-device host (the dedicated CI job), the whole
+    stack composes: shard_map × chunking × streaming × resume."""
+    cfg = _cfg()
+    d = str(tmp_path / "stream")
+    spec = SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=5,
+                     stream_dir=d)
+    ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED, devices=1), cfg)
+    h = sweep(spec, cfg)
+    # chunk 5 is padded up to the device multiple; live rows still 13
+    assert sum(h.rows(i) for i in range(h.n_chunks)) == 13
+    _assert_same(ref, h.load())
+    last = h.completed()[-1]
+    import shutil
+    shutil.rmtree(os.path.join(d, f"step_{last:08d}"))
+    os.remove(os.path.join(d, f"step_{last:08d}.done"))
+    _assert_same(ref, sweep(spec, cfg).load())
