@@ -1,0 +1,321 @@
+"""Chaos frontier: bounded degradation under traced fault injection.
+
+The chaos engine (``sim.faults``) injects capacity outages, preemption
+storms, Poisson mid-quantum hard-kills, telemetry dropouts/delays and
+stragglers *inside* the jitted scan, and ``FaultConfig(hardened=...)``
+flips every graceful-degradation response of the control plane at once
+(hedged type selection, bounded jittered backoff, AIMD anti-windup,
+Kalman covariance inflation, deadline-aware shedding).  This benchmark
+commits the robustness claims of that machinery:
+
+  1. **zero-fault bit-identity** — a neutral ``FaultSpec`` under the
+     engine reproduces the engine-compiled-out bits exactly, and a
+     fault-free sweep's result digest is pinned against the committed
+     baseline so *any* PR that perturbs the no-chaos program is caught;
+  2. **bounded inflation** — on every committed chaos scenario the
+     hardened plane's score (mean cost + penalty × violations) stays
+     within ``INFLATION_CEILING`` × its fault-free score;
+  3. **hardening pays** — the hardened plane *strictly* beats the
+     unhardened comparator (same physics, blind responses) on every
+     committed scenario;
+  4. **bounded recovery** — after a deterministic full-market outage
+     clears, the faulted fleet re-reaches the fault-free trajectory's
+     committed capacity within ``RECOVERY_CEILING`` ticks (the market
+     PRNG chain is fault-independent, so the two traces genuinely
+     reconverge rather than merely resembling each other).
+
+Emits ``results/BENCH_chaos.json`` (``kind: "chaos"``), gated in CI by
+``benchmarks/check_bench_regression.py`` against
+``benchmarks/baselines/``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_chaos [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import ControlParams
+from repro.sim import (
+    SimConfig,
+    SpotConfig,
+    SweepSpec,
+    faults,
+    make_axes,
+    paper_schedule,
+    runner,
+)
+from repro.sim.spot import INSTANCE_NAMES
+from repro.sim.sweep import sweep
+
+SCHEMA_VERSION = 1
+MONITOR_DT = 300.0
+TICKS = 80
+# Score: mean $ cost + PENALTY × mean TTC violations — violations must
+# carry weight or a plane that sheds everything would look "cheap".
+PENALTY = 2.0
+# Gate ceilings (hard, baseline-independent).  Chaos scenarios are
+# *supposed* to hurt; the claim is the hurt is bounded and recovery fast.
+INFLATION_CEILING = 8.0
+RECOVERY_CEILING = 24
+# The deterministic full-market outage window of the recovery probe.
+OUTAGE_START, OUTAGE_TICKS = 16.0, 14.0
+
+# Tight deadlines + arrivals every other tick keep work arriving *during*
+# outages, so admission control and hedged acquisition have something to
+# decide (a pre-loaded queue makes every plane look the same).
+TTC_TIGHT = 5820.0
+
+
+def _sched():
+    return paper_schedule(ttc=TTC_TIGHT, arrival_gap_ticks=2)
+
+
+def _cfg(fault_cfg=None, **kw):
+    return SimConfig(
+        ctrl=ControllerConfig(params=ControlParams(monitor_dt=MONITOR_DT)),
+        ticks=TICKS,
+        spot=SpotConfig(enabled=True, **kw),
+        faults=fault_cfg,
+    )
+
+
+# The committed chaos scenarios.  Each pairs market knobs with a
+# ``FaultSpec``; every scenario keeps an availability component (random
+# per-type dry-ups or the deterministic window) because that is where the
+# hardened plane's hedging/backoff/shedding can act — pure slot noise
+# degrades both planes identically by construction.
+SCENARIOS = {
+    # Random per-type dry-ups on a mixed fleet: the hardened plane hedges
+    # acquisition across the remaining types, the blind plane keeps
+    # bidding into the dried-up best-price type.
+    "dryups": {
+        "market": {"fleet": INSTANCE_NAMES, "instance": "m3.medium"},
+        "spec": {
+            "p_outage": 2.0,
+            "outage_hours": 1.5,
+            "p_meas_drop": 0.3,
+        },
+    },
+    # A sustained full-market blackout with arrivals still landing:
+    # deadline-aware shedding and AIMD anti-windup are the only levers.
+    "blackout": {
+        "market": {"instance": "m3.medium"},
+        "spec": {
+            "outage_start": OUTAGE_START,
+            "outage_ticks": 18.0,
+            "p_meas_drop": 0.3,
+        },
+    },
+    # Correlated preemption storms + Poisson hard-kills + degraded
+    # telemetry, with moderate dry-ups so reacquisition is contested.
+    "storm_kills": {
+        "market": {"fleet": INSTANCE_NAMES, "instance": "m3.medium"},
+        "spec": {
+            "p_storm": 0.5,
+            "storm_frac": 0.3,
+            "p_slot_fail": 0.3,
+            "p_outage": 1.0,
+            "outage_hours": 0.5,
+            "p_meas_drop": 0.4,
+            "p_meas_delay": 0.2,
+            "p_straggle": 0.5,
+            "straggle_ticks": 4.0,
+            "straggle_factor": 3.0,
+        },
+    },
+}
+
+
+def _score(s, n_seeds: int) -> tuple[float, float, int]:
+    cost = float(np.mean(np.asarray(s.cost)))
+    viol = int(np.sum(np.asarray(s.violations)))
+    return cost + PENALTY * viol / n_seeds, cost, viol
+
+
+def run_zero_fault(seeds) -> dict:
+    """Bit-identity of the no-chaos program, two ways.
+
+    ``neutral_exact``: the engine compiled *in* but fed a neutral spec
+    reproduces the engine-compiled-out bits (pinned on an on-demand,
+    spike-free market where the hardened backoff has nothing to react
+    to).  ``digest``: sha256 over every summary field of an engine-off
+    sweep — the regression gate compares it against the committed
+    baseline, so zero-fault runs stay bit-identical *across PRs*.
+    """
+    sched = _sched()
+    base = _cfg(bid_policy="on_demand", p_spike_per_core=0.0)
+    chaos = _cfg(faults.FaultConfig(), bid_policy="on_demand",
+                 p_spike_per_core=0.0)
+    axes = make_axes(seeds=list(seeds), bid_mults=[1.0])
+    a = sweep(SweepSpec(axes=axes, workload=sched), base)
+    b = sweep(SweepSpec(axes=axes, workload=sched), chaos)
+    neutral_exact = all(
+        np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+        for f in type(a)._fields
+    )
+
+    off = sweep(SweepSpec(axes=axes, workload=sched), _cfg())
+    h = hashlib.sha256()
+    for f in type(off)._fields:
+        h.update(np.ascontiguousarray(np.asarray(getattr(off, f))).tobytes())
+    return {"neutral_exact": bool(neutral_exact), "digest": h.hexdigest()}
+
+
+def run_scenarios(seeds) -> dict:
+    """Fault-free / hardened / unhardened scores per chaos scenario."""
+    sched = _sched()
+    axes = make_axes(seeds=list(seeds), bid_mults=[1.0])
+    n = len(list(seeds))
+    out = {}
+    for name, sc in SCENARIOS.items():
+        mkw = sc["market"]
+        fs = faults.make_fault_spec(**sc["spec"])
+        free = sweep(SweepSpec(axes=axes, workload=sched), _cfg(**mkw))
+        hard = sweep(
+            SweepSpec(axes=axes, workload=sched, faults=fs),
+            _cfg(faults.FaultConfig(hardened=True), **mkw),
+        )
+        blind = sweep(
+            SweepSpec(axes=axes, workload=sched, faults=fs),
+            _cfg(faults.FaultConfig(hardened=False), **mkw),
+        )
+        f_score, f_cost, f_viol = _score(free, n)
+        h_score, h_cost, h_viol = _score(hard, n)
+        u_score, u_cost, u_viol = _score(blind, n)
+        out[name] = {
+            "fault_free_score": f_score,
+            "hardened_score": h_score,
+            "unhardened_score": u_score,
+            "fault_free_cost": f_cost,
+            "hardened_cost": h_cost,
+            "unhardened_cost": u_cost,
+            "fault_free_violations": f_viol,
+            "hardened_violations": h_viol,
+            "unhardened_violations": u_viol,
+            "inflation": h_score / max(f_score, 1e-9),
+            "margin_pct": 100.0 * (u_score - h_score) / max(u_score, 1e-9),
+        }
+    return out
+
+
+def run_recovery(seed: int = 0) -> dict:
+    """Ticks after a blackout clears until the faulted fleet re-reaches
+    the fault-free trajectory's committed capacity at the same tick.
+
+    Both traces share the seed; the fault PRNG chain is salted separately
+    from the market/execution chains, so outside the window the two runs
+    see the *identical* world and the comparison is tick-for-tick fair.
+    """
+    sched = _sched()
+    spec = faults.make_fault_spec(outage_start=OUTAGE_START,
+                                  outage_ticks=OUTAGE_TICKS)
+    tr_free = runner.run(sched, _cfg(), seed=seed)
+    tr_fault = runner.run(sched, _cfg(faults.FaultConfig()), seed=seed,
+                          fspec=spec)
+    free_c = np.asarray(tr_free.n_committed)
+    fault_c = np.asarray(tr_fault.n_committed)
+    end = int(OUTAGE_START + OUTAGE_TICKS)
+    recovered = np.nonzero(fault_c[end:] >= free_c[end:] - 1e-6)[0]
+    ticks = int(recovered[0]) if recovered.size else TICKS
+    return {
+        "outage_start": int(OUTAGE_START),
+        "outage_end": end,
+        "recovery_ticks": ticks,
+        "committed_at_recovery": float(fault_c[min(end + ticks, TICKS - 1)]),
+    }
+
+
+def main(emit, smoke: bool = False) -> dict:
+    seeds = tuple(range(2 if smoke else 4))
+
+    zero = run_zero_fault(seeds)
+    emit("chaos_zero_fault_neutral_exact", float(zero["neutral_exact"]),
+         "bool")
+
+    scenarios = run_scenarios(seeds)
+    for name, sc in scenarios.items():
+        emit(
+            f"chaos_{name}_margin_pct",
+            sc["margin_pct"],
+            f"hard={sc['hardened_score']:.3f};"
+            f"blind={sc['unhardened_score']:.3f};"
+            f"inflation={sc['inflation']:.2f}",
+        )
+
+    recovery = run_recovery()
+    emit("chaos_recovery_ticks", float(recovery["recovery_ticks"]),
+         f"ceiling<={RECOVERY_CEILING}")
+
+    bounded = all(sc["inflation"] <= INFLATION_CEILING
+                  for sc in scenarios.values())
+    hardened_wins = all(sc["margin_pct"] > 0.0 for sc in scenarios.values())
+    recovered = recovery["recovery_ticks"] <= RECOVERY_CEILING
+    emit("chaos_acceptance_bounded_inflation", float(bounded), "bool")
+    emit("chaos_acceptance_hardened_wins", float(hardened_wins), "bool")
+
+    report = {
+        "kind": "chaos",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "config": {
+            "ticks": TICKS,
+            "monitor_dt": MONITOR_DT,
+            "seeds": list(seeds),
+            "penalty": PENALTY,
+            "ttc": TTC_TIGHT,
+            "inflation_ceiling": INFLATION_CEILING,
+            "recovery_ceiling": RECOVERY_CEILING,
+            "scenario_names": list(SCENARIOS),
+        },
+        "zero_fault": zero,
+        "scenarios": scenarios,
+        "recovery": recovery,
+        "acceptance": {
+            "zero_fault_exact": bool(zero["neutral_exact"]),
+            "bounded_inflation_all": bool(bounded),
+            "hardened_beats_unhardened_all": bool(hardened_wins),
+            "recovery_bounded": bool(recovered),
+        },
+    }
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_chaos.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    if not (zero["neutral_exact"] and bounded and hardened_wins
+            and recovered):
+        raise SystemExit(
+            "chaos acceptance not met: "
+            f"zero_fault_exact={zero['neutral_exact']} "
+            f"bounded_inflation={bounded} "
+            f"hardened_wins={hardened_wins} "
+            f"recovery_ticks={recovery['recovery_ticks']}"
+        )
+    return report
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced seed count for CI; same acceptance checks",
+    )
+    args = ap.parse_args()
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,value,derived")
+    main(emit, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -56,6 +56,22 @@ spot/bidding report).
     its tuned score inflates beyond ``COST_TOLERANCE`` × baseline;
   * a scenario's tuned-vs-default improvement goes negative.
 
+``BENCH_chaos.json`` (``bench_chaos --smoke``):
+
+  * an acceptance flag flips: ``zero_fault_exact`` (a neutral
+    ``FaultSpec`` under the chaos engine is no longer bit-identical to
+    the engine compiled out), ``bounded_inflation_all``,
+    ``hardened_beats_unhardened_all``, or ``recovery_bounded``;
+  * the zero-fault sweep digest differs from the baseline's — some PR
+    perturbed the no-chaos program's bits (the static-gating contract);
+  * any chaos scenario's hardened-vs-unhardened margin goes
+    non-positive, its hardened score inflates beyond
+    ``CHAOS_INFLATION_CEILING`` × its fault-free score (hard ceiling,
+    baseline-independent) or beyond ``COST_TOLERANCE`` × its baseline
+    score;
+  * post-outage recovery takes more than ``CHAOS_RECOVERY_CEILING``
+    ticks (hard ceiling, baseline-independent).
+
 ``BENCH_tenants.json`` (``bench_tenants --smoke``):
 
   * an acceptance flag flips: ``single_owner_exact`` (a one-tenant set is
@@ -101,6 +117,12 @@ SPEED_PARITY_FLOOR = 0.85
 # The streamed sweep must keep the full grid of summaries at least this
 # many times larger than the live bytes of one padded chunk.
 STREAM_RATIO_FLOOR = 10.0
+# Chaos scenarios are allowed to hurt, but the hardened plane's score
+# must stay within this multiple of its fault-free score, and the fleet
+# must re-reach the fault-free trajectory within this many ticks of a
+# blackout clearing (both hard, baseline-independent).
+CHAOS_INFLATION_CEILING = 8.0
+CHAOS_RECOVERY_CEILING = 24
 
 
 def _schema_smoke_errors(current: dict, baseline: dict) -> list[str]:
@@ -332,6 +354,79 @@ def check_tuning(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_chaos(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: chaos`` report (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
+        return errors
+
+    acc = current.get("acceptance", {})
+    for flag, why in (
+        (
+            "zero_fault_exact",
+            "a neutral FaultSpec under the chaos engine no longer "
+            "reproduces the engine-compiled-out bits",
+        ),
+        (
+            "bounded_inflation_all",
+            "some chaos scenario's hardened score inflated beyond the "
+            "ceiling over its fault-free score",
+        ),
+        (
+            "hardened_beats_unhardened_all",
+            "the hardened control plane no longer strictly beats the "
+            "unhardened comparator on every chaos scenario",
+        ),
+        (
+            "recovery_bounded",
+            "the fleet no longer re-reaches the fault-free trajectory "
+            "within the recovery ceiling after a blackout clears",
+        ),
+    ):
+        if not acc.get(flag):
+            errors.append(f"acceptance flag {flag} is false: {why}")
+
+    cur_digest = current.get("zero_fault", {}).get("digest")
+    base_digest = baseline.get("zero_fault", {}).get("digest")
+    if cur_digest != base_digest:
+        errors.append(
+            "zero-fault sweep digest changed: the no-chaos program is no "
+            f"longer bit-identical to the baseline ({cur_digest} vs "
+            f"{base_digest})"
+        )
+
+    for name, base_sc in baseline.get("scenarios", {}).items():
+        cur_sc = current.get("scenarios", {}).get(name)
+        if cur_sc is None:
+            errors.append(f"scenarios[{name}] missing from current results")
+            continue
+        if cur_sc["margin_pct"] <= 0.0:
+            errors.append(
+                f"scenarios[{name}] hardened-vs-unhardened margin went "
+                f"non-positive: {cur_sc['margin_pct']:.2f}%"
+            )
+        if cur_sc["inflation"] > CHAOS_INFLATION_CEILING:
+            errors.append(
+                f"scenarios[{name}] hardened/fault-free inflation "
+                f"{cur_sc['inflation']:.2f} exceeds the "
+                f"{CHAOS_INFLATION_CEILING} ceiling"
+            )
+        if cur_sc["hardened_score"] > COST_TOLERANCE * base_sc["hardened_score"]:
+            errors.append(
+                f"scenarios[{name}] hardened score "
+                f"{cur_sc['hardened_score']:.4f} exceeds {COST_TOLERANCE}x "
+                f"baseline {base_sc['hardened_score']:.4f}"
+            )
+
+    ticks = current.get("recovery", {}).get("recovery_ticks")
+    if ticks is None or ticks > CHAOS_RECOVERY_CEILING:
+        errors.append(
+            f"post-outage recovery took {ticks} ticks, beyond the "
+            f"{CHAOS_RECOVERY_CEILING}-tick ceiling"
+        )
+    return errors
+
+
 def check_tenants(current: dict, baseline: dict) -> list[str]:
     """Gate failures for the ``kind: tenants`` report (empty = pass)."""
     errors = _schema_smoke_errors(current, baseline)
@@ -445,6 +540,22 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"paper_exact={acc.get('paper_exact')} "
             f"single_compile={acc.get('single_compile')} "
             f"improvements_pct={improvements}"
+        )
+    elif kind_cur == "chaos":
+        errors = check_chaos(current, baseline)
+        margins = {
+            name: round(sc.get("margin_pct", float("nan")), 1)
+            for name, sc in current.get("scenarios", {}).items()
+        }
+        acc = current.get("acceptance", {})
+        print(
+            f"bench gate [chaos]: zero_fault_exact="
+            f"{acc.get('zero_fault_exact')} "
+            f"hardened_beats_unhardened_all="
+            f"{acc.get('hardened_beats_unhardened_all')} "
+            f"recovery_ticks="
+            f"{current.get('recovery', {}).get('recovery_ticks')} "
+            f"margins_pct={margins}"
         )
     elif kind_cur == "tenants":
         errors = check_tenants(current, baseline)

@@ -11,12 +11,21 @@ re-sharding after an AIMD scale event is just restore-with-new-shardings.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 
 import jax
 import numpy as np
+
+
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _path_part(p) -> str:
@@ -55,9 +64,13 @@ def save(directory: str, step: int, tree) -> str:
                          "uint16", "float16"):
             arr = arr.astype(np.float32)     # bf16 etc.: store widened
         fname = key.replace("/", "__") + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        # Integrity digest of the *file bytes*: verify() recomputes it to
+        # catch bit-flips and truncation that the .done marker (which only
+        # proves the write completed) cannot.
         manifest[key] = {"file": fname, "shape": list(arr.shape),
-                         "dtype": dtype}
+                         "dtype": dtype, "sha256": _file_sha256(fpath)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f)
 
@@ -83,6 +96,34 @@ def committed_steps(directory: str) -> list[int]:
 def latest_step(directory: str) -> int | None:
     steps = committed_steps(directory)
     return steps[-1] if steps else None
+
+
+def verify(directory: str, step: int) -> bool:
+    """True iff every leaf file of ``step`` matches its manifest sha256.
+
+    The ``.done`` marker proves the write *completed*; this proves the
+    bytes on disk are still the bytes that were written — a corrupted,
+    truncated or missing leaf file returns False so resume paths
+    (``sim.sweep._run_streamed``) silently recompute the chunk instead of
+    restoring garbage.  Manifests written before the digest existed carry
+    no ``sha256`` entries; those leaves are accepted as-is (nothing to
+    check against), so old checkpoints stay restorable.
+    """
+    d = os.path.join(directory, f"step_{step:08d}")
+    mpath = os.path.join(d, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)["leaves"]
+    except (OSError, ValueError, KeyError):
+        return False
+    for key, meta in manifest.items():
+        fpath = os.path.join(d, meta["file"])
+        if not os.path.isfile(fpath):
+            return False
+        want = meta.get("sha256")
+        if want is not None and _file_sha256(fpath) != want:
+            return False
+    return True
 
 
 def restore(directory: str, step: int, like):

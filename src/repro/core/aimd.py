@@ -47,6 +47,33 @@ def aimd_step(state: AimdState, n_tot: jnp.ndarray, n_star: jnp.ndarray,
     return AimdState(n_target=jnp.where(incr, up, down))
 
 
+def backoff_delay(streak: jnp.ndarray, cap, jitter_u: jnp.ndarray) -> jnp.ndarray:
+    """Bounded exponential backoff with jitter, in monitoring ticks.
+
+    After the k-th consecutive failed re-acquisition the next retry waits
+    ``min(2**k, cap)`` ticks, scaled by a uniform jitter in [0.5, 1.5) so
+    recovering controllers do not hammer a returning market in lockstep.
+    ``streak`` is clipped before exponentiation to keep f32 finite.
+    """
+    base = jnp.minimum(2.0 ** jnp.minimum(streak, 30.0), cap)
+    return base * (0.5 + jitter_u)
+
+
+def anti_windup(state: AimdState, ceiling: jnp.ndarray,
+                failing: jnp.ndarray) -> AimdState:
+    """Clamp the stored AIMD target while acquisition keeps failing.
+
+    During a capacity outage the additive-increase branch would integrate
+    the target to N_max with nothing to show for it; on recovery the fleet
+    would then thundering-herd to the windup peak at whatever the spot
+    price is.  Holding the stored target within one additive step of what
+    is actually committed keeps the post-outage ramp at the normal AIMD
+    pace.  No-op when ``failing`` is False.
+    """
+    clamped = jnp.minimum(state.n_target, ceiling)
+    return AimdState(n_target=jnp.where(failing, clamped, state.n_target))
+
+
 def policy_init() -> PolicyState:
     return PolicyState(n_star_hist=jnp.zeros((HIST,), jnp.float32),
                        hist_len=jnp.asarray(0, jnp.int32))

@@ -110,6 +110,7 @@ def step(state: ControllerState,
          cores: jnp.ndarray | float | None = None,  # CUs per instance/slot
          pp: PolicyParams | None = None,  # traced policy gains (tuning)
          tenants: tuple | None = None,    # (tenant_id (W,), n, base_w (N,))
+         meas_dropped: jnp.ndarray | None = None,  # (W, K) lost telemetry
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
     # CUs per instance — a traced scalar when the spot fleet's granularity
@@ -124,9 +125,13 @@ def step(state: ControllerState,
         cores = 1.0
 
     # -- 1. predictor update ------------------------------------------------
+    # ``meas_dropped`` marks filters whose fresh measurement was lost to a
+    # telemetry dropout (chaos engine, hardened mode): the Kalman bank coasts
+    # there with inflated covariance instead of silently standing still.
     if cfg.predictor == "kalman":
         kf = kalman.step(state.kf, b_meas, meas_mask, p,
-                         use_kernel=cfg.kalman_kernel)
+                         use_kernel=cfg.kalman_kernel,
+                         dropped=meas_dropped)
         arma = state.arma
         b_hat, reliable = kf.b_hat, kf.reliable
     elif cfg.predictor == "adhoc":

@@ -35,7 +35,8 @@ def step(state: KalmanState,
          b_meas: jnp.ndarray,
          meas_mask: jnp.ndarray,
          params: ControlParams,
-         use_kernel: bool = False) -> KalmanState:
+         use_kernel: bool = False,
+         dropped: jnp.ndarray | None = None) -> KalmanState:
     """One monitoring-instant update for every (w, k) filter.
 
     Args:
@@ -46,6 +47,12 @@ def step(state: KalmanState,
       use_kernel: route the fused eqs. 6-9 masked update through the Pallas
                   kernel (``repro.kernels.kalman_update``) — bit-comparable
                   to the jnp path; compiled on TPU, interpreted elsewhere.
+      dropped:    optional (W, K) bool — filters whose fresh measurement was
+                  *lost* this tick (telemetry dropout, not mere absence).  The
+                  missing-measurement update skips the correction but inflates
+                  covariance by σ_z² so the prediction coasts on the process
+                  model and the next real measurement earns a larger gain.
+                  ``None`` (the default) compiles the exact historical update.
 
     Filters with no fresh measurement keep their state unchanged (their clock
     only advances on measurement arrival, matching the platform: a type that
@@ -77,6 +84,11 @@ def step(state: KalmanState,
 
         b_hat = jnp.where(upd, b_hat_new, b_hat0)
         pi = jnp.where(upd, pi_new, state.pi)
+    if dropped is not None:
+        # Missing-measurement update: prediction coasts (b̂ unchanged) while
+        # uncertainty grows by one process-noise step, exactly the eq. 6 time
+        # update without the eq. 9 contraction.
+        pi = jnp.where(dropped & state.has_meas, pi + params.sigma_z2, pi)
     b_meas_prev = jnp.where(meas_mask, b_meas, prev_meas0)
     has_meas = state.has_meas | meas_mask
 

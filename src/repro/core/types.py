@@ -199,7 +199,13 @@ class ClusterState(NamedTuple):
     busy_frac: jnp.ndarray    # (I,) fraction of last interval spent computing
     itype: jnp.ndarray        # (I,) int32: instance-type id (sim.spot table)
     bid: jnp.ndarray          # (I,) $ / quantum bid of the slot's request
-    n_preempt: jnp.ndarray    # ()   cumulative instances reclaimed by market
+    n_preempt: jnp.ndarray    # ()   cumulative instances lost involuntarily:
+                              #      market reclaims (billing.preempt) plus,
+                              #      with the chaos engine on, preemption
+                              #      storms and Poisson hard-kills
+                              #      (sim.faults.kill_slots — which also
+                              #      counts them separately in
+                              #      FaultState.n_killed)
 
 
 class PolicyParams(NamedTuple):

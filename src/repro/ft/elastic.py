@@ -11,6 +11,10 @@ slices (Appendix A's many-small-granules argument), so a scale event is:
 checkpoint → re-form mesh with R' replicas → restore (topology-agnostic) →
 continue.  Preempted/failed replicas shrink R the same way; stragglers are
 detected by per-replica step-time ratios and replaced rather than waited on.
+Failure, preemption and straggler events come from ``ft.failures`` — since
+PR 8 a shim over the simulator's chaos engine (``sim.faults``), so the
+trainer rehearses against the *same* fault processes the cost simulator
+injects and the adversarial search attacks.
 
 In this container replicas are logical (single CPU device); on a pod the
 same class drives ``jax.distributed`` re-initialization.  Everything

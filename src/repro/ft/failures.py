@@ -1,19 +1,29 @@
 """Failure / preemption / straggler injection for the elastic runtime.
 
-Spot reclamations are drawn from the Appendix-A market model (bid vs. price
-trace); stragglers and hard failures are Poisson events.  At 1000+ nodes the
-per-step event probabilities here are the design point: with p_fail ≈ 1e-4
-per node-step, a 4096-chip job sees an event every ~2.4 steps — which is why
-the runtime treats topology change as the *common case*.
+A thin host-side shim over the shared chaos engine (``sim.faults``): the
+same jitted ``tick`` kernel the simulator advances inside its scan
+precomputes this injector's per-step kill and straggle masks
+(``faults.fault_timeline``), so the elastic trainer and the simulator
+draw faults from one PRNG discipline and one episode model.  Spot
+reclamations come straight from the Appendix-A market process
+(``sim.spot.price_trace``): an hour whose price exceeds the bid reclaims
+the fleet, the same predicate the simulator's ``billing.preempt``
+applies per quantum.
+
+At 1000+ nodes the per-step event probabilities here are the design
+point: with p_fail ≈ 1e-4 per node-step, a 4096-chip job sees an event
+every ~2.4 steps — which is why the runtime treats topology change as
+the *common case*.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
-from ..sim import market
+from ..sim import faults, spot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,29 +37,55 @@ class FailureConfig:
     seed: int = 0
 
 
+# Replica ids map onto the precomputed timeline by modulo: large enough
+# that distinct live replicas virtually never alias, small enough that
+# the host-side precompute stays trivial.
+_POOL = 256
+
+
 class FailureInjector:
-    def __init__(self, cfg: FailureConfig, horizon_hours: int = 48):
+    """Precomputed fault timeline for one elastic run.
+
+    Keeps the original interface — ``step_events(step, hour, replicas)``
+    returning ``(failed_ids, straggler_ids, reclaimed: bool)`` and
+    ``slowdown(replica, step)`` — but the events behind it come from the
+    chaos engine: a neutral-outage ``FaultSpec`` whose per-hour rates are
+    scanned at ``dt=3600`` (one tick per step), so ``p_fail`` /
+    ``p_straggle`` stay per-replica-step probabilities exactly as before.
+    """
+
+    def __init__(self, cfg: FailureConfig, horizon_hours: int = 48,
+                 horizon_steps: int = 4096):
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
-        trace = market.spot_trace(cfg.spot_instance, horizon_hours,
-                                  seed=cfg.seed)
+        # Market reclaims: hour h reclaims iff its spot price exceeds the
+        # bid.  The trace key folds in the instance's core count so every
+        # (seed, type) pair gets an independent noise stream.
+        cores, _, _ = spot.INSTANCE_TYPES[cfg.spot_instance]
+        rt = spot.make_runtime(spot.SpotConfig(instance=cfg.spot_instance))
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), cores)
+        trace = np.asarray(spot.price_trace(rt, horizon_hours, key))
         self.reclaim_hours = set(
-            np.nonzero(market.preemptions(trace, cfg.spot_bid))[0].tolist())
-        self._straggle_until: dict[int, int] = {}
+            np.nonzero(trace > cfg.spot_bid)[0].tolist())
+        spec = faults.make_fault_spec(
+            p_slot_fail=cfg.p_fail,
+            p_straggle=cfg.p_straggle,
+            straggle_ticks=float(cfg.straggle_steps),
+            straggle_factor=float(cfg.straggle_factor))
+        kill, straggling = faults.fault_timeline(cfg.seed, spec,
+                                                 horizon_steps, _POOL)
+        self._kill = np.asarray(kill)
+        self._straggling = np.asarray(straggling)
+        self._steps = int(horizon_steps)
 
     def step_events(self, step: int, hour: float, replicas: list[int]):
         """Returns (failed_ids, straggler_ids, reclaimed_all: bool)."""
         reclaimed = int(hour) in self.reclaim_hours
-        failed = [r for r in replicas
-                  if self.rng.random() < self.cfg.p_fail]
-        for r in replicas:
-            if self.rng.random() < self.cfg.p_straggle:
-                self._straggle_until[r] = step + self.cfg.straggle_steps
-        stragglers = [r for r in replicas
-                      if self._straggle_until.get(r, -1) >= step]
+        row = self._kill[step % self._steps]
+        failed = [r for r in replicas if row[r % _POOL]]
+        stragglers = [r for r in replicas if self.slowdown(r, step) > 1.0]
         return failed, stragglers, reclaimed
 
     def slowdown(self, replica: int, step: int) -> float:
-        if self._straggle_until.get(replica, -1) >= step:
+        if self._straggling[step % self._steps, replica % _POOL]:
             return self.cfg.straggle_factor
         return 1.0

@@ -11,6 +11,14 @@ simulations × generations — is again one jitted CEM run, one compile.
 The nominal world is injected as candidate 0 of every generation, so the
 reported worst case is never milder than the spec's own setting and the
 ``damage`` (worst − nominal) is non-negative by construction.
+
+Chaos attacks: wrap the generator in a ``sim.faults.ChaosScenario`` (a
+``FaultModel`` with ``bounds``) and run under a config with
+``cfg.faults=FaultConfig()``.  The fault model's ``fault_``-prefixed
+bounds merge into ``param_bounds()``, so ``scenario_space`` exposes them
+here unchanged and the adversary searches *when the outage hits and how
+hard* jointly with the workload shape — ``ScenarioObjective`` threads the
+attacked ``FaultSpec`` into the fault-aware point program.
 """
 
 from __future__ import annotations

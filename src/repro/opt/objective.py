@@ -234,6 +234,12 @@ class ScenarioObjective:
             raise ValueError(
                 f"scenario {getattr(spec, 'name', spec)!r} has no tunable "
                 "generator parameters to attack")
+        if hasattr(spec, "fault_spec") and cfg.faults is None:
+            raise ValueError(
+                f"scenario {getattr(spec, 'name', spec)!r} carries a fault "
+                "model but SimConfig.faults is None — the chaos engine "
+                "must be compiled in (cfg.faults=FaultConfig()) for the "
+                "adversary's fault parameters to act")
         self.cfg = cfg
         self.spec = spec
         self.space = space
@@ -252,12 +258,18 @@ class ScenarioObjective:
 
     def _grid(self, vec: jnp.ndarray) -> sweep.RunSummary:
         gen_params = self.space.to_dict(self.space.clip(vec))
+        # A chaos scenario (``sim.faults.ChaosScenario``) routes its
+        # ``fault_``-prefixed attacked parameters into a traced FaultSpec:
+        # the adversary then searches fault timing/intensity jointly with
+        # the workload shape, through the same CEM loop.
+        tail = ((self.spec.fault_spec(gen_params),)
+                if hasattr(self.spec, "fault_spec") else ())
 
         def one(seed):
             key = scen_lib.schedule_key(seed, self.scenario_id)
             sched = self.spec.sample(key, params=gen_params)
             return self._base(sched, seed, self._bid, self._itype,
-                              self._pol, self._mix, self.pp)
+                              self._pol, self._mix, self.pp, *tail)
 
         return jax.vmap(one)(self.seeds)
 

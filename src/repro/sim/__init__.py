@@ -1,11 +1,14 @@
 # §V testbed: discrete-time cloud simulator, the 30-workload suite, the
 # stochastic workload scenario generators, the Lambda billing model, the
-# JAX spot market and its vmapped sweep harness (``market`` is the numpy
-# facade kept for ft/failures compat).  ``tenants`` extends the testbed to
-# a multi-tenant shared fleet with attributed billing.
+# JAX spot market and its vmapped sweep harness, and the chaos engine
+# (``faults``: traced fault injection across market, fleet and telemetry).
+# ``tenants`` extends the testbed to a multi-tenant shared fleet with
+# attributed billing.  The old ``market`` numpy facade is gone: its one
+# consumer (``ft.failures``) now rides ``spot``/``faults`` directly.
 from ..core.types import PolicyParams, TenantConfig, make_policy_params
-from . import (lambda_model, market, runner, scenarios, spot, sweep,
+from . import (faults, lambda_model, runner, scenarios, spot, sweep,
                tenants, workloads)
+from .faults import ChaosScenario, FaultConfig, FaultModel, FaultSpec
 from .runner import SimConfig, SimTrace, default_params, run
 from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
@@ -16,8 +19,9 @@ from .tenants import (TenantRun, TenantSet, TenantSpec, TenantSummary,
 from .workloads import (JaxSchedule, Schedule, paper_schedule,
                         uniform_schedule)
 
-__all__ = ["lambda_model", "market", "runner", "scenarios", "spot", "sweep",
+__all__ = ["faults", "lambda_model", "runner", "scenarios", "spot", "sweep",
            "tenants", "workloads", "SimConfig", "SimTrace", "run",
+           "ChaosScenario", "FaultConfig", "FaultModel", "FaultSpec",
            "ScenarioSet", "default_set", "paper_scenario", "SpotConfig",
            "SweepAxes", "SweepSpec", "SweepStream", "make_axes",
            "run_single", "run_sweep",

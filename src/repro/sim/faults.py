@@ -1,0 +1,434 @@
+"""Chaos engine: traced fault injection for the simulated CaaS platform.
+
+The paper's platform is sold on surviving a hostile market, yet the base
+simulator only models the benign adversity of being outbid.  This module
+injects four fault families *inside* the jitted scan, driven by a
+``FaultSpec`` pytree of traced scalars (so fault timing/intensity can ride
+a sweep axis, be searched by the CEM adversary, and differentiate where
+the underlying arithmetic does):
+
+  (i)  capacity outages — per-type availability masks (random per-type
+       dry-ups plus a deterministic full-market window whose *start tick*
+       is itself traced), and correlated "preemption storms" that reclaim
+       a fraction of the live fleet regardless of bid;
+  (ii) independent slot failures — per-slot Poisson hard-kills mid
+       quantum, billed exactly like mid-quantum preemption (the paid
+       remainder is forfeited, the in-flight work of the killed slots
+       re-enters the queue exactly once);
+ (iii) telemetry dropouts and delays — fresh Kalman measurements are
+       lost, or held one monitoring instant and delivered stale (the
+       lagged-measurement form of eq. 8 makes one-tick staleness a
+       first-class citizen);
+  (iv) stragglers — per-slot service-rate slowdown: the slot stays
+       billed at full price but delivers ``1/straggle_factor`` of its
+       nominal CU capacity while the episode lasts.
+
+Static gating contract: ``SimConfig.faults`` is ``None`` by default and
+every fault branch in the step function is a *trace-time* conditional on
+it, so a fault-free config compiles a program structurally identical to
+the pre-chaos simulator — zero-fault runs stay bit-identical to the
+committed baselines.  ``FaultConfig(hardened=...)`` selects between the
+hardened control plane (hedged type selection, bounded jittered backoff,
+AIMD anti-windup, covariance inflation on dropped measurements,
+deadline-aware load shedding) and an unhardened comparator that suffers
+the same physics blind.
+
+The fault PRNG chain is ``fold_in(PRNGKey(seed), FAULT_SALT)`` — separate
+from the execution-noise chain (``PRNGKey(seed)``), the market chain
+(``PRNGKey(seed + 7919)``) and the schedule chain, so enabling faults
+never perturbs workload, prices, or execution noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import billing
+
+# Salt for the dedicated fault PRNG chain (a prime, like the schedule
+# salt 104729 and the market offset 7919).
+FAULT_SALT = 15485863
+
+
+def fault_key(seed) -> jax.Array:
+    """Root key of the fault chain for ``seed`` (traced or static)."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), FAULT_SALT)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static (trace-time) chaos switches; part of the jit cache key.
+
+    ``hardened`` toggles every graceful-degradation response at once so a
+    single flag flip produces the unhardened comparator used by
+    ``bench_chaos``.  The remaining fields parameterise the hardened
+    responses and are deliberately static: they are operator policy, not
+    world state, so they do not belong on the traced ``FaultSpec`` axis.
+    """
+
+    hardened: bool = True
+    # Bounded exponential backoff: retry delay after the k-th consecutive
+    # failed acquisition is min(2**k, backoff_cap) ticks, jittered to
+    # [0.5x, 1.5x] to de-synchronise recovering fleets.
+    backoff_cap: float = 8.0
+    # Deadline-aware shedding: once the fail streak reaches ``shed_after``
+    # ticks, refuse arrivals whose requested deadline is tighter than
+    # ``shed_slack * streak`` monitoring intervals — during a sustained
+    # outage they could not be finished anyway and would only convert
+    # admission into SLA violations.
+    shed_after: float = 4.0
+    shed_slack: float = 2.0
+
+
+class FaultSpec(NamedTuple):
+    """Traced fault intensities — () f32 leaves (or a batch axis on each).
+
+    Rates are per *hour* (the paper's billing quantum) and are converted
+    to per-tick probabilities with the monitoring interval, so the same
+    spec means the same world at any ``monitor_dt``.
+    """
+
+    p_outage: jnp.ndarray  # per-hour prob a type enters a random outage
+    outage_hours: jnp.ndarray  # mean duration of a random outage (hours)
+    outage_start: jnp.ndarray  # tick a full-market outage opens (<0: off)
+    outage_ticks: jnp.ndarray  # length of that deterministic window
+    p_storm: jnp.ndarray  # per-hour prob of a preemption storm
+    storm_frac: jnp.ndarray  # fraction of live slots a storm reclaims
+    p_slot_fail: jnp.ndarray  # per-hour per-slot hard-kill probability
+    p_meas_drop: jnp.ndarray  # prob a fresh measurement is lost
+    p_meas_delay: jnp.ndarray  # prob a fresh measurement arrives stale
+    p_straggle: jnp.ndarray  # per-hour per-slot straggle-onset prob
+    straggle_ticks: jnp.ndarray  # straggle episode length (ticks)
+    straggle_factor: jnp.ndarray  # service-rate divisor while straggling
+
+
+def make_fault_spec(
+    p_outage=0.0,
+    outage_hours=1.0,
+    outage_start=-1.0,
+    outage_ticks=0.0,
+    p_storm=0.0,
+    storm_frac=0.0,
+    p_slot_fail=0.0,
+    p_meas_drop=0.0,
+    p_meas_delay=0.0,
+    p_straggle=0.0,
+    straggle_ticks=0.0,
+    straggle_factor=1.0,
+) -> FaultSpec:
+    """Build a ``FaultSpec`` of f32 scalars; the default is fault-free."""
+    as_f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)  # noqa: E731
+    return FaultSpec(
+        p_outage=as_f32(p_outage),
+        outage_hours=as_f32(outage_hours),
+        outage_start=as_f32(outage_start),
+        outage_ticks=as_f32(outage_ticks),
+        p_storm=as_f32(p_storm),
+        storm_frac=as_f32(storm_frac),
+        p_slot_fail=as_f32(p_slot_fail),
+        p_meas_drop=as_f32(p_meas_drop),
+        p_meas_delay=as_f32(p_meas_delay),
+        p_straggle=as_f32(p_straggle),
+        straggle_ticks=as_f32(straggle_ticks),
+        straggle_factor=as_f32(straggle_factor),
+    )
+
+
+class FaultState(NamedTuple):
+    """Per-run fault registers carried through the scan."""
+
+    key: jax.Array  # fault PRNG chain
+    out_left: jnp.ndarray  # (T,) remaining random-outage ticks per type
+    straggle_left: jnp.ndarray  # (I,) remaining straggle ticks per slot
+    pend_meas: jnp.ndarray  # (W, K) measurement values held one tick
+    pend_mask: jnp.ndarray  # (W, K) bool: a stale delivery is pending
+    fail_streak: jnp.ndarray  # () consecutive failed-acquisition ticks
+    backoff_left: jnp.ndarray  # () ticks until the next retry is allowed
+    n_killed: jnp.ndarray  # () slots hard-killed (storms + Poisson)
+    n_dropped: jnp.ndarray  # () measurements lost to dropouts
+    n_delayed: jnp.ndarray  # () measurements delivered one tick stale
+    n_shed: jnp.ndarray  # () arrivals refused by the shedding gate
+    unavail_ticks: jnp.ndarray  # () Σ over ticks of #unavailable types
+
+
+def init_state(seed, n_types: int, w: int, k: int, pool: int) -> FaultState:
+    """Fresh fault registers for a run of ``seed``."""
+    z = jnp.zeros((), dtype=jnp.float32)
+    return FaultState(
+        key=fault_key(seed),
+        out_left=jnp.zeros((n_types,), dtype=jnp.float32),
+        straggle_left=jnp.zeros((pool,), dtype=jnp.float32),
+        pend_meas=jnp.zeros((w, k), dtype=jnp.float32),
+        pend_mask=jnp.zeros((w, k), dtype=bool),
+        fail_streak=z,
+        backoff_left=z,
+        n_killed=z,
+        n_dropped=z,
+        n_delayed=z,
+        n_shed=z,
+        unavail_ticks=z,
+    )
+
+
+class FaultTick(NamedTuple):
+    """One tick's fault draws, consumed by the step function."""
+
+    avail: jnp.ndarray  # (T,) bool: type has spot capacity this tick
+    kill: jnp.ndarray  # (I,) bool: slot is hard-killed this tick
+    slow: jnp.ndarray  # (I,) f32: service-capacity multiplier (<= 1)
+    drop_u: jnp.ndarray  # (W, K) uniforms for measurement dropouts
+    delay_u: jnp.ndarray  # (W, K) uniforms for measurement delays
+    jitter_u: jnp.ndarray  # () uniform for backoff jitter
+
+
+def tick(fs: FaultState, spec: FaultSpec, dt, t) -> tuple[FaultTick, FaultState]:
+    """Advance the fault processes one monitoring instant.
+
+    Draws all of this tick's fault randomness from the dedicated chain
+    and updates the outage / straggler registers.  Everything that needs
+    fleet state (masking kills to live slots, the backoff bookkeeping)
+    stays in the step function.
+    """
+    h = dt / 3600.0
+    n_types = fs.out_left.shape[0]
+    pool = fs.straggle_left.shape[0]
+    w, k = fs.pend_mask.shape
+    key, k_out, k_dur, k_storm, k_su, k_fail, k_str, k_drop, k_del, k_jit = (
+        jax.random.split(fs.key, 10)
+    )
+
+    # (i) capacity outages: random per-type dry-ups with ~Exp durations,
+    # plus the deterministic traced full-market window.
+    p_out = jnp.clip(spec.p_outage * h, 0.0, 1.0)
+    enter = jax.random.uniform(k_out, (n_types,)) < p_out
+    dur = jax.random.exponential(k_dur, (n_types,)) * spec.outage_hours / h
+    idle = fs.out_left <= 0.0
+    out_left = jnp.where(
+        idle & enter,
+        jnp.maximum(dur, 1.0),
+        jnp.maximum(fs.out_left - 1.0, 0.0),
+    )
+    t_f = jnp.asarray(t, dtype=jnp.float32)
+    in_window = (
+        (spec.outage_start >= 0.0)
+        & (t_f >= spec.outage_start)
+        & (t_f < spec.outage_start + spec.outage_ticks)
+    )
+    avail = (out_left <= 0.0) & ~in_window
+
+    # (ii) correlated storms + independent Poisson hard-kills.
+    storm = jax.random.uniform(k_storm, ()) < jnp.clip(spec.p_storm * h, 0.0, 1.0)
+    storm_hit = storm & (jax.random.uniform(k_su, (pool,)) < spec.storm_frac)
+    fail_hit = jax.random.uniform(k_fail, (pool,)) < jnp.clip(
+        spec.p_slot_fail * h, 0.0, 1.0
+    )
+    kill = storm_hit | fail_hit
+
+    # (iv) stragglers: onset draws refresh the per-slot episode clock.
+    onset = jax.random.uniform(k_str, (pool,)) < jnp.clip(
+        spec.p_straggle * h, 0.0, 1.0
+    )
+    decayed = jnp.maximum(fs.straggle_left - 1.0, 0.0)
+    straggle_left = jnp.where(onset, jnp.maximum(spec.straggle_ticks, decayed), decayed)
+    slow = jnp.where(
+        straggle_left > 0.0, 1.0 / jnp.maximum(spec.straggle_factor, 1.0), 1.0
+    )
+
+    ft = FaultTick(
+        avail=avail,
+        kill=kill,
+        slow=slow,
+        drop_u=jax.random.uniform(k_drop, (w, k)),
+        delay_u=jax.random.uniform(k_del, (w, k)),
+        jitter_u=jax.random.uniform(k_jit, ()),
+    )
+    fs = fs._replace(
+        key=key,
+        out_left=out_left,
+        straggle_left=straggle_left,
+        unavail_ticks=fs.unavail_ticks + jnp.sum((~avail).astype(jnp.float32)),
+    )
+    return ft, fs
+
+
+def kill_slots(cluster, kill):
+    """Hard-kill ``kill``-masked slots, billed like mid-quantum preemption.
+
+    Mirrors ``billing.preempt``: the paid remainder of the running hour is
+    forfeited (``cum_cost`` keeps the already-charged quantum), the slot
+    drops to OFF and its bid is retired.  Kills count into ``n_preempt``
+    (to the controller they *are* reclamations) and are returned so the
+    fault registers can keep the fine-grained tally.
+    """
+    hit = (cluster.phase >= billing.BOOTING) & kill
+    n_hit = jnp.sum(hit.astype(jnp.float32))
+    inf = jnp.float32(jnp.inf)
+    return (
+        cluster._replace(
+            phase=jnp.where(hit, billing.OFF, cluster.phase),
+            a=jnp.where(hit, 0.0, cluster.a),
+            boot_left=jnp.where(hit, 0.0, cluster.boot_left),
+            draining=cluster.draining & ~hit,
+            bid=jnp.where(hit, inf, cluster.bid),
+            n_preempt=cluster.n_preempt + n_hit,
+        ),
+        n_hit,
+    )
+
+
+def filter_telemetry(fs, ft, spec, b_meas, meas_mask, arrive):
+    """Apply dropouts and one-tick delays to fresh Kalman measurements.
+
+    Returns ``(b_meas_out, meas_mask_out, dropped, fs)`` where ``dropped``
+    marks filters whose fresh measurement was lost this tick (the
+    hardened Kalman bank inflates covariance there).  Delayed
+    measurements are held in the pending registers and delivered on the
+    next instant — the bank's lagged-measurement update (eq. 8) makes a
+    one-tick-stale value a perfectly well-formed input.  When a pending
+    delivery collides with a fresh one, the fresh value wins and the
+    stale one is discarded.  Rows that (re-)arrive this tick clear their
+    pending registers: a stale measurement of the previous occupant must
+    not leak into the new workload's filter.
+    """
+    fresh = meas_mask
+    dropped = fresh & (ft.drop_u < spec.p_meas_drop)
+    delayed = fresh & ~dropped & (ft.delay_u < spec.p_meas_delay)
+    now = fresh & ~dropped & ~delayed
+    pending = fs.pend_mask & ~arrive[:, None]
+    out_mask = now | pending
+    out_meas = jnp.where(now, b_meas, fs.pend_meas)
+    fs = fs._replace(
+        pend_meas=jnp.where(delayed, b_meas, 0.0),
+        pend_mask=delayed,
+        n_dropped=fs.n_dropped + jnp.sum(dropped.astype(jnp.float32)),
+        n_delayed=fs.n_delayed + jnp.sum(delayed.astype(jnp.float32)),
+    )
+    return out_meas, out_mask, dropped, fs
+
+
+def fault_timeline(seed, spec: FaultSpec, steps: int, pool: int,
+                   dt: float = 3600.0):
+    """Precompute ``steps`` ticks of kill / straggle draws, host-side.
+
+    One jitted ``lax.scan`` over :func:`tick` — the *same* kernel the
+    simulator advances inside its scan — so host-side consumers (the
+    elastic runtime's ``ft.failures.FailureInjector``) draw their events
+    from the identical PRNG chain and episode model.  With the default
+    ``dt=3600`` one tick is one hour, so per-hour spec rates read as
+    per-step probabilities.  Returns ``(kill, straggling)``: two
+    ``(steps, pool)`` bool arrays (``straggling`` marks slots inside a
+    straggle episode; the caller applies its own slowdown factor).
+    """
+    fs0 = init_state(seed, 1, 1, 1, pool)
+
+    def body(fs, t):
+        ft, fs = tick(fs, spec, dt, t)
+        return fs, (ft.kill, ft.slow < 1.0)
+
+    _, (kill, straggling) = jax.lax.scan(
+        body, fs0, jnp.arange(steps, dtype=jnp.int32))
+    return kill, straggling
+
+
+# ---------------------------------------------------------------------------
+# Adversarial exposure: FaultSpec bounds through ``opt.scenario_space``.
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Hashable host-side mirror of ``FaultSpec`` with searchable bounds.
+
+    ``ChaosScenario`` composes one of these with a workload generator so
+    the CEM adversary (``opt.attack_policy``) can search fault timing and
+    intensity alongside workload shape.  ``bounds`` names the attackable
+    fields; everything else stays pinned at its nominal value.
+    """
+
+    p_outage: float = 0.0
+    outage_hours: float = 1.0
+    outage_start: float = -1.0
+    outage_ticks: float = 0.0
+    p_storm: float = 0.0
+    storm_frac: float = 0.0
+    p_slot_fail: float = 0.0
+    p_meas_drop: float = 0.0
+    p_meas_delay: float = 0.0
+    p_straggle: float = 0.0
+    straggle_ticks: float = 0.0
+    straggle_factor: float = 1.0
+    bounds: tuple = ()  # ((field, lo, hi), ...) — the attackable box
+
+    _FIELDS = (
+        "p_outage",
+        "outage_hours",
+        "outage_start",
+        "outage_ticks",
+        "p_storm",
+        "storm_frac",
+        "p_slot_fail",
+        "p_meas_drop",
+        "p_meas_delay",
+        "p_straggle",
+        "straggle_ticks",
+        "straggle_factor",
+    )
+
+    def params_pytree(self):
+        return {f"fault_{name}": getattr(self, name) for name, _, _ in self.bounds}
+
+    def param_bounds(self):
+        return {f"fault_{name}": (lo, hi) for name, lo, hi in self.bounds}
+
+    def spec(self, params=None) -> FaultSpec:
+        """Concrete (possibly traced) ``FaultSpec`` under overrides."""
+        kw = {name: getattr(self, name) for name in self._FIELDS}
+        if params is not None:
+            for key, value in params.items():
+                if key.startswith("fault_"):
+                    kw[key[len("fault_") :]] = value
+        return make_fault_spec(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosScenario:
+    """A workload generator wearing a searchable fault model.
+
+    Quacks like a ``sim.scenarios`` spec (``sample`` / ``params_pytree``
+    / ``param_bounds`` / ``max_w``) but merges the fault model's bounds
+    into the searchable box under a ``fault_`` prefix, so
+    ``opt.scenario_space`` exposes them to ``attack_policy`` unchanged —
+    the worst-case world now includes *when* the outage hits.
+    ``ScenarioObjective`` detects the ``fault_spec`` method and threads
+    the attacked spec into the fault-aware point program.
+    """
+
+    base: object  # a sim.scenarios generator spec
+    faults: FaultModel = FaultModel()
+
+    @property
+    def name(self):
+        return f"chaos_{self.base.name}"
+
+    @property
+    def max_w(self):
+        return self.base.max_w
+
+    def params_pytree(self):
+        return {**self.base.params_pytree(), **self.faults.params_pytree()}
+
+    def param_bounds(self):
+        return {**self.base.param_bounds(), **self.faults.param_bounds()}
+
+    def sample(self, key, params=None):
+        if params is not None:
+            params = {
+                k: v for k, v in params.items() if not k.startswith("fault_")
+            }
+        return self.base.sample(key, params=params)
+
+    def fault_spec(self, params=None) -> FaultSpec:
+        return self.faults.spec(params)

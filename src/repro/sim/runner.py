@@ -30,10 +30,12 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..core import aimd as aimd_lib
 from ..core import billing as billing_lib
 from ..core import controller as ctrl
 from ..core.types import (ClusterState, ControlParams, PolicyParams,
                           TenantConfig, WorkloadState, make_policy_params)
+from . import faults as faults_lib
 from . import spot as spot_lib
 from . import workloads as wl
 
@@ -61,6 +63,13 @@ class SimConfig:
     # carry.  None (default) is the single-owner path, byte-identical to
     # every pre-tenant simulation.
     tenants: TenantConfig | None = None
+    # Chaos engine (``sim.faults``): outages, storms, slot hard-kills,
+    # telemetry dropouts/delays, stragglers, driven by a traced
+    # ``FaultSpec`` input.  None (default) compiles the exact fault-free
+    # step — zero-fault runs stay bit-identical to every pre-chaos
+    # baseline.  ``FaultConfig(hardened=False)`` suffers the same faults
+    # with the graceful-degradation responses switched off.
+    faults: "faults_lib.FaultConfig | None" = None
 
     @property
     def dt(self) -> float:
@@ -216,6 +225,10 @@ class SimState(NamedTuple):
     t: jnp.ndarray          # () tick counter
     spot: spot_lib.SpotState
     summ: SummaryCarry
+    # Chaos-engine registers; None whenever ``SimConfig.faults`` is None,
+    # so the carry — and the compiled scan — of a fault-free run is
+    # untouched.
+    faults: "faults_lib.FaultState | None" = None
 
 
 class SimTrace(NamedTuple):
@@ -285,7 +298,8 @@ def _execute(work: WorkloadState, sched: wl.JaxSchedule, s: jnp.ndarray,
 
 def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
               trace: bool = True,
-              params: PolicyParams | None = None) -> Callable:
+              params: PolicyParams | None = None,
+              fspec: "faults_lib.FaultSpec | None" = None) -> Callable:
     """One monitoring instant as a ``lax.scan`` step.
 
     ``schedule`` may be a *traced* ``JaxSchedule`` pytree — the simulator no
@@ -307,11 +321,21 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     accumulate in ``SimState.summ`` and the scan is ``ys``-free, which is
     what lets ``sim.sweep`` batch 10⁴–10⁵-point grids without streaming
     O(B·T·W·K) floats through memory.
+
+    ``fspec`` carries the traced fault intensities when the config enables
+    the chaos engine (``cfg.faults``); it defaults to the fault-free spec.
+    Every fault branch below is a *trace-time* conditional on
+    ``cfg.faults``, so a ``faults=None`` config compiles a step
+    structurally identical to the pre-chaos simulator.
     """
     sched = wl.as_jax_schedule(schedule)
     use_spot = cfg.spot.enabled
     pp = default_params(cfg) if params is None else params
     tcfg = cfg.tenants
+    fcfg = cfg.faults
+    hardened = fcfg is not None and fcfg.hardened
+    if fcfg is not None and fspec is None:
+        fspec = faults_lib.make_fault_spec()
     if tcfg is not None:
         w_rows = sched.t_arrive.shape[0]
         if w_rows != tcfg.w_total:
@@ -328,6 +352,18 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
 
         # --- arrivals ------------------------------------------------------
         arrive = (sched.t_arrive == t) & sched.valid
+        n_shed_now = 0.0
+        if hardened:
+            # Deadline-aware shedding: during a sustained outage (the
+            # acquisition fail-streak from last tick), refuse arrivals whose
+            # requested deadline is tighter than ``shed_slack`` monitoring
+            # intervals per streak tick — the platform cannot finish them
+            # and admitting them would only convert them into violations.
+            streak_prev = state.faults.fail_streak
+            tight = sched.d_requested < fcfg.shed_slack * streak_prev * cfg.dt
+            shed = (streak_prev >= fcfg.shed_after) & tight
+            n_shed_now = jnp.sum((arrive & shed).astype(jnp.float32))
+            arrive = arrive & ~shed
         if tcfg is not None:
             # Admission gate: a tenant already occupying ≥ adm_frac of its
             # row budget has new arrivals rejected outright (they never
@@ -365,6 +401,17 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
             slot_price = None
             cores = 1.0
 
+        # --- chaos engine: this tick's fault draws --------------------------
+        # One call on a dedicated PRNG chain, so enabling faults never
+        # perturbs the workload, market or execution-noise streams.
+        if fcfg is not None:
+            ftick, fstate = faults_lib.tick(state.faults, fspec, cfg.dt, t)
+            # Stragglers: the slot stays billed at full price but delivers a
+            # fraction of its nominal CU capacity while the episode lasts.
+            exec_cores = cores * ftick.slow
+        else:
+            exec_cores = cores
+
         # --- market preemption: outbid slots are taken the instant the new
         # price clears above their bid — *before* billing advances, so a
         # reclaimed slot never renews a quantum at the very price that
@@ -379,7 +426,25 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         (new_m, b_meas, meas_mask, exec_time, items_done, util,
          done_acc) = _execute(
             work, sched, state.s, cluster, state.done_acc, cfg, k_exec,
-            cores)
+            exec_cores)
+        if fcfg is not None:
+            # Slot hard-kills (storms + Poisson failures) land mid-window:
+            # the killed slots were billed at the last quantum renewal and
+            # burned capacity this window — exactly mid-quantum preemption
+            # billing — but their in-flight work is lost.  The lost items
+            # re-enter the queue exactly once: the rollback is capped at
+            # this window's completions by construction (lost ≤ items_done).
+            act = cluster.phase == billing_lib.ACTIVE
+            slot_cu = act.astype(jnp.float32) * exec_cores
+            tot_cu = jnp.sum(slot_cu)
+            lost_cu = jnp.sum(jnp.where(ftick.kill, slot_cu, 0.0))
+            lost_frac = jnp.where(tot_cu > 0.0,
+                                  lost_cu / jnp.maximum(tot_cu, 1e-9), 0.0)
+            lost = items_done * lost_frac
+            new_m = new_m + lost
+            done_acc = done_acc - jnp.sum(lost, -1)
+            cluster, n_hit = faults_lib.kill_slots(cluster, ftick.kill)
+            fstate = fstate._replace(n_killed=fstate.n_killed + n_hit)
         done_acc = jnp.where(arrive, 0.0, done_acc)
         work = work._replace(m=new_m)
         busy = jnp.where(cluster.phase == billing_lib.ACTIVE, util, 0.0)
@@ -394,11 +459,22 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
                         work.d - cfg.dt, work.d),
         )
 
+        # --- telemetry faults: dropouts lose fresh measurements, delays hold
+        # them one instant and deliver them stale (eq. 8's lagged form makes
+        # a one-tick-stale value well-formed) ---------------------------------
+        meas_dropped = None
+        if fcfg is not None:
+            b_meas, meas_mask, dropped, fstate = faults_lib.filter_telemetry(
+                fstate, ftick, fspec, b_meas, meas_mask, arrive)
+            if hardened:
+                meas_dropped = dropped
+
         # --- control --------------------------------------------------------
         c_state, work, dec = ctrl.step(
             c_state, work, cluster, b_meas, meas_mask, exec_time, items_done,
             cfg.ctrl, cores=cores, pp=pp,
-            tenants=(None if tcfg is None else (tid, tcfg.n, base_w)))
+            tenants=(None if tcfg is None else (tid, tcfg.n, base_w)),
+            meas_dropped=meas_dropped)
         if use_spot:
             rt = spot_state.rt
             # Dynamic bid policy: the TTC-aware signal is how far the most
@@ -414,15 +490,33 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
             bids = spot_lib.current_bids(cfg.spot, rt, spot_state, urgency)
             # Acquisitions pick the cheapest-per-CU currently-available
             # type of the fleet mix; requests are only fulfilled while the
-            # market clears at or below our bid for that type.
-            itype_new, can_start = spot_lib.select_type(
-                spot_state.prices, bids, rt.mix)
+            # market clears at or below our bid for that type.  Under the
+            # chaos engine a dried-up type has no capacity at any bid: the
+            # hardened controller hedges by selecting around it, the
+            # unhardened one picks blind and simply fails to start.
+            if fcfg is None:
+                itype_new, can_start = spot_lib.select_type(
+                    spot_state.prices, bids, rt.mix)
+            elif hardened:
+                itype_new, can_start = spot_lib.select_type(
+                    spot_state.prices, bids, rt.mix, avail=ftick.avail)
+            else:
+                itype_new, can_start = spot_lib.select_type(
+                    spot_state.prices, bids, rt.mix)
+                can_start = can_start & ftick.avail[itype_new]
+            allow = can_start
+            if hardened:
+                # Bounded-backoff gate: after repeated failed acquisitions
+                # the controller waits out a jittered exponential delay
+                # before retrying instead of hammering the market.
+                trying = state.faults.backoff_left <= 0.0
+                allow = can_start & trying
             scale_cores = jnp.where(cluster.phase == billing_lib.OFF,
                                     spot_lib.CORES_TABLE[itype_new], cores)
             cluster = billing_lib.scale_to(
                 cluster, dec.n_target, cfg.ctrl.billing,
                 price=spot_state.prices[itype_new], bid=bids[itype_new],
-                itype=itype_new, allow_start=can_start, cores=scale_cores)
+                itype=itype_new, allow_start=allow, cores=scale_cores)
         else:
             cluster = billing_lib.scale_to(cluster, dec.n_target,
                                            cfg.ctrl.billing)
@@ -432,6 +526,48 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         out_cores = (spot_lib.CORES_TABLE[cluster.itype] if use_spot
                      else cores)
         n_committed = billing_lib.committed(cluster, out_cores)
+        if fcfg is not None and use_spot:
+            # Fail-streak / backoff bookkeeping.  The streak counts
+            # *consecutive ticks of unmet demand* — the controller wants to
+            # grow the committed fleet and the market (outbid or dried up)
+            # cannot fulfil it — independent of whether the backoff gate let
+            # this tick's request out.  Counting ticks rather than attempts
+            # matters: the shed gate and the anti-windup clamp key on the
+            # streak as an outage-duration signal, and a streak that only
+            # grew on try-ticks would let the backoff suppress its own
+            # outage detector.
+            fs_prev = state.faults
+            want_grow = dec.n_target > n_committed + 0.5
+            unmet = want_grow & ~can_start
+            streak = jnp.where(unmet, fs_prev.fail_streak + 1.0, 0.0)
+            if hardened:
+                tried = fs_prev.backoff_left <= 0.0
+                delay = aimd_lib.backoff_delay(streak, fcfg.backoff_cap,
+                                               ftick.jitter_u)
+                # A new delay starts only when a request actually went out
+                # and failed; the moment the market observably clears
+                # (``can_start`` — published prices and availability are
+                # free to read) the residual wait is void, so recovery is
+                # never stalled by a backoff scheduled during the outage.
+                backoff_left = jnp.where(
+                    unmet & tried, delay,
+                    jnp.where(can_start, 0.0,
+                              jnp.maximum(fs_prev.backoff_left - 1.0, 0.0)))
+                # Anti-windup: while acquisition keeps failing, hold the
+                # stored AIMD target within one additive step of what is
+                # actually committed, so recovery ramps at the normal AIMD
+                # pace instead of thundering-herd to the windup peak.
+                c_state = c_state._replace(aimd=aimd_lib.anti_windup(
+                    c_state.aimd, n_committed + pp.alpha, streak > 0.0))
+            else:
+                backoff_left = fs_prev.backoff_left
+            fstate = fstate._replace(
+                fail_streak=streak, backoff_left=backoff_left,
+                n_shed=fstate.n_shed + n_shed_now)
+        elif fcfg is not None:
+            fstate = fstate._replace(n_shed=fstate.n_shed + n_shed_now)
+        else:
+            fstate = None
         spot_price = (spot_state.price if use_spot
                       else jnp.asarray(cfg.ctrl.billing.price_per_quantum,
                                        jnp.float32))
@@ -457,7 +593,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
 
         new_state = SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
                              done_acc=done_acc, key=key, t=t + 1,
-                             spot=spot_state, summ=summ)
+                             spot=spot_state, summ=summ, faults=fstate)
         if not trace:
             return new_state, None
         out = dict(
@@ -541,6 +677,10 @@ def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         t=jnp.asarray(0),
         spot=spot_state,
         summ=summary_init(None if cfg.tenants is None else cfg.tenants.n),
+        # Measurement telemetry is (W, 1)-shaped (see ``_execute``), so the
+        # pending-delivery registers match that, not the schedule's K.
+        faults=(None if cfg.faults is None else faults_lib.init_state(
+            seed, spot_lib.N_TYPES, w, 1, cfg.pool)),
     )
 
 
@@ -548,7 +688,8 @@ def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
              seed: jnp.ndarray | int | None = None,
              spot_rt: spot_lib.SpotRuntime | None = None,
              trace: bool = True,
-             params: PolicyParams | None = None):
+             params: PolicyParams | None = None,
+             fspec: "faults_lib.FaultSpec | None" = None):
     """The raw jittable simulation: (final state, per-tick outputs).
 
     No ``jax.jit`` inside — callers decide the compilation boundary, which
@@ -570,7 +711,7 @@ def scan_run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     # in the simulation reads it — live bidding goes through current_bids,
     # which uses ``bid_mult``.
     spot_rt = spot_rt._replace(bid_mult=spot_rt.bid_mult * pp.bid_mult)
-    step = make_step(sched, cfg, trace=trace, params=pp)
+    step = make_step(sched, cfg, trace=trace, params=pp, fspec=fspec)
     state = init_state(sched, cfg, seed=seed, spot_rt=spot_rt)
     # Summary mode keeps no per-tick outputs, so unrolling pairs of steps
     # costs no memory and buys back the loop overhead that otherwise
@@ -613,13 +754,23 @@ def cached_scan(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     ``with_rt=True`` returns ``f(sched, seed, spot_rt, params)``;
     otherwise ``f(sched, seed, params)`` (the runtime then derives from
     the config — note ``cfg.spot.bid_mult`` stays in the key for exactly
-    that reason).
+    that reason).  When the chaos engine is on (``cfg.faults`` — itself
+    part of the cache key through ``strip_tuned``), the callable takes a
+    trailing traced ``FaultSpec`` argument.
     """
     key = (wl.schedule_shape(schedule), strip_tuned(cfg), bool(trace),
            bool(with_rt))
     fn = _JIT_CACHE.get(key)
     if fn is None:
-        if with_rt:
+        if cfg.faults is not None:
+            if with_rt:
+                fn = jax.jit(lambda sched, seed, rt, pp, fs: scan_run(
+                    sched, cfg, seed=seed, spot_rt=rt, trace=trace,
+                    params=pp, fspec=fs))
+            else:
+                fn = jax.jit(lambda sched, seed, pp, fs: scan_run(
+                    sched, cfg, seed=seed, trace=trace, params=pp, fspec=fs))
+        elif with_rt:
             fn = jax.jit(lambda sched, seed, rt, pp: scan_run(
                 sched, cfg, seed=seed, spot_rt=rt, trace=trace, params=pp))
         else:
@@ -684,16 +835,20 @@ def count_violations(work_final: WorkloadState,
 def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         seed: int | None = None,
         spot_rt: spot_lib.SpotRuntime | None = None,
-        params: PolicyParams | None = None) -> SimTrace:
+        params: PolicyParams | None = None,
+        fspec: "faults_lib.FaultSpec | None" = None) -> SimTrace:
     s = cfg.seed if seed is None else seed
     sched = wl.as_jax_schedule(schedule)
     pp = default_params(cfg) if params is None else params
+    tail: tuple = ()
+    if cfg.faults is not None:
+        tail = (faults_lib.make_fault_spec() if fspec is None else fspec,)
     if spot_rt is None:
         final, ys = cached_scan(sched, cfg, trace=True,
-                                with_rt=False)(sched, s, pp)
+                                with_rt=False)(sched, s, pp, *tail)
     else:
         final, ys = cached_scan(sched, cfg, trace=True,
-                                with_rt=True)(sched, s, spot_rt, pp)
+                                with_rt=True)(sched, s, spot_rt, pp, *tail)
 
     violations = count_violations(final.work, sched, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,

@@ -341,7 +341,8 @@ def current_bids(cfg: SpotConfig, rt: SpotRuntime, state: SpotState,
     return jnp.stack([static, on_demand, ttc, ema])[rt.policy]
 
 
-def select_type(prices: jnp.ndarray, bids: jnp.ndarray, mix: jnp.ndarray
+def select_type(prices: jnp.ndarray, bids: jnp.ndarray, mix: jnp.ndarray,
+                avail: jnp.ndarray | None = None,
                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pick the acquisition type: cheapest-per-CU currently-available.
 
@@ -350,11 +351,19 @@ def select_type(prices: jnp.ndarray, bids: jnp.ndarray, mix: jnp.ndarray
     clearing price is simply not fulfilled).  Returns ``(itype, any)``;
     when no type is available ``any`` is False and the caller must not
     start instances (``itype`` is then arbitrary).
+
+    ``avail`` optionally supplies a (T,) capacity mask from the chaos
+    engine (``sim.faults``): a hardened controller passes it so selection
+    hedges across the types that still *have* capacity instead of
+    queueing on a dried-up one.  ``None`` compiles the exact historical
+    selection.
     """
-    avail = (prices <= bids) & (mix > 0.0)
+    ok = (prices <= bids) & (mix > 0.0)
+    if avail is not None:
+        ok = ok & avail
     per_cu = prices / CORES_TABLE
-    score = jnp.where(avail, per_cu, jnp.inf)
-    return jnp.argmin(score).astype(jnp.int32), jnp.any(avail)
+    score = jnp.where(ok, per_cu, jnp.inf)
+    return jnp.argmin(score).astype(jnp.int32), jnp.any(ok)
 
 
 def price_trace(rt: SpotRuntime, steps: int, key: jax.Array,

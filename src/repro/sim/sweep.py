@@ -85,6 +85,7 @@ from jax.sharding import Mesh, PartitionSpec
 from ..checkpoint import checkpointer
 from ..core.types import PolicyParams
 from ..launch import mesh as mesh_lib
+from . import faults as faults_lib
 from . import runner, spot
 from . import scenarios as scen_lib
 from . import workloads as wl
@@ -306,6 +307,13 @@ class SweepSpec:
     axes: SweepAxes
     workload: object
     params: PolicyParams | None = None
+    # Traced fault intensities (``sim.faults``): a ``FaultSpec`` whose
+    # leaves are scalars (one chaos world for the whole grid) or
+    # (B,)-leading arrays (fault timing/intensity as a first-class sweep
+    # axis — chaos sweeps chunk/shard/stream like everything else).
+    # Requires ``SimConfig.faults`` to be set; None rides the fault-free
+    # spec when the config enables the engine.
+    faults: "faults_lib.FaultSpec | None" = None
     chunk_size: int | None = dataclasses.field(default=None, kw_only=True)
     devices: int | None = dataclasses.field(default=None, kw_only=True)
     mesh: Mesh | None = dataclasses.field(default=None, kw_only=True)
@@ -328,6 +336,19 @@ class SweepSpec:
         if set(lens.values()) != {b}:
             raise ValueError(
                 f"axes fields disagree on the grid size: {lens}")
+        if self.faults is not None:
+            if not isinstance(self.faults, faults_lib.FaultSpec):
+                raise TypeError(
+                    f"faults must be a FaultSpec (see "
+                    f"sim.faults.make_fault_spec), got "
+                    f"{type(self.faults).__name__}")
+            for name, leaf in zip(faults_lib.FaultSpec._fields, self.faults):
+                shape = np.shape(leaf)
+                if shape not in ((), (b,)) and not (
+                        len(shape) >= 1 and shape[0] == b):
+                    raise ValueError(
+                        f"FaultSpec.{name} must be a scalar or lead with "
+                        f"the grid axis B={b}, got shape {shape}")
         if self.chunk_size is not None and int(self.chunk_size) < 1:
             raise ValueError(
                 f"chunk_size must be >= 1, got {self.chunk_size}")
@@ -389,15 +410,17 @@ def _point_sched(cfg: runner.SimConfig, trace: bool = False):
     the single definition of what a sweep runs per point (policy-sentinel
     resolution, runtime construction, scan, masked summary).  ``params``
     is the traced ``PolicyParams`` pytree every run consumes (its relative
-    ``bid_mult`` multiplies this point's bid-multiple axis)."""
+    ``bid_mult`` multiplies this point's bid-multiple axis).  With the
+    chaos engine on (``cfg.faults``) the closure accepts a trailing traced
+    ``FaultSpec`` (default: the fault-free spec)."""
     cfg_policy = spot.bid_policy_index(cfg.spot.bid_policy)
 
-    def one(sched, seed, bid_mult, itype, policy, mix, params):
+    def one(sched, seed, bid_mult, itype, policy, mix, params, fspec=None):
         policy = jnp.where(policy < 0, cfg_policy, policy)
         rt = spot.make_runtime(cfg.spot, itype=itype, bid_mult=bid_mult,
                                policy=policy, mix=mix)
         final, ys = runner.scan_run(sched, cfg, seed=seed, spot_rt=rt,
-                                    trace=trace, params=params)
+                                    trace=trace, params=params, fspec=fspec)
         summary = summarize(final, sched, cfg)
         return (summary, ys) if trace else summary
 
@@ -421,18 +444,21 @@ def point_fn(schedule: ScheduleLike, cfg: runner.SimConfig,
     if isinstance(schedule, scen_lib.ScenarioSet):
         sset = schedule
 
-        def one(seed, bid_mult, itype, policy, mix, scenario, params):
+        def one(seed, bid_mult, itype, policy, mix, scenario, params,
+                fspec=None):
             sched = sset.sample(scenario,
                                 scen_lib.schedule_key(seed, scenario))
-            return base(sched, seed, bid_mult, itype, policy, mix, params)
+            return base(sched, seed, bid_mult, itype, policy, mix, params,
+                        fspec)
 
         return one
 
     sj = wl.as_jax_schedule(schedule)
 
-    def one(seed, bid_mult, itype, policy, mix, scenario, params):
+    def one(seed, bid_mult, itype, policy, mix, scenario, params,
+            fspec=None):
         del scenario
-        return base(sj, seed, bid_mult, itype, policy, mix, params)
+        return base(sj, seed, bid_mult, itype, policy, mix, params, fspec)
 
     return one
 
@@ -468,16 +494,21 @@ def _sweep_callable(workload, cfg: runner.SimConfig,
     # Key on the config with the PolicyParams-traced leaves struck out:
     # the params pytree is a broadcast *argument* of the compiled sweep,
     # so sweeps at different tuned coefficients share one compile.
+    # ``cfg.faults`` is part of that key (it survives strip_tuned), and it
+    # also decides the callable's arity: with the chaos engine on, the
+    # callable takes a trailing (B,)-leaved ``FaultSpec`` batch.
     mesh_key = 1 if mesh is None else mesh
+    chaos = cfg.faults is not None
     if isinstance(workload, scen_lib.ScenarioSet):
         cfg_key = runner.strip_tuned(cfg)
         key = ("sweep", workload, cfg_key, mesh_key, donate)
         sched_key_fn = point_fn(workload, cfg)
 
-        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params,
+               *fs):
             del sched
             return sched_key_fn(seed, bid_mult, itype, policy, mix, scenario,
-                                params)
+                                params, *fs)
     elif _is_tenant_set(workload):
         from . import tenants as tenants_lib
         scfg = workload.sim_config(cfg)
@@ -485,31 +516,35 @@ def _sweep_callable(workload, cfg: runner.SimConfig,
         key = ("sweep", workload, cfg_key, mesh_key, donate)
         tenant_fn = tenants_lib.point_fn(workload, cfg)
 
-        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params,
+               *fs):
             del sched
             return tenant_fn(seed, bid_mult, itype, policy, mix, scenario,
-                             params)
+                             params, *fs)
     else:
         cfg_key = runner.strip_tuned(cfg)
         key = ("sweep", wl.schedule_shape(workload), cfg_key, mesh_key,
                donate)
         base = _point_sched(cfg)
 
-        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params):
+        def pt(seed, bid_mult, itype, policy, mix, scenario, sched, params,
+               *fs):
             del scenario
-            return base(sched, seed, bid_mult, itype, policy, mix, params)
+            return base(sched, seed, bid_mult, itype, policy, mix, params,
+                        *fs)
 
     fn = runner._JIT_CACHE.get(key)
     if fn is not None:
         return fn
-    in_axes = (0, 0, 0, 0, 0, 0, None, None)
+    in_axes = (0, 0, 0, 0, 0, 0, None, None) + ((0,) if chaos else ())
     batched = jax.vmap(pt, in_axes=in_axes)
     if mesh is not None:
         p_b = PartitionSpec(mesh.axis_names[0])
         p_r = PartitionSpec()
-        batched = shard_map(batched, mesh=mesh,
-                            in_specs=(p_b,) * 6 + (p_r, p_r),
-                            out_specs=p_b, check_rep=False)
+        batched = shard_map(
+            batched, mesh=mesh,
+            in_specs=(p_b,) * 6 + (p_r, p_r) + ((p_b,) if chaos else ()),
+            out_specs=p_b, check_rep=False)
     donate_kw = dict(donate_argnums=(0, 1, 2, 3, 4, 5)) if donate else {}
     fn = jax.jit(batched, **donate_kw)
     runner._cache_put(key, fn)
@@ -536,6 +571,45 @@ def _slice_axes(axes: SweepAxes, lo: int, hi: int,
     if not copy:
         return SweepAxes(*(f[lo:hi] for f in axes))
     return SweepAxes(*(jnp.array(f[lo:hi], copy=True) for f in axes))
+
+
+def _norm_faults(spec: SweepSpec, cfg: runner.SimConfig, b: int):
+    """Resolve the spec's fault axis against the config's chaos switch.
+
+    Returns ``None`` when the engine is off, else a ``FaultSpec`` whose
+    every leaf is (B,)-leading float32 — scalars broadcast so the fault
+    axis chunks/shards/pads exactly like the other sweep axes."""
+    if cfg.faults is None:
+        if spec.faults is not None:
+            raise ValueError(
+                "SweepSpec.faults is set but SimConfig.faults is None — "
+                "the chaos engine compiles in via the config (set "
+                "cfg.faults=FaultConfig()), the spec only carries the "
+                "traced intensities")
+        return None
+    fs = (faults_lib.make_fault_spec() if spec.faults is None
+          else spec.faults)
+    return faults_lib.FaultSpec(*(
+        jnp.broadcast_to(jnp.asarray(f, jnp.float32), (b,) + np.shape(f))
+        if np.ndim(f) == 0 else jnp.asarray(f, jnp.float32) for f in fs))
+
+
+def _pad_fspec(fspec, b: int, n: int):
+    """Pad a (B,)-leading ``FaultSpec`` batch to ``n`` rows (edge mode,
+    mirroring ``_pad_axes``; padded rows never reach a result)."""
+    if fspec is None or b == n:
+        return fspec
+    return jax.tree.map(
+        lambda f: jnp.pad(f, [(0, n - b)] + [(0, 0)] * (f.ndim - 1),
+                          mode="edge"), fspec)
+
+
+def _slice_fspec(fspec, lo: int, hi: int):
+    # The fault batch is never donated (donate_argnums stops at the axes),
+    # so plain slices suffice on every backend.
+    if fspec is None:
+        return None
+    return jax.tree.map(lambda f: f[lo:hi], fspec)
 
 
 def _take_rows(host_tree, rows: int, chunk: int, where: str):
@@ -577,13 +651,18 @@ def _workload_token(workload) -> str:
 
 
 def _spec_digest(axes: SweepAxes, b: int, chunk: int, cfg_token: str,
-                 workload_token: str, pp) -> str:
+                 workload_token: str, pp, fspec=None) -> str:
     h = hashlib.sha256()
     h.update(f"{b}:{chunk}:{cfg_token}:{workload_token}".encode())
     for f in axes:
         h.update(np.asarray(f).tobytes())
     for leaf in jax.tree.leaves(pp):
         h.update(np.asarray(leaf).tobytes())
+    if fspec is not None:
+        # The fault axis is part of the sweep's identity: resuming a chaos
+        # stream with different fault intensities must be refused.
+        for leaf in jax.tree.leaves(fspec):
+            h.update(np.asarray(leaf).tobytes())
     return h.hexdigest()
 
 
@@ -704,6 +783,7 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
              else wl.as_jax_schedule(workload))
     axes = spec.axes
     b = spec.n_points
+    fspec = _norm_faults(spec, check_cfg, b)
 
     avail = len(jax.devices())
     if spec.mesh is not None:
@@ -717,8 +797,9 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
     if n_dev > 1 and mesh is None:
         mesh = mesh_lib.make_sweep_mesh(n_dev)
 
+    ftail = () if fspec is None else (fspec,)
     if spec.chunk_size is None and n_dev == 1 and spec.stream_dir is None:
-        return _sweep_callable(workload, cfg, None)(*axes, sched, pp)
+        return _sweep_callable(workload, cfg, None)(*axes, sched, pp, *ftail)
 
     chunk = b if spec.chunk_size is None else min(int(spec.chunk_size), b)
     # Each compiled chunk covers a device multiple of runs (the explicit
@@ -731,14 +812,16 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
     if spec.stream_dir is not None:
         return _run_streamed(fn, axes, sched, pp, b, chunk, n_chunks,
                              os.fspath(spec.stream_dir), spec.resume,
-                             donating, workload, check_cfg)
+                             donating, workload, check_cfg, fspec=fspec)
 
     outs = []
     for i in range(n_chunks):
         lo = i * chunk
         hi = min(lo + chunk, b)
         part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
-        res = fn(*part, sched, pp)
+        fpart = (() if fspec is None else
+                 (_pad_fspec(_slice_fspec(fspec, lo, hi), hi - lo, chunk),))
+        res = fn(*part, sched, pp, *fpart)
         # Off-device before the next chunk so live bytes stay O(chunk);
         # summaries are plain pytrees of dense arrays, so the transfer is
         # reformat-free.
@@ -756,24 +839,32 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
 
 def _run_streamed(fn, axes: SweepAxes, sched, pp, b: int, chunk: int,
                   n_chunks: int, directory: str, resume: bool,
-                  donating: bool, workload, check_cfg) -> SweepStream:
+                  donating: bool, workload, check_cfg,
+                  fspec=None) -> SweepStream:
     """Stream each completed chunk's summaries to disk; resumable.
 
     Chunk ``i`` is written atomically as ``step_<i>`` via the
     checkpointer (a crash mid-write leaves no ``.done`` marker, so the
     chunk is simply recomputed on resume), *already sliced to its live
     rows* — padded rows never reach a chunk file.  A manifest pins the
-    sweep's identity (axes/config/workload/params digest + chunking), so
-    a directory can only ever be resumed with the sweep that started it.
+    sweep's identity (axes/config/workload/params/faults digest +
+    chunking), so a directory can only ever be resumed with the sweep
+    that started it.  Committed chunks are integrity-checked against the
+    per-file sha256 digests in their chunk manifests; a corrupted or
+    truncated chunk is silently recomputed instead of resumed.
     """
     cfg_token = repr(runner.strip_tuned(check_cfg))
     digest = _spec_digest(axes, b, chunk, cfg_token,
-                          _workload_token(workload), pp)
+                          _workload_token(workload), pp, fspec=fspec)
     manifest = _stream_init(directory, digest, b, chunk, n_chunks, resume)
-    done = set(checkpointer.committed_steps(directory))
+    done = {s for s in checkpointer.committed_steps(directory)
+            if checkpointer.verify(directory, s)}
 
     part0 = _pad_axes(_slice_axes(axes, 0, min(chunk, b), copy=False), chunk)
-    struct = jax.eval_shape(fn, *part0, sched, pp)
+    ftail0 = (() if fspec is None else
+              (_pad_fspec(_slice_fspec(fspec, 0, min(chunk, b)),
+                          min(chunk, b), chunk),))
+    struct = jax.eval_shape(fn, *part0, sched, pp, *ftail0)
 
     for i in range(n_chunks):
         if i in done:
@@ -781,7 +872,9 @@ def _run_streamed(fn, axes: SweepAxes, sched, pp, b: int, chunk: int,
         lo = i * chunk
         hi = min(lo + chunk, b)
         part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
-        res = fn(*part, sched, pp)
+        fpart = (() if fspec is None else
+                 (_pad_fspec(_slice_fspec(fspec, lo, hi), hi - lo, chunk),))
+        res = fn(*part, sched, pp, *fpart)
         host = jax.tree.map(np.asarray, res)
         host = _take_rows(host, hi - lo, chunk, "a written chunk file")
         checkpointer.save(directory, i, host)

@@ -237,14 +237,15 @@ def point_fn(tset: TenantSet, cfg: runner.SimConfig):
     scfg = tset.sim_config(cfg)
     cfg_policy = spot.bid_policy_index(scfg.spot.bid_policy)
 
-    def one(seed, bid_mult, itype, policy, mix, scenario, params):
+    def one(seed, bid_mult, itype, policy, mix, scenario, params,
+            fspec=None):
         del scenario
         policy = jnp.where(policy < 0, cfg_policy, policy)
         sched = tset.sample(seed)
         rt = spot.make_runtime(scfg.spot, itype=itype, bid_mult=bid_mult,
                                policy=policy, mix=mix)
         final, _ = runner.scan_run(sched, scfg, seed=seed, spot_rt=rt,
-                                   trace=False, params=params)
+                                   trace=False, params=params, fspec=fspec)
         return TenantRun(fleet=sweep.summarize(final, sched, scfg),
                          tenants=summarize_tenants(final, sched, scfg))
 

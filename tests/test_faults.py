@@ -1,0 +1,307 @@
+"""Chaos engine: injection correctness, conservation invariants, hardening.
+
+The load-bearing invariants of ``sim.faults``:
+
+  * a neutral ``FaultSpec`` under the engine is bit-identical to the
+    engine compiled out (on a market where the hardened backoff has
+    nothing to react to — on-demand bids, no spikes);
+  * attributed billing sums exactly to the fleet bill *through* storm
+    and Poisson hard-kill ticks (the mid-quantum-preemption billing
+    path);
+  * padded tenants/rows can neither fail nor bill;
+  * killed tasks re-enter the queue exactly once: remaining work is
+    non-increasing between arrival and completion, never negative;
+  * the hardened control plane's primitives (missing-measurement Kalman
+    update, bounded backoff, hedged type selection) behave as specified.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aimd, kalman
+from repro.core.controller import ControllerConfig
+from repro.core.types import ControlParams
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, faults, runner,
+                       spot, sweep, tenants as tnt, workloads)
+
+PARAMS = ControlParams(monitor_dt=300.0)
+
+
+def _cfg(fault_cfg=None, **kw):
+    return SimConfig(ctrl=ControllerConfig(params=PARAMS), ticks=80,
+                     spot=SpotConfig(enabled=True, **kw), faults=fault_cfg)
+
+
+SCHED = workloads.paper_schedule()
+
+
+# ------------------------------------------------- neutral spec == off --
+
+def test_neutral_spec_is_bit_identical_to_engine_off():
+    """With nothing to inject and nothing for the hardening to react to
+    (on-demand bids never fail acquisition), the chaos engine's compiled
+    step produces the exact fault-free bits."""
+    base = _cfg(bid_policy="on_demand", p_spike_per_core=0.0)
+    chaos = dataclasses.replace(base, faults=faults.FaultConfig())
+    a = runner.scan_run(SCHED, base, seed=3, trace=False)[0]
+    b = runner.scan_run(SCHED, chaos, seed=3, trace=False)[0]
+    sa = sweep.summarize(a, SCHED, base)
+    sb = sweep.summarize(b, SCHED, chaos)
+    for f in sweep.RunSummary._fields:
+        assert jnp.array_equal(getattr(sa, f), getattr(sb, f)), f
+    # ...and no fault register ever fired.
+    fs = b.faults
+    for name in ("n_killed", "n_dropped", "n_delayed", "n_shed",
+                 "unavail_ticks", "fail_streak"):
+        assert float(getattr(fs, name)) == 0.0, name
+
+
+def test_fault_prng_does_not_perturb_market_or_execution():
+    """Enabling the engine must not shift the market/execution PRNG
+    chains: the faulted run's *price* statistics match the fault-free
+    run's exactly (the fault chain is salted separately)."""
+    base = _cfg()
+    chaos = dataclasses.replace(base, faults=faults.FaultConfig())
+    spec = faults.make_fault_spec(p_meas_drop=0.5)  # telemetry-only chaos
+    a = sweep.summarize(runner.scan_run(SCHED, base, seed=11,
+                                        trace=False)[0], SCHED, base)
+    b = sweep.summarize(runner.scan_run(SCHED, chaos, seed=11, trace=False,
+                                        fspec=spec)[0], SCHED, chaos)
+    assert jnp.array_equal(a.mean_price, b.mean_price)
+    assert jnp.array_equal(a.max_price, b.max_price)
+
+
+# ------------------------------------------------------- conservation --
+
+def _tenant_pair():
+    from repro.sim import scenarios as scen
+    sset = scen.default_set(max_w=32, horizon=20)
+    return tnt.TenantSet((tnt.TenantSpec(sset[0], weight=1.0),
+                          tnt.TenantSpec(sset[1], weight=2.0)))
+
+
+def test_attribution_exact_under_storms_and_kills():
+    """Attributed per-tenant cost telescopes to the fleet bill at every
+    tick — through preemption storms and Poisson mid-quantum hard-kills,
+    which bill exactly like market preemptions."""
+    ts = _tenant_pair()
+    cfg = _cfg(faults.FaultConfig(), instance="m3.medium")
+    scfg = ts.sim_config(cfg)
+    sched = ts.sample(3)
+    pp = runner.default_params(scfg)
+    spec = faults.make_fault_spec(p_slot_fail=4.0, p_storm=2.0,
+                                  storm_frac=0.6)
+    step = jax.jit(runner.make_step(sched, scfg, trace=False, params=pp,
+                                    fspec=spec))
+    state = runner.init_state(sched, scfg, seed=3)
+    for _ in range(40):
+        state, _ = step(state, None)
+        total = int(jnp.sum(state.summ.tenant.cost_u))
+        fleet = int(jnp.round(state.cluster.cum_cost * runner._COST_UNIT))
+        assert total == fleet
+    # The scenario must actually have killed slots, or this test waters
+    # down to the calm case.
+    assert float(state.faults.n_killed) > 0
+
+
+def test_padded_tenant_never_fails_nor_bills_under_chaos():
+    """A hollowed-out tenant block attracts no cost, violations or
+    finishes even while storms kill slots fleet-wide."""
+    ts = _tenant_pair()
+    cfg = _cfg(faults.FaultConfig())
+    scfg = ts.sim_config(cfg)
+    sched = ts.sample(5)
+    w = ts.max_w
+    dead = jnp.arange(sched.valid.shape[0]) >= w
+    sched = sched._replace(
+        valid=jnp.where(dead, False, sched.valid),
+        t_arrive=jnp.where(dead, -1, sched.t_arrive))
+    spec = faults.make_fault_spec(p_slot_fail=3.0, p_meas_drop=0.3)
+    final, _ = runner.scan_run(sched, scfg, seed=5, trace=False,
+                               fspec=spec)
+    out = tnt.summarize_tenants(final, sched, scfg)
+    assert int(out.cost_units[1]) == 0
+    assert int(out.violations[1]) == 0
+    assert int(out.finished[1]) == 0
+    assert int(out.cost_units[0]) == int(
+        np.round(float(final.cluster.cum_cost) * runner._COST_UNIT))
+
+
+def test_killed_work_reenters_queue_exactly_once():
+    """Work in flight on a killed slot returns to the queue: remaining
+    items are non-increasing tick-over-tick after submission (a kill can
+    only *undo* this tick's progress, never add items) and never drop
+    below zero."""
+    cfg = _cfg(faults.FaultConfig(), instance="m3.medium")
+    spec = faults.make_fault_spec(p_slot_fail=6.0)
+    pp = runner.default_params(cfg)
+    sched = workloads.as_jax_schedule(SCHED)
+    step = jax.jit(runner.make_step(sched, cfg, trace=False, params=pp,
+                                    fspec=spec))
+    state = runner.init_state(sched, cfg, seed=7)
+    prev_m = np.asarray(state.work.m)
+    prev_active = np.asarray(state.work.active)
+    for _ in range(cfg.ticks):
+        state, _ = step(state, None)
+        m = np.asarray(state.work.m)
+        active = np.asarray(state.work.active)
+        cont = prev_active & active  # no (re)arrival in between
+        assert np.all(m[cont] <= prev_m[cont] + 1e-4)
+        assert np.all(m >= -1e-5)
+        prev_m, prev_active = m, active
+    assert float(state.faults.n_killed) > 0
+
+
+# ------------------------------------------------------ fault families --
+
+def test_deterministic_outage_blocks_unhardened_acquisition():
+    """During an all-types outage window the unhardened plane cannot
+    acquire: committed CUs never grow inside the window."""
+    cfg = _cfg(faults.FaultConfig(hardened=False))
+    spec = faults.make_fault_spec(outage_start=10.0, outage_ticks=30.0)
+    pp = runner.default_params(cfg)
+    sched = workloads.as_jax_schedule(SCHED)
+    step = jax.jit(runner.make_step(sched, cfg, trace=False, params=pp,
+                                    fspec=spec))
+    state = runner.init_state(sched, cfg, seed=0)
+    committed = []
+    from repro.core import billing
+    for _ in range(50):
+        state, _ = step(state, None)
+        committed.append(float(billing.committed(state.cluster, 1.0)))
+    # After the outage registers (tick >= start), commitments are frozen
+    # or shrinking until the window clears.
+    inside = committed[11:40]
+    assert all(b <= a + 1e-6 for a, b in zip(inside, inside[1:]))
+    assert float(state.faults.unavail_ticks) >= 30.0 * spot.N_TYPES - 1e-6
+
+
+def test_telemetry_dropout_and_delay_counters():
+    cfg = _cfg(faults.FaultConfig())
+    spec = faults.make_fault_spec(p_meas_drop=0.3, p_meas_delay=0.3)
+    final, _ = runner.scan_run(SCHED, cfg, seed=2, trace=False, fspec=spec)
+    assert float(final.faults.n_dropped) > 0
+    assert float(final.faults.n_delayed) > 0
+
+
+def test_straggler_slows_completion():
+    cfg_off = _cfg(bid_policy="on_demand", p_spike_per_core=0.0)
+    cfg_on = dataclasses.replace(cfg_off, faults=faults.FaultConfig())
+    spec = faults.make_fault_spec(p_straggle=8.0, straggle_ticks=6.0,
+                                  straggle_factor=4.0)
+    a = sweep.summarize(runner.scan_run(SCHED, cfg_off, seed=4,
+                                        trace=False)[0], SCHED, cfg_off)
+    b = sweep.summarize(runner.scan_run(SCHED, cfg_on, seed=4, trace=False,
+                                        fspec=spec)[0], SCHED, cfg_on)
+    # Slowed service must not *reduce* the bill-to-completion and must
+    # not magically finish more work.
+    assert float(b.cost) >= float(a.cost) - 1e-6
+    assert int(b.finished) <= int(a.finished)
+
+
+# ----------------------------------------------- hardened primitives --
+
+def test_kalman_dropped_inflates_covariance_only():
+    p = ControlParams()
+    kf = kalman.init(2, 1)
+    meas = jnp.ones((2, 1), jnp.float32)
+    mask = jnp.ones((2, 1), bool)
+    kf = kalman.step(kf, meas, mask, p)  # bootstrap both filters
+    dropped = jnp.asarray([[True], [False]])
+    kf2 = kalman.step(kf, jnp.zeros((2, 1)), jnp.zeros((2, 1), bool), p,
+                      dropped=dropped)
+    # Dropped filter coasts (prediction unchanged) with inflated variance.
+    assert jnp.array_equal(kf2.b_hat, kf.b_hat)
+    assert float(kf2.pi[0, 0]) == pytest.approx(
+        float(kf.pi[0, 0]) + p.sigma_z2)
+    assert float(kf2.pi[1, 0]) == pytest.approx(float(kf.pi[1, 0]))
+
+
+def test_select_type_hedges_around_unavailable():
+    prices = jnp.asarray(spot.SPOT_BASE_TABLE)
+    bids = prices * 10.0
+    mix = jnp.ones((spot.N_TYPES,), jnp.float32)
+    best, ok = spot.select_type(prices, bids, mix)
+    assert bool(ok)
+    avail = jnp.ones((spot.N_TYPES,), bool).at[best].set(False)
+    alt, ok2 = spot.select_type(prices, bids, mix, avail=avail)
+    assert bool(ok2) and int(alt) != int(best)
+    none_left = jnp.zeros((spot.N_TYPES,), bool)
+    _, ok3 = spot.select_type(prices, bids, mix, avail=none_left)
+    assert not bool(ok3)
+
+
+def test_backoff_bounded_and_jittered():
+    cap = 8.0
+    for streak in (1.0, 3.0, 10.0, 1e6):
+        for u in (0.0, 0.5, 0.999):
+            d = float(aimd.backoff_delay(jnp.asarray(streak), cap,
+                                         jnp.asarray(u)))
+            assert 0.5 * 2.0 <= d + 1e-6  # streak >= 1 waits >= 1 tick
+            assert d <= cap * 1.5 + 1e-6  # bounded even at huge streaks
+    # Monotone in the streak at fixed jitter (until the cap).
+    d1 = float(aimd.backoff_delay(jnp.asarray(1.0), cap, jnp.asarray(0.5)))
+    d2 = float(aimd.backoff_delay(jnp.asarray(2.0), cap, jnp.asarray(0.5)))
+    assert d2 > d1
+
+
+# ------------------------------------------------------- sweep surface --
+
+def test_sweepspec_fault_axis_validation():
+    axes = sweep.make_axes(seeds=[0, 1], bid_mults=[1.0])
+    bad = faults.make_fault_spec()._replace(
+        p_outage=jnp.zeros((3,), jnp.float32))  # B=2 grid, (3,) leaf
+    with pytest.raises(ValueError):
+        SweepSpec(axes=axes, workload=SCHED, faults=bad)
+    with pytest.raises(TypeError):
+        SweepSpec(axes=axes, workload=SCHED, faults=(1.0,) * 12)
+    ok = SweepSpec(axes=axes, workload=SCHED,
+                   faults=faults.make_fault_spec(p_slot_fail=1.0))
+    with pytest.raises(ValueError):
+        sweep.sweep(ok, _cfg())  # spec.faults without cfg.faults
+
+
+def test_fault_axis_sweep_matches_single_runs():
+    """A (B,)-leaved fault axis reproduces per-point single runs."""
+    cfg = _cfg(faults.FaultConfig())
+    axes = sweep.make_axes(seeds=[5, 5], bid_mults=[1.0])
+    rates = jnp.asarray([0.0, 5.0], jnp.float32)
+    fsb = faults.FaultSpec(*(
+        jnp.broadcast_to(jnp.asarray(x, jnp.float32), (2,))
+        for x in faults.make_fault_spec()))._replace(p_slot_fail=rates)
+    batch = sweep.sweep(SweepSpec(axes=axes, workload=SCHED, faults=fsb),
+                        cfg)
+    for i, r in enumerate([0.0, 5.0]):
+        one = sweep.sweep(
+            SweepSpec(axes=sweep.make_axes(seeds=[5], bid_mults=[1.0]),
+                      workload=SCHED,
+                      faults=faults.make_fault_spec(p_slot_fail=r)), cfg)
+        assert float(batch.cost[i]) == float(one.cost[0]), i
+
+
+# ----------------------------------------------------------- ft shim --
+
+def test_ft_injector_rides_the_shared_engine():
+    from repro.ft.failures import FailureConfig, FailureInjector
+    inj = FailureInjector(FailureConfig(p_fail=0.05, p_straggle=0.2,
+                                        straggle_factor=5.0, seed=1),
+                          horizon_steps=64)
+    reps = list(range(8))
+    seen_fail = seen_straggle = False
+    for step_i in range(64):
+        failed, stragglers, _ = inj.step_events(step_i, 0.0, reps)
+        seen_fail |= bool(failed)
+        seen_straggle |= bool(stragglers)
+        for r in stragglers:
+            assert inj.slowdown(r, step_i) == 5.0
+    assert seen_fail and seen_straggle
+    # Determinism: the same seed replays the same timeline.
+    inj2 = FailureInjector(FailureConfig(p_fail=0.05, p_straggle=0.2,
+                                         straggle_factor=5.0, seed=1),
+                           horizon_steps=64)
+    assert np.array_equal(inj._kill, inj2._kill)
+    assert np.array_equal(inj._straggling, inj2._straggling)

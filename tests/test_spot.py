@@ -8,7 +8,7 @@ import pytest
 from repro.core import billing
 from repro.core.types import BillingParams, ControlParams
 from repro.core.controller import ControllerConfig
-from repro.sim import (SimConfig, SpotConfig, make_axes, market,
+from repro.sim import (SimConfig, SpotConfig, make_axes,
                        paper_schedule, run, run_single, run_sweep, spot)
 
 PARAMS = ControlParams(monitor_dt=300.0)
@@ -28,13 +28,13 @@ def test_price_trace_constant_without_noise():
     rt = spot.make_runtime(cfg)
     tr = spot.price_trace(rt, 24, jax.random.PRNGKey(0), cfg)
     np.testing.assert_allclose(np.asarray(tr),
-                               market.INSTANCE_TYPES["m3.medium"][2],
+                               spot.INSTANCE_TYPES["m3.medium"][2],
                                rtol=1e-6)
 
 
 def test_runtime_resolves_table_v():
     rt = spot.make_runtime(SpotConfig(instance="m4.10xlarge"))
-    cores, on_demand, base = market.INSTANCE_TYPES["m4.10xlarge"]
+    cores, on_demand, base = spot.INSTANCE_TYPES["m4.10xlarge"]
     assert float(rt.cores) == cores
     assert float(rt.on_demand) == pytest.approx(on_demand)
     assert float(rt.base_price) == pytest.approx(base)
@@ -44,7 +44,7 @@ def test_runtime_resolves_table_v():
 def test_on_demand_bid_policy():
     rt = spot.make_runtime(SpotConfig(bid_policy="on_demand"))
     assert float(rt.bid) == pytest.approx(
-        market.INSTANCE_TYPES["m3.medium"][1])
+        spot.INSTANCE_TYPES["m3.medium"][1])
 
 
 def test_trace_preemption_mask_monotone_in_bid():
@@ -59,13 +59,18 @@ def test_trace_preemption_mask_monotone_in_bid():
     assert counts[0] > 0
 
 
-def test_market_wrapper_matches_jax_process():
-    """ft/failures' numpy facade is the same generator, materialised."""
-    tr = market.spot_trace("m3.large", 48, seed=7)
+def test_price_trace_deterministic_and_preemption_bounds():
+    """The guarantees the old numpy ``market`` facade pinned, now on the
+    JAX process directly (``ft.failures`` draws its reclaim hours from
+    exactly this trace): seed-determinism, positivity, and the preemption
+    mask hitting its bounds at infinite / zero bids."""
+    rt = spot.make_runtime(SpotConfig(instance="m3.large"))
+    tr = np.asarray(spot.price_trace(rt, 48, jax.random.PRNGKey(7)))
     assert tr.shape == (48,) and (tr > 0).all()
-    np.testing.assert_array_equal(tr, market.spot_trace("m3.large", 48, 7))
-    assert market.preemptions(tr, np.inf).sum() == 0
-    assert market.preemptions(tr, 0.0).sum() == 48
+    np.testing.assert_array_equal(
+        tr, np.asarray(spot.price_trace(rt, 48, jax.random.PRNGKey(7))))
+    assert int(np.asarray(spot.preemptions(tr, np.inf)).sum()) == 0
+    assert int(np.asarray(spot.preemptions(tr, 0.0)).sum()) == 48
 
 
 # ---------------------------------------------------------------- billing --
@@ -127,7 +132,7 @@ def test_sim_outage_monotone_and_low_bid_preempts():
     outage time, with event counts compared at the bid extremes.)"""
     cfg = _spot_cfg()
     bids = [1.02, 1.5, 8.0]
-    base = market.INSTANCE_TYPES["m3.medium"][2]
+    base = spot.INSTANCE_TYPES["m3.medium"][2]
     for seed in (0, 1):
         outages = []
         for b in bids:
