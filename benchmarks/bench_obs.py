@@ -1,0 +1,289 @@
+"""Observability benchmark: probe neutrality, digest pin, overhead, traces.
+
+The telemetry subsystem (``repro.obs``) rides the scan carry behind the
+same static-gating contract as the chaos engine: ``SimConfig.obs=None``
+compiles the exact probe-free program, and every probe is read-only —
+enabling the full catalog must not perturb a single result bit.  This
+benchmark commits those claims:
+
+  1. **obs=None bit-identity** — a sweep with the probes compiled out is
+     digest-pinned (sha256 over every summary field) against the
+     committed baseline, so *any* PR that perturbs the probe-free program
+     is caught — the observability twin of ``bench_chaos``'s zero-fault
+     digest;
+  2. **probe neutrality** — the full probe catalog (every family on +
+     ledger + histogram) reproduces the probe-free results bit for bit,
+     in both trace mode (``runner.run``) and summary mode (the sweep);
+  3. **bounded overhead** — the full-catalog run costs at most
+     ``OBS_OVERHEAD_CEILING`` × the probe-free runtime on the frontier
+     grid (steady-state, AOT-compiled, best-of-``STEADY_ITERS``);
+  4. **working exporters** — a profiled, streamed sweep's Perfetto export
+     (``results/obs_sweep_trace.json``) carries one complete span per
+     chunk with compile/execute/write timings, and a full-probe run's
+     ledger drains into typed records + a trace-event file CI uploads.
+
+Emits ``results/BENCH_obs.json`` (``kind: "obs"``), gated in CI by
+``benchmarks/check_bench_regression.py`` against
+``benchmarks/baselines/``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.obs import ObsSpec, export
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, make_axes,
+                       paper_schedule, runner, sweep)
+
+SCHEMA_VERSION = 1
+# Full-catalog probes must stay within this multiple of the probe-free
+# steady-state runtime on the frontier grid (hard, baseline-independent).
+OBS_OVERHEAD_CEILING = 1.25
+
+# The PR-2 policy-frontier market and grid (bench_throughput.MARKET) —
+# the committed overhead reference point.
+MARKET = dict(instance="m3.xlarge", p_spike_per_core=0.02, spike_hours=3.0,
+              ema_alpha=0.15)
+POLICIES = ("multiple", "ttc", "ema", "on_demand")
+FULL_MULTS = (1.02, 1.1, 1.2, 1.5, 2.5, 4.0, 8.0)
+SMOKE_MULTS = (1.02, 1.5, 2.5, 8.0)
+TICKS = 130
+MONITOR_DT = 300.0
+STEADY_ITERS = 3
+LEDGER_CAP = 256
+
+
+def _sched():
+    return paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+
+
+def _cfg(obs: ObsSpec | None = None) -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(params=ControlParams(monitor_dt=MONITOR_DT),
+                              billing=BillingParams(terminate="immediate")),
+        ticks=TICKS, spot=SpotConfig(enabled=True, **MARKET), obs=obs)
+
+
+def _axes(seeds, mults):
+    return make_axes(seeds=list(seeds), bid_mults=list(mults),
+                     instances=[MARKET["instance"]], policies=list(POLICIES))
+
+
+def _summary_digest(summary) -> str:
+    h = hashlib.sha256()
+    for f in type(summary)._fields:
+        h.update(np.ascontiguousarray(
+            np.asarray(getattr(summary, f))).tobytes())
+    return h.hexdigest()
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def run_neutrality(seeds, mults) -> dict:
+    """Bit-identity of the probe-free program, two ways (cf. the chaos
+    zero-fault check): the full catalog against probes compiled out, and
+    the compiled-out sweep's digest against the committed baseline."""
+    sched = _sched()
+    axes = _axes(seeds, mults)
+    off = sweep.sweep(SweepSpec(axes=axes, workload=sched), _cfg())
+    on = sweep.sweep(SweepSpec(axes=axes, workload=sched),
+                     _cfg(ObsSpec.full(ledger=LEDGER_CAP)))
+    sweep_exact = _trees_equal(off, on)
+
+    tr_off = runner.run(sched, _cfg(), seed=0)
+    tr_on, report = runner.run_obs(
+        sched, _cfg(ObsSpec.full(ledger=LEDGER_CAP)), seed=0)
+    run_exact = _trees_equal(tr_off, tr_on)
+
+    return {
+        "sweep_exact": bool(sweep_exact),
+        "run_exact": bool(run_exact),
+        "digest": _summary_digest(off),
+        # A handful of drained gauges so the probe catalog's output stays
+        # visible in the committed trajectory (informational, ungated).
+        "probe_counters": {k: round(v, 4)
+                           for k, v in sorted(report.counters.items())},
+    }
+
+
+def _best_of(compiled, axes, pp, iters: int) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*axes, pp))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_overhead(seeds, mults) -> dict:
+    """Steady-state full-probe vs probe-free runtime on the frontier grid
+    (one AOT compile each; best-of-``STEADY_ITERS`` to shed scheduler
+    noise)."""
+    sched = _sched()
+    axes = _axes(seeds, mults)
+    out = {}
+    for name, cfg in (("base", _cfg()),
+                      ("obs", _cfg(ObsSpec.full(ledger=LEDGER_CAP)))):
+        pp = runner.default_params(cfg)
+        fn = jax.jit(jax.vmap(sweep.point_fn(sched, cfg, trace=False),
+                              in_axes=(0, 0, 0, 0, 0, 0, None)))
+        t0 = time.perf_counter()
+        compiled = fn.lower(*axes, pp).compile()
+        compile_s = time.perf_counter() - t0
+        jax.block_until_ready(compiled(*axes, pp))   # warm dispatch
+        out[name] = {
+            "compile_s": round(compile_s, 4),
+            "steady_s": round(_best_of(compiled, axes, pp, STEADY_ITERS), 4),
+        }
+    ratio = out["obs"]["steady_s"] / max(out["base"]["steady_s"], 1e-9)
+    return {
+        "points": int(axes.seed.shape[0]),
+        "base": out["base"],
+        "obs": out["obs"],
+        "overhead_ratio": round(ratio, 3),
+    }
+
+
+def run_exports(seeds, mults) -> dict:
+    """Profiled streamed sweep → Perfetto chunk timeline, and a
+    full-probe run's ledger → trace events (both land in ``results/``,
+    which CI uploads)."""
+    import shutil
+    import tempfile
+
+    sched = _sched()
+    axes = _axes(seeds, mults)
+    b = int(axes.seed.shape[0])
+    chunk = max(1, b // 4)
+    os.makedirs("results", exist_ok=True)
+
+    scratch = tempfile.mkdtemp(prefix="bench_obs_stream_")
+    try:
+        rep = sweep.sweep(
+            SweepSpec(axes=axes, workload=sched, chunk_size=chunk,
+                      stream_dir=scratch, profile=True), _cfg())
+        trace_path = os.path.join("results", "obs_sweep_trace.json")
+        rep.write_trace(trace_path)
+        with open(trace_path) as f:
+            events = json.load(f)["traceEvents"]
+        spans = [e for e in events if e.get("ph") == "X"]
+        span_keys = {"compile_s", "execute_s", "write_s"}
+        spans_ok = (len(spans) == len(rep.chunks) > 0 and all(
+            span_keys <= set(e.get("args", {})) for e in spans))
+        manifest_ok = "profile" in rep.result.manifest
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    _, report = runner.run_obs(
+        _sched(), _cfg(ObsSpec.full(ledger=LEDGER_CAP)), seed=0)
+    run_trace = os.path.join("results", "obs_run_trace.json")
+    export.write_trace(run_trace, export.run_trace_events(
+        report, dt=MONITOR_DT))
+    report.to_jsonl(os.path.join("results", "obs_run_ledger.jsonl"))
+
+    return {
+        "n_chunks": len(rep.chunks),
+        "total_s": round(rep.total_s, 4),
+        "compile_s": round(sum(c.compile_s for c in rep.chunks), 4),
+        "execute_s": round(sum(c.execute_s for c in rep.chunks), 4),
+        "write_s": round(sum(c.write_s for c in rep.chunks), 4),
+        "peak_bytes": rep.chunks[0].peak_bytes,
+        "spans_ok": bool(spans_ok),
+        "manifest_profile_ok": bool(manifest_ok),
+        "ledger_events": len(report.ledger),
+        "ledger_dropped": report.ledger_dropped,
+    }
+
+
+def main(emit, smoke: bool = False) -> dict:
+    seeds = tuple(range(2 if smoke else 4))
+    mults = SMOKE_MULTS if smoke else FULL_MULTS
+
+    neutral = run_neutrality(seeds, mults)
+    emit("obs_neutral_sweep_exact", float(neutral["sweep_exact"]), "bool")
+    emit("obs_neutral_run_exact", float(neutral["run_exact"]), "bool")
+
+    overhead = run_overhead(seeds, mults)
+    emit("obs_overhead_ratio", overhead["overhead_ratio"],
+         f"ceiling<={OBS_OVERHEAD_CEILING};"
+         f"base={overhead['base']['steady_s']};"
+         f"obs={overhead['obs']['steady_s']}")
+
+    exports = run_exports(seeds, mults)
+    emit("obs_trace_spans_ok", float(exports["spans_ok"]),
+         f"chunks={exports['n_chunks']}")
+    emit("obs_ledger_events", float(exports["ledger_events"]),
+         f"dropped={exports['ledger_dropped']}")
+
+    neutral_ok = neutral["sweep_exact"] and neutral["run_exact"]
+    overhead_ok = overhead["overhead_ratio"] <= OBS_OVERHEAD_CEILING
+    exports_ok = exports["spans_ok"] and exports["manifest_profile_ok"]
+    emit("obs_acceptance_neutral", float(neutral_ok), "bool")
+    emit("obs_acceptance_overhead", float(overhead_ok), "bool")
+
+    report = {
+        "kind": "obs",
+        "schema_version": SCHEMA_VERSION,
+        "smoke": bool(smoke),
+        "config": {
+            "ticks": TICKS,
+            "monitor_dt": MONITOR_DT,
+            "seeds": list(seeds),
+            "bid_mults": list(mults),
+            "policies": list(POLICIES),
+            "ledger_cap": LEDGER_CAP,
+            "overhead_ceiling": OBS_OVERHEAD_CEILING,
+        },
+        "neutrality": neutral,
+        "overhead": overhead,
+        "exports": exports,
+        "acceptance": {
+            "neutral_exact": bool(neutral_ok),
+            "overhead_bounded": bool(overhead_ok),
+            "exports_ok": bool(exports_ok),
+        },
+    }
+    os.makedirs("results", exist_ok=True)
+    with open(os.path.join("results", "BENCH_obs.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    if not (neutral_ok and overhead_ok and exports_ok):
+        raise SystemExit(
+            "obs acceptance not met: "
+            f"neutral={neutral_ok} "
+            f"overhead_ratio={overhead['overhead_ratio']} "
+            f"exports_ok={exports_ok}")
+    return report
+
+
+def _cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI; same acceptance checks")
+    args = ap.parse_args()
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.6g},{derived}", flush=True)
+
+    print("name,value,derived")
+    main(emit, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    _cli()

@@ -72,6 +72,18 @@ spot/bidding report).
   * post-outage recovery takes more than ``CHAOS_RECOVERY_CEILING``
     ticks (hard ceiling, baseline-independent).
 
+``BENCH_obs.json`` (``bench_obs --smoke``):
+
+  * an acceptance flag flips: ``neutral_exact`` (the full probe catalog
+    no longer reproduces the probe-free program bit for bit, or the
+    compiled-out path changed), ``overhead_bounded``, or ``exports_ok``
+    (the Perfetto chunk timeline / ledger exporters broke);
+  * the probe-free sweep digest differs from the baseline's — some PR
+    perturbed the ``obs=None`` program's bits (the static-gating
+    contract, the observability twin of the chaos zero-fault digest);
+  * the full-probe overhead ratio exceeds ``OBS_OVERHEAD_CEILING``
+    (hard ceiling, baseline-independent).
+
 ``BENCH_tenants.json`` (``bench_tenants --smoke``):
 
   * an acceptance flag flips: ``single_owner_exact`` (a one-tenant set is
@@ -123,6 +135,9 @@ STREAM_RATIO_FLOOR = 10.0
 # blackout clearing (both hard, baseline-independent).
 CHAOS_INFLATION_CEILING = 8.0
 CHAOS_RECOVERY_CEILING = 24
+# Full-catalog probes must stay within this multiple of the probe-free
+# steady-state runtime (hard, baseline-independent — bench_obs).
+OBS_OVERHEAD_CEILING = 1.25
 
 
 def _schema_smoke_errors(current: dict, baseline: dict) -> list[str]:
@@ -427,6 +442,51 @@ def check_chaos(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_obs(current: dict, baseline: dict) -> list[str]:
+    """Gate failures for the ``kind: obs`` report (empty = pass)."""
+    errors = _schema_smoke_errors(current, baseline)
+    if errors:
+        return errors
+
+    acc = current.get("acceptance", {})
+    for flag, why in (
+        (
+            "neutral_exact",
+            "the full probe catalog no longer reproduces the probe-free "
+            "program bit for bit",
+        ),
+        (
+            "overhead_bounded",
+            "full-catalog probes exceeded the overhead ceiling over the "
+            "probe-free runtime",
+        ),
+        (
+            "exports_ok",
+            "the Perfetto chunk-timeline / ledger exporters no longer "
+            "produce well-formed traces",
+        ),
+    ):
+        if not acc.get(flag):
+            errors.append(f"acceptance flag {flag} is false: {why}")
+
+    cur_digest = current.get("neutrality", {}).get("digest")
+    base_digest = baseline.get("neutrality", {}).get("digest")
+    if cur_digest != base_digest:
+        errors.append(
+            "probe-free sweep digest changed: the obs=None program is no "
+            f"longer bit-identical to the baseline ({cur_digest} vs "
+            f"{base_digest})"
+        )
+
+    ratio = current.get("overhead", {}).get("overhead_ratio")
+    if ratio is None or ratio > OBS_OVERHEAD_CEILING:
+        errors.append(
+            f"full-probe overhead ratio {ratio} exceeds the "
+            f"{OBS_OVERHEAD_CEILING} ceiling over the probe-free runtime"
+        )
+    return errors
+
+
 def check_tenants(current: dict, baseline: dict) -> list[str]:
     """Gate failures for the ``kind: tenants`` report (empty = pass)."""
     errors = _schema_smoke_errors(current, baseline)
@@ -556,6 +616,16 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"recovery_ticks="
             f"{current.get('recovery', {}).get('recovery_ticks')} "
             f"margins_pct={margins}"
+        )
+    elif kind_cur == "obs":
+        errors = check_obs(current, baseline)
+        acc = current.get("acceptance", {})
+        print(
+            f"bench gate [obs]: neutral_exact={acc.get('neutral_exact')} "
+            f"overhead_ratio="
+            f"{current.get('overhead', {}).get('overhead_ratio')} "
+            f"(ceiling {OBS_OVERHEAD_CEILING}) "
+            f"exports_ok={acc.get('exports_ok')}"
         )
     elif kind_cur == "tenants":
         errors = check_tenants(current, baseline)

@@ -16,7 +16,12 @@ that accept it.  A failing suite (exception *or* a ``SystemExit`` from an
 acceptance check) is reported in its ``_suite_*`` row and turns the exit
 code non-zero, but never hides the remaining suites.
 
-CLI:  PYTHONPATH=src python -m benchmarks.run [--smoke] [suite]
+``--json PATH`` additionally writes a machine-readable report — one
+record per suite (name, ok, wall_s, error) plus the overall verdict —
+for CI artifact upload and downstream dashboards; the CSV on stdout is
+unchanged.
+
+CLI:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH] [suite]
 """
 
 from __future__ import annotations
@@ -24,6 +29,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import inspect
+import json
 import pathlib
 import sys
 import time
@@ -56,6 +62,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="run a single suite (e.g. 'spot', 'tuning')")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced sizes for CI on suites that support it")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable per-suite report "
+                         "(pass/fail + wall clock) to this path")
     args = ap.parse_args(argv)
 
     suites = discover()
@@ -69,17 +78,30 @@ def main(argv: list[str] | None = None) -> int:
         print(f"{name},{value:.6g},{derived}", flush=True)
 
     failures: list[str] = []
+    records: list[dict] = []
     for name, module_name in suites.items():
         if args.only and args.only != name:
             continue
         t0 = time.time()
         try:
             _call_suite(module_name, emit, args.smoke)
-            emit(f"_suite_{name}_wall_s", time.time() - t0, "ok")
+            wall = time.time() - t0
+            emit(f"_suite_{name}_wall_s", wall, "ok")
+            records.append({"suite": name, "ok": True,
+                            "wall_s": round(wall, 3), "error": None})
         except (Exception, SystemExit) as e:  # a failed suite (even at
-            emit(f"_suite_{name}_wall_s", time.time() - t0,  # import) must
-                 f"FAILED:{type(e).__name__}:{e}")  # not hide the others
+            wall = time.time() - t0           # import) must not hide the
+            err = f"{type(e).__name__}:{e}"   # others
+            emit(f"_suite_{name}_wall_s", wall, f"FAILED:{err}")
+            records.append({"suite": name, "ok": False,
+                            "wall_s": round(wall, 3), "error": err})
             failures.append(name)
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"smoke": bool(args.smoke), "ok": not failures,
+             "suites": records}, indent=2) + "\n")
     if failures:
         print(f"benchmark suites failed: {', '.join(failures)}",
               file=sys.stderr)

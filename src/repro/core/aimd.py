@@ -27,6 +27,16 @@ def aimd_init(n0: float) -> AimdState:
     return AimdState(n_target=jnp.asarray(n0, jnp.float32))
 
 
+def increase_branch(n_tot: jnp.ndarray, n_star: jnp.ndarray) -> jnp.ndarray:
+    """Fig. 1's branch predicate: True = additive increase, False =
+    multiplicative backoff.  Split out as the probe-emission hook for the
+    observability layer (``repro.obs``): the AIMD branch counters and the
+    ledger's backoff-transition events are *defined* as this predicate —
+    the same compiled op ``aimd_step`` takes its branch on — so a probe
+    can never disagree with the decision it observes."""
+    return n_tot <= n_star
+
+
 def aimd_step(state: AimdState, n_tot: jnp.ndarray, n_star: jnp.ndarray,
               params: ControlParams,
               pp: PolicyParams | None = None) -> AimdState:
@@ -41,7 +51,7 @@ def aimd_step(state: AimdState, n_tot: jnp.ndarray, n_star: jnp.ndarray,
     """
     alpha = params.alpha if pp is None else pp.alpha
     beta = params.beta if pp is None else pp.beta
-    incr = n_tot <= n_star
+    incr = increase_branch(n_tot, n_star)
     up = jnp.minimum(n_tot + alpha, params.n_max)
     down = jnp.maximum(beta * n_tot, params.n_min)
     return AimdState(n_target=jnp.where(incr, up, down))

@@ -74,12 +74,27 @@ class ControllerState(NamedTuple):
     aimd: AimdState
 
 
+class ControlProbe(NamedTuple):
+    """Per-tick control-plane diagnostics (``repro.obs`` emission hook).
+
+    Populated only when the caller passes an ``ObsSpec`` (each field
+    further gated by its probe family — ``None`` when unwanted), so a
+    probe-free controller step carries a leafless ``None`` here and
+    compiles unchanged.
+    """
+
+    aimd_incr: jnp.ndarray | None = None    # () bool Fig. 1 branch taken
+    water_scale: jnp.ndarray | None = None  # () f32 eqs. 13-14 rescale
+    kalman: "kalman.KalmanProbe | None" = None  # innovation diagnostics
+
+
 class ControlDecision(NamedTuple):
     s: jnp.ndarray           # (W,) service rates for [t, t+1)
     n_star: jnp.ndarray      # ()   N*_tot (eq. 12)
     n_target: jnp.ndarray    # ()   CU count requested for t+1
     b_hat: jnp.ndarray       # (W, K) current predictions
     reliable: jnp.ndarray    # (W, K) predictor reliability flags
+    probe: ControlProbe | None = None  # obs diagnostics (None = off)
 
 
 def init(w: int, k: int, cfg: ControllerConfig) -> ControllerState:
@@ -111,6 +126,7 @@ def step(state: ControllerState,
          pp: PolicyParams | None = None,  # traced policy gains (tuning)
          tenants: tuple | None = None,    # (tenant_id (W,), n, base_w (N,))
          meas_dropped: jnp.ndarray | None = None,  # (W, K) lost telemetry
+         obs=None,  # static ObsSpec (repro.obs): emit ControlDecision.probe
          ) -> tuple[ControllerState, WorkloadState, ControlDecision]:
     p = cfg.params
     # CUs per instance — a traced scalar when the spot fleet's granularity
@@ -128,7 +144,13 @@ def step(state: ControllerState,
     # ``meas_dropped`` marks filters whose fresh measurement was lost to a
     # telemetry dropout (chaos engine, hardened mode): the Kalman bank coasts
     # there with inflated covariance instead of silently standing still.
+    k_probe = None
     if cfg.predictor == "kalman":
+        if obs is not None and obs.kalman:
+            # Innovation/NIS from the *pre-update* bank — the residual
+            # eq. 8 is about to correct with (trace-time gated: probe-free
+            # configs compile the exact historical update).
+            k_probe = kalman.probe(state.kf, meas_mask, p)
         kf = kalman.step(state.kf, b_meas, meas_mask, p,
                          use_kernel=cfg.kalman_kernel,
                          dropped=meas_dropped)
@@ -196,6 +218,18 @@ def step(state: ControllerState,
         n_target = jnp.where(any_work, n_target, n_now - cfg.as_step)
         n_target = jnp.clip(n_target, 1.0, p.n_max)
 
+    # -- 5. observability probe (repro.obs) ----------------------------------
+    # Assembled only under an ObsSpec; each field further gated by its
+    # family so an enabled probe subset compiles exactly its own ops.
+    probe = None
+    if obs is not None:
+        probe = ControlProbe(
+            aimd_incr=(aimd_lib.increase_branch(n_base, n_star)
+                       if obs.want_aimd else None),
+            water_scale=(alloc.scale if obs.want_fairshare else None),
+            kalman=k_probe)
+
     new_state = ControllerState(kf=kf, arma=arma, pol=pol, aimd=aimd_state)
     return new_state, work, ControlDecision(
-        s=s, n_star=n_star, n_target=n_target, b_hat=b_hat, reliable=reliable)
+        s=s, n_star=n_star, n_target=n_target, b_hat=b_hat,
+        reliable=reliable, probe=probe)

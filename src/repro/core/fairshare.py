@@ -23,6 +23,14 @@ class Allocation(NamedTuple):
     s: jnp.ndarray        # (W,) service rates actually granted
     s_star: jnp.ndarray   # (W,) unconstrained optimum r/d
     n_star: jnp.ndarray   # ()   N*_tot = Σ s*   (eq. 12)
+    # The eqs. 13-14 multiplicative rescale actually applied — the
+    # "water level" the observability layer gauges (< 1: demand throttled
+    # to the band, > 1: rates lifted toward it, 1: in band).  For the
+    # hierarchical allocator this is the most-throttled demanding
+    # tenant's factor.  Emitted unconditionally (it is an intermediate
+    # the allocator computes anyway); unread, it is dead code XLA
+    # eliminates, so probe-free programs are unchanged.
+    scale: jnp.ndarray = jnp.nan  # () f32
 
 
 def optimal_rates(r: jnp.ndarray, d: jnp.ndarray,
@@ -71,7 +79,10 @@ def allocate(r: jnp.ndarray,
     # Granted rates are physically capped at N_{w,max} CUs per workload.
     s = jnp.minimum(s_star * scale, params.n_w_max)
     s = jnp.where(active, s, 0.0)
-    return Allocation(s=s, s_star=s_star, n_star=n_star)
+    # Gauge an idle instant (no demand to rescale) as 1.0 — the raw eq. 14
+    # factor divides by ~0 there and would swamp the water-level statistic.
+    gauge = jnp.where(n_star > _EPS, scale, 1.0)
+    return Allocation(s=s, s_star=s_star, n_star=n_star, scale=gauge)
 
 
 def allocate_tenants(r: jnp.ndarray,
@@ -130,7 +141,13 @@ def allocate_tenants(r: jnp.ndarray,
 
     s = jnp.minimum(s_star * scale[tenant_id], params.n_w_max)
     s = jnp.where(active, s, 0.0)
-    return Allocation(s=s, s_star=s_star, n_star=n_star)
+    # Fleet-level water gauge: the most-throttled tenant with any demand
+    # (1.0 when the fleet is idle — nothing was rescaled).
+    any_demand = jnp.any(demand > 0.0)
+    fleet_scale = jnp.where(
+        any_demand,
+        jnp.min(jnp.where(demand > 0.0, scale, jnp.inf)), 1.0)
+    return Allocation(s=s, s_star=s_star, n_star=n_star, scale=fleet_scale)
 
 
 def confirm_ttc(r: jnp.ndarray,

@@ -18,9 +18,47 @@ estimate as *reliable*, which triggers TTC confirmation for the workload.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax.numpy as jnp
 
 from .types import ControlParams, KalmanState
+
+
+class KalmanProbe(NamedTuple):
+    """One tick's innovation diagnostics (observability hook).
+
+    ``innov`` is the eq. 8 residual ``b̃[t-1] - b̂⁻`` for filters that
+    absorb a regular measurement update this tick (0 elsewhere), ``nis``
+    the normalized innovation squared ``innov² / S`` with the innovation
+    covariance ``S = π⁻ + σ_v²`` — the classic filter-consistency
+    statistic (a healthy bank hovers near E[NIS] = 1; sustained excess
+    means the noise model underestimates the world).  ``upd`` marks the
+    filters the diagnostics refer to.
+    """
+
+    innov: jnp.ndarray  # (W, K) f32 residual, 0 where no update
+    nis: jnp.ndarray    # (W, K) f32 innovation² / S, 0 where no update
+    upd: jnp.ndarray    # (W, K) bool regular-update mask
+
+
+def probe(state: KalmanState, meas_mask: jnp.ndarray,
+          params: ControlParams) -> KalmanProbe:
+    """Innovation/NIS of this tick's update, from the *pre-update* state.
+
+    Reads exactly the quantities :func:`step` is about to consume — the
+    lagged measurement ``b_meas_prev``, the prior ``b_hat`` and the
+    predicted covariance ``π⁻ = π + σ_z²`` — so the probe observes the
+    very residual eq. 8 corrects with, at zero effect on the update
+    itself (bootstrap ticks have a zero residual by construction and are
+    excluded via the regular-update mask).
+    """
+    upd = meas_mask & state.has_meas
+    pi_minus = state.pi + params.sigma_z2
+    s_cov = pi_minus + params.sigma_v2
+    innov = jnp.where(upd, state.b_meas_prev - state.b_hat, 0.0)
+    nis = jnp.where(upd, innov * innov / jnp.maximum(s_cov, 1e-12), 0.0)
+    return KalmanProbe(innov=innov, nis=nis, upd=upd)
 
 
 def init(w: int, k: int, dtype=jnp.float32) -> KalmanState:

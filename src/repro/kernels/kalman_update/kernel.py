@@ -12,6 +12,7 @@ materializes.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +20,32 @@ from jax.experimental import pallas as pl
 
 BLOCK_R, BLOCK_C = 256, 128
 
+_WARNED_INTERPRET = False  # the fallback notice fires once per process
+
 
 def resolve_interpret(interpret: bool | None) -> bool:
     """Platform-aware default: compile the kernel for real on TPU, run the
-    Pallas interpreter (plain XLA ops — jittable, scannable) elsewhere."""
+    Pallas interpreter (plain XLA ops — jittable, scannable) elsewhere.
+
+    The implicit fallback is announced once per process (a UserWarning
+    naming the resolved platform): interpreter emulation is bit-compatible
+    but carries none of the kernel's fusion benefit, so a benchmark that
+    silently landed on it would report meaningless kernel numbers.
+    """
+    global _WARNED_INTERPRET
     if interpret is None:
-        return jax.default_backend() != "tpu"
+        platform = jax.default_backend()
+        fallback = platform != "tpu"
+        if fallback and not _WARNED_INTERPRET:
+            _WARNED_INTERPRET = True
+            warnings.warn(
+                f"kalman_update: no TPU — resolved platform is "
+                f"{platform!r}, running the Pallas kernel in interpret "
+                "mode (plain XLA ops; numerically identical, not a "
+                "kernel-performance measurement). Pass interpret=False "
+                "to require the compiled kernel.", UserWarning,
+                stacklevel=3)
+        return fallback
     return bool(interpret)
 
 

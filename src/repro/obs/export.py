@@ -1,0 +1,123 @@
+"""Exporters: JSONL records and Chrome/Perfetto ``trace_event`` JSON.
+
+Two renderers over the observability planes:
+
+  * :func:`run_trace_events` — a drained run's decision ledger as instant
+    events on named tracks (one thread per event kind), plus a metadata
+    header, so a single run's control-plane story opens in
+    ``chrome://tracing`` / https://ui.perfetto.dev;
+  * :func:`sweep_trace_events` — a sweep's per-chunk profile (from
+    ``sim.sweep.SweepReport`` or a stream manifest's ``profile`` list) as
+    one complete-event span per chunk whose args carry the
+    compile/execute/write split and the XLA peak-bytes estimate.
+
+Both emit plain lists of ``trace_event`` dicts; :func:`write_trace` wraps
+them in the ``{"traceEvents": [...]}`` envelope trace viewers expect.
+Timestamps are microseconds (the format's unit): run events use
+``tick * dt`` seconds of simulated time, sweep spans use wall-clock
+offsets from the first chunk.
+"""
+
+from __future__ import annotations
+
+import json
+
+_US = 1e6  # trace_event timestamps are microseconds
+
+
+def _meta(pid: int, tid: int, name: str) -> dict:
+    return {"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+            "args": {"name": name}}
+
+
+def run_trace_events(report, dt: float = 1.0, pid: int = 1) -> list[dict]:
+    """A drained :class:`~repro.obs.probes.ObsReport` as trace events.
+
+    Each ledger kind gets its own track (tid = kind code); every record
+    becomes an instant event at its tick's simulated time, args carrying
+    the value and tenant.  The report's scalar counters ride a process
+    metadata event so they show up in the viewer's process pane.
+    """
+    from . import ledger as ledger_lib
+
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+         "args": {"name": "sim-run"}},
+        {"name": "counters", "ph": "M", "pid": pid, "tid": 0,
+         "args": {k: v for k, v in report.counters.items()}},
+    ]
+    kinds_seen = sorted({r.kind for r in report.ledger})
+    for kind in kinds_seen:
+        events.append(_meta(pid, kind, ledger_lib.KIND_NAMES.get(
+            kind, f"kind_{kind}")))
+    for rec in report.ledger:
+        events.append({
+            "name": rec.kind_name, "ph": "i", "s": "t",
+            "pid": pid, "tid": rec.kind,
+            "ts": rec.tick * dt * _US,
+            "args": {"value": rec.value, "tenant": rec.tenant},
+        })
+    return events
+
+
+def _chunk_field(chunk, name, default=None):
+    """Read a field off a ChunkProfile dataclass or a manifest dict."""
+    if isinstance(chunk, dict):
+        return chunk.get(name, default)
+    return getattr(chunk, name, default)
+
+
+def sweep_trace_events(chunks, pid: int = 1) -> list[dict]:
+    """Per-chunk sweep profile as one complete-event span per chunk.
+
+    ``chunks`` is ``SweepReport.chunks`` (ChunkProfile dataclasses) or a
+    stream manifest's ``profile`` list (plain dicts).  Chunks are laid
+    end-to-end on one wall-clock axis: each span's duration is its
+    compile + execute + write time and its args carry the split plus the
+    XLA ``memory_analysis`` peak-bytes estimate.  Resumed chunks (loaded
+    from a previous run's committed files) appear as zero-length spans
+    flagged ``resumed``.
+    """
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+         "args": {"name": "sweep"}},
+        _meta(pid, 0, "chunks"),
+    ]
+    ts = 0.0
+    for chunk in chunks:
+        idx = _chunk_field(chunk, "chunk", 0)
+        compile_s = float(_chunk_field(chunk, "compile_s", 0.0) or 0.0)
+        execute_s = float(_chunk_field(chunk, "execute_s", 0.0) or 0.0)
+        write_s = float(_chunk_field(chunk, "write_s", 0.0) or 0.0)
+        dur = (compile_s + execute_s + write_s) * _US
+        events.append({
+            "name": f"chunk {idx}", "ph": "X", "pid": pid, "tid": 0,
+            "ts": ts, "dur": dur,
+            "args": {
+                "rows": _chunk_field(chunk, "rows"),
+                "compile_s": compile_s,
+                "execute_s": execute_s,
+                "write_s": write_s,
+                "peak_bytes": _chunk_field(chunk, "peak_bytes"),
+                "resumed": bool(_chunk_field(chunk, "resumed", False)),
+            },
+        })
+        ts += dur
+    return events
+
+
+def write_trace(path, events: list[dict]) -> None:
+    """Write events in the ``{"traceEvents": [...]}`` envelope."""
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+
+
+def report_jsonl(report, path) -> None:
+    """One JSON object per line: a ``counters`` header, then every ledger
+    record in chronological order — greppable, streamable, schema-stable."""
+    with open(path, "w") as f:
+        header = {"record": "counters", **report.counters,
+                  "ledger_dropped": report.ledger_dropped}
+        f.write(json.dumps(header) + "\n")
+        for rec in report.ledger:
+            f.write(json.dumps({"record": "event", **rec.to_dict()}) + "\n")

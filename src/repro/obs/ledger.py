@@ -1,0 +1,137 @@
+"""Bounded in-carry decision ledger: a ring buffer of structured events.
+
+The ledger answers *why* a run cost what it did without a full per-tick
+trace: each time the control plane makes a notable decision — the AIMD
+loop flips into multiplicative backoff, the market reclaims slots, the
+chaos engine hard-kills capacity, the admission gate rejects arrivals —
+one fixed-layout event ``(tick, kind, tenant, value)`` is pushed into a
+fixed-capacity ring carried through the scan.  Everything is fixed-shape:
+a push is one dynamic-index update per buffer, conditioned on the event
+predicate, so an event-free tick writes each slot back to itself and the
+compiled step never branches.
+
+Overflow semantics are *oldest-dropped*: ``head`` counts every event ever
+pushed, the slot written is ``head % capacity``, so once the ring wraps
+the surviving window is the most recent ``capacity`` events and exactly
+``head - capacity`` old ones were overwritten.  :func:`records` decodes a
+drained ring back into typed, chronologically ordered records plus that
+exact dropped count — the contract ``tests/test_obs.py`` pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+# Event kinds.  Codes are part of the drained-record schema (JSONL /
+# dataframe exports carry both the code and the name), so new kinds are
+# appended, never renumbered.
+KIND_AIMD_BACKOFF = 1   # AIMD flipped increase -> decrease; value = n_target
+KIND_PREEMPT = 2        # market reclaimed slots this tick; value = count
+KIND_KILL = 3           # chaos hard-kills this tick; value = count
+KIND_BACKOFF_ENTER = 4  # acquisition fail-streak left 0; value = streak
+KIND_ADM_REJECT = 5     # admission-gate rejects; value = count
+KIND_SHED = 6           # deadline-aware shed arrivals; value = count
+
+KIND_NAMES = {
+    KIND_AIMD_BACKOFF: "aimd_backoff",
+    KIND_PREEMPT: "preempt",
+    KIND_KILL: "kill",
+    KIND_BACKOFF_ENTER: "backoff_enter",
+    KIND_ADM_REJECT: "adm_reject",
+    KIND_SHED: "shed",
+}
+
+# Fleet-level events carry this sentinel in the tenant column.
+NO_TENANT = -1
+
+
+class Ledger(NamedTuple):
+    """The in-carry ring.  ``head`` is the total number of events ever
+    pushed (not the write position — that is ``head % capacity``).  The
+    two ``prev_*`` registers are the one-tick memories the transition
+    detectors (AIMD flip, backoff entry) need; they live here so the
+    ledger works even when the ``aimd`` metric family is switched off."""
+
+    tick: jnp.ndarray         # (cap,) int32
+    kind: jnp.ndarray         # (cap,) int32
+    tenant: jnp.ndarray       # (cap,) int32 (NO_TENANT = fleet-level)
+    value: jnp.ndarray        # (cap,) float32
+    head: jnp.ndarray         # ()     int32 total events ever pushed
+    prev_incr: jnp.ndarray    # ()     bool  last tick's AIMD branch
+    prev_streak: jnp.ndarray  # ()     f32   last tick's fail-streak
+
+
+def init(capacity: int) -> Ledger:
+    return Ledger(
+        tick=jnp.zeros((capacity,), jnp.int32),
+        kind=jnp.zeros((capacity,), jnp.int32),
+        tenant=jnp.full((capacity,), NO_TENANT, jnp.int32),
+        value=jnp.zeros((capacity,), jnp.float32),
+        head=jnp.asarray(0, jnp.int32),
+        prev_incr=jnp.asarray(True),
+        prev_streak=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def push(led: Ledger, cond, t, kind: int, value,
+         tenant=NO_TENANT) -> Ledger:
+    """Conditionally append one event.  ``cond`` is a traced () bool: when
+    False every buffer writes its current slot value back (a no-op), and
+    ``head`` does not advance — so the ring only ever holds real events."""
+    cap = led.tick.shape[0]
+    idx = led.head % cap
+    keep = lambda buf, v: buf.at[idx].set(  # noqa: E731
+        jnp.where(cond, v, buf[idx]))
+    return led._replace(
+        tick=keep(led.tick, jnp.asarray(t, jnp.int32)),
+        kind=keep(led.kind, jnp.asarray(kind, jnp.int32)),
+        tenant=keep(led.tenant, jnp.asarray(tenant, jnp.int32)),
+        value=keep(led.value, jnp.asarray(value, jnp.float32)),
+        head=led.head + cond.astype(jnp.int32),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerRecord:
+    """One drained event, host-side."""
+
+    tick: int
+    kind: int
+    kind_name: str
+    tenant: int
+    value: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def records(led: Ledger) -> tuple[list[LedgerRecord], int]:
+    """Decode a drained ring: (chronological records, exact dropped count).
+
+    With ``head <= capacity`` the ring never wrapped and slots ``[0, head)``
+    are already in push order.  After a wrap the oldest surviving event
+    sits at ``head % capacity`` and the window reads circularly from
+    there; everything pushed before it — exactly ``head - capacity``
+    events — was overwritten (oldest-dropped).
+    """
+    import numpy as np
+
+    tick = np.asarray(led.tick)
+    kind = np.asarray(led.kind)
+    tenant = np.asarray(led.tenant)
+    value = np.asarray(led.value)
+    cap = tick.shape[0]
+    head = int(led.head)
+    n = min(head, cap)
+    dropped = head - n
+    start = head % cap if head > cap else 0
+    order = [(start + i) % cap for i in range(n)]
+    recs = [LedgerRecord(tick=int(tick[i]), kind=int(kind[i]),
+                         kind_name=KIND_NAMES.get(int(kind[i]),
+                                                  f"kind_{int(kind[i])}"),
+                         tenant=int(tenant[i]), value=float(value[i]))
+            for i in order]
+    return recs, dropped

@@ -1,0 +1,382 @@
+"""In-scan metric probes: the ``ObsSpec`` catalog and its carry registers.
+
+``ObsSpec`` is a *static* frozen dataclass riding ``SimConfig.obs``
+(default ``None``), hashable and therefore part of every jit cache key —
+the same contract as ``SimConfig.faults``.  Each probe *family* gates its
+own sub-carry of :class:`ObsCarry` behind a trace-time conditional, so
+enabling the Kalman innovation probe never pays for histograms and a
+``obs=None`` config compiles a step structurally identical to the
+probe-free simulator (the kind="obs" bench gate pins this with a sha256
+digest over the committed baselines).
+
+The probe catalog (one fixed register set per family, all O(W·K) or
+smaller, accumulated inside the scan carry):
+
+  * ``aimd``      — additive-increase vs multiplicative-backoff tick
+                    counts and the deepest acquisition fail-streak seen;
+  * ``kalman``    — per-bank innovation sum / sum-of-squares, NIS sum and
+                    update count (from ``core.kalman.probe``);
+  * ``preempt``   — market preemptions and chaos hard-kills per instance
+                    type;
+  * ``fairshare`` — the eq. 13-14 water level (Σ and running min of the
+                    multiplicative rescale), per-tenant admission rejects,
+                    and queue-depth sum/max;
+  * ``queue_hist``— a fixed-bin in-carry histogram of per-tick queue
+                    depth, from which :func:`drain` reads percentiles;
+  * ``ledger``    — the bounded decision ring (``obs.ledger``).
+
+:func:`update` is the single carry-threading hook ``sim.runner`` calls
+once per tick; :func:`drain` converts the final carry into a host-side
+:class:`ObsReport` of plain numpy values, typed ledger records and a
+``to_dataframe()``/``to_jsonl()`` exporter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+from . import ledger as ledger_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Static probe selection; part of the jit cache key via SimConfig.
+
+    Each flag enables one metric family (its registers join the scan
+    carry and its update ops compile in); ``ledger`` is the decision-ring
+    capacity, 0 = off.  The default enables the cheap counter families
+    and leaves the histogram and the ledger off; ``ObsSpec.full()`` is
+    the everything-on configuration benchmarks use for the overhead gate.
+    """
+
+    aimd: bool = True
+    kalman: bool = True
+    preempt: bool = True
+    fairshare: bool = True
+    queue_hist: bool = False
+    queue_bins: int = 16
+    ledger: int = 0
+
+    def __post_init__(self):
+        if self.queue_bins < 1:
+            raise ValueError(f"queue_bins must be >= 1, got {self.queue_bins}")
+        if self.ledger < 0:
+            raise ValueError(f"ledger capacity must be >= 0, got {self.ledger}")
+        if not (self.aimd or self.kalman or self.preempt or self.fairshare
+                or self.queue_hist or self.ledger):
+            raise ValueError(
+                "ObsSpec with every family off observes nothing — use "
+                "SimConfig.obs=None for the probe-free program")
+
+    @classmethod
+    def full(cls, ledger: int = 256) -> "ObsSpec":
+        """Every probe family on — the overhead-gate configuration."""
+        return cls(aimd=True, kalman=True, preempt=True, fairshare=True,
+                   queue_hist=True, ledger=ledger)
+
+    # The ledger's transition detectors need the AIMD branch / water-level
+    # signals even when the corresponding metric family is off, so the
+    # emission hooks key on these.
+    @property
+    def want_aimd(self) -> bool:
+        return self.aimd or self.ledger > 0
+
+    @property
+    def want_fairshare(self) -> bool:
+        return self.fairshare
+
+    @property
+    def want_preempt(self) -> bool:
+        return self.preempt or self.ledger > 0
+
+
+class AimdMetrics(NamedTuple):
+    n_incr: jnp.ndarray      # () f32 ticks on the additive-increase branch
+    n_backoff: jnp.ndarray   # () f32 ticks on the multiplicative branch
+    streak_max: jnp.ndarray  # () f32 deepest acquisition fail-streak
+
+
+class KalmanMetrics(NamedTuple):
+    innov_sum: jnp.ndarray     # (W, K) Σ innovation
+    innov_sq_sum: jnp.ndarray  # (W, K) Σ innovation²
+    nis_sum: jnp.ndarray       # (W, K) Σ normalized innovation squared
+    n_upd: jnp.ndarray         # (W, K) measurement updates absorbed
+
+
+class PreemptMetrics(NamedTuple):
+    preempt_by_type: jnp.ndarray  # (T,) market preemptions per type
+    kill_by_type: jnp.ndarray     # (T,) chaos hard-kills per type
+
+
+class FairshareMetrics(NamedTuple):
+    water_sum: jnp.ndarray   # () Σ of the eq. 13-14 rescale factor
+    water_min: jnp.ndarray   # () running min of that factor
+    rejects: jnp.ndarray     # (N,) admission rejects per tenant
+    queue_sum: jnp.ndarray   # () Σ active workloads per tick
+    queue_max: jnp.ndarray   # () peak active workloads
+
+
+class QueueHist(NamedTuple):
+    counts: jnp.ndarray      # (bins,) int32 ticks per queue-depth bin
+
+
+class ObsCarry(NamedTuple):
+    """Per-run probe registers carried through the scan; every family is
+    ``None`` when its ``ObsSpec`` flag is off, so the carry — and the
+    compiled scan — only ever holds what was asked for."""
+
+    aimd: AimdMetrics | None = None
+    kalman: KalmanMetrics | None = None
+    preempt: PreemptMetrics | None = None
+    fair: FairshareMetrics | None = None
+    qhist: QueueHist | None = None
+    ledger: "ledger_lib.Ledger | None" = None
+
+
+def init_carry(spec: ObsSpec, *, w: int, k: int, n_types: int,
+               n_tenants: int = 1) -> ObsCarry:
+    z = jnp.asarray(0.0, jnp.float32)
+    aimd = kalman = preempt = fair = qhist = led = None
+    if spec.aimd:
+        aimd = AimdMetrics(n_incr=z, n_backoff=z, streak_max=z)
+    if spec.kalman:
+        zwk = jnp.zeros((w, k), jnp.float32)
+        kalman = KalmanMetrics(innov_sum=zwk, innov_sq_sum=zwk,
+                               nis_sum=zwk, n_upd=zwk)
+    if spec.preempt:
+        zt = jnp.zeros((n_types,), jnp.float32)
+        preempt = PreemptMetrics(preempt_by_type=zt, kill_by_type=zt)
+    if spec.fairshare:
+        fair = FairshareMetrics(
+            water_sum=z, water_min=jnp.asarray(jnp.inf, jnp.float32),
+            rejects=jnp.zeros((n_tenants,), jnp.float32),
+            queue_sum=z, queue_max=z)
+    if spec.queue_hist:
+        qhist = QueueHist(counts=jnp.zeros((spec.queue_bins,), jnp.int32))
+    if spec.ledger > 0:
+        led = ledger_lib.init(spec.ledger)
+    return ObsCarry(aimd=aimd, kalman=kalman, preempt=preempt, fair=fair,
+                    qhist=qhist, ledger=led)
+
+
+class TickSignals(NamedTuple):
+    """One tick's raw probe signals, assembled by the step function.
+
+    Every field is optional: ``None`` means the signal does not exist
+    under this configuration (no spot market → no preemptions, no chaos
+    engine → no fail-streak, no tenants → no admission gate) and the
+    corresponding register simply stays at its initial value.
+    """
+
+    aimd_incr: Any = None        # () bool  additive-increase branch taken
+    water_scale: Any = None      # () f32   eq. 13-14 rescale factor
+    kalman: Any = None           # core.kalman.KalmanProbe (innov/nis/upd)
+    n_target: Any = None         # () f32   this tick's CU target
+    preempt_by_type: Any = None  # (T,) f32 market preemptions
+    kill_by_type: Any = None     # (T,) f32 chaos hard-kills
+    adm_rejects: Any = None      # (N,) f32 per-tenant admission rejects
+    queue_depth: Any = None      # () f32   active workloads after arrivals
+    fail_streak: Any = None      # () f32   consecutive failed acquisitions
+    n_shed: Any = None           # () f32   arrivals shed this tick
+
+
+def update(oc: ObsCarry, spec: ObsSpec, t, sig: TickSignals, *,
+           q_cap: int) -> ObsCarry:
+    """One tick of register accumulation — the carry-threading hook.
+
+    Purely read-only with respect to the simulation: every input is a
+    value the step already computed, no PRNG is consumed, and nothing
+    flows back, so enabling probes cannot perturb a run's results.
+    ``q_cap`` is the (static) workload-row count the queue-depth
+    histogram bins span.
+    """
+    aimd, kalman, preempt, fair, qhist, led = oc
+
+    if spec.aimd:
+        incr = sig.aimd_incr
+        streak = (aimd.streak_max if sig.fail_streak is None
+                  else jnp.maximum(aimd.streak_max, sig.fail_streak))
+        aimd = AimdMetrics(
+            n_incr=aimd.n_incr + incr.astype(jnp.float32),
+            n_backoff=aimd.n_backoff + (~incr).astype(jnp.float32),
+            streak_max=streak)
+
+    if spec.kalman and sig.kalman is not None:
+        kp = sig.kalman
+        kalman = KalmanMetrics(
+            innov_sum=kalman.innov_sum + kp.innov,
+            innov_sq_sum=kalman.innov_sq_sum + kp.innov * kp.innov,
+            nis_sum=kalman.nis_sum + kp.nis,
+            n_upd=kalman.n_upd + kp.upd.astype(jnp.float32))
+
+    if spec.preempt:
+        pre = preempt.preempt_by_type
+        kil = preempt.kill_by_type
+        if sig.preempt_by_type is not None:
+            pre = pre + sig.preempt_by_type
+        if sig.kill_by_type is not None:
+            kil = kil + sig.kill_by_type
+        preempt = PreemptMetrics(preempt_by_type=pre, kill_by_type=kil)
+
+    if spec.fairshare:
+        rej = fair.rejects
+        if sig.adm_rejects is not None:
+            rej = rej + sig.adm_rejects
+        fair = FairshareMetrics(
+            water_sum=fair.water_sum + sig.water_scale,
+            water_min=jnp.minimum(fair.water_min, sig.water_scale),
+            rejects=rej,
+            queue_sum=fair.queue_sum + sig.queue_depth,
+            queue_max=jnp.maximum(fair.queue_max, sig.queue_depth))
+
+    if spec.queue_hist:
+        # Fixed bins over [0, q_cap] queue depth; integer arithmetic so
+        # the bin index is exact for every representable depth.
+        depth = sig.queue_depth.astype(jnp.int32)
+        idx = jnp.clip((depth * spec.queue_bins) // (q_cap + 1),
+                       0, spec.queue_bins - 1)
+        qhist = QueueHist(counts=qhist.counts.at[idx].add(1))
+
+    if spec.ledger > 0:
+        incr = sig.aimd_incr
+        streak = (jnp.asarray(0.0, jnp.float32) if sig.fail_streak is None
+                  else sig.fail_streak)
+        led = ledger_lib.push(
+            led, led.prev_incr & ~incr, t, ledger_lib.KIND_AIMD_BACKOFF,
+            sig.n_target)
+        led = ledger_lib.push(
+            led, (led.prev_streak <= 0.0) & (streak > 0.0), t,
+            ledger_lib.KIND_BACKOFF_ENTER, streak)
+        if sig.preempt_by_type is not None:
+            n_pre = jnp.sum(sig.preempt_by_type)
+            led = ledger_lib.push(led, n_pre > 0.0, t,
+                                  ledger_lib.KIND_PREEMPT, n_pre)
+        if sig.kill_by_type is not None:
+            n_kill = jnp.sum(sig.kill_by_type)
+            led = ledger_lib.push(led, n_kill > 0.0, t,
+                                  ledger_lib.KIND_KILL, n_kill)
+        if sig.adm_rejects is not None:
+            n_rej = jnp.sum(sig.adm_rejects)
+            led = ledger_lib.push(led, n_rej > 0.0, t,
+                                  ledger_lib.KIND_ADM_REJECT, n_rej,
+                                  tenant=jnp.argmax(sig.adm_rejects)
+                                  .astype(jnp.int32))
+        if sig.n_shed is not None:
+            led = ledger_lib.push(led, sig.n_shed > 0.0, t,
+                                  ledger_lib.KIND_SHED, sig.n_shed)
+        led = led._replace(prev_incr=incr, prev_streak=streak)
+
+    return ObsCarry(aimd=aimd, kalman=kalman, preempt=preempt, fair=fair,
+                    qhist=qhist, ledger=led)
+
+
+# --------------------------------------------------------------------------
+# Host-side drain.
+
+def hist_percentile(counts, q: float, q_cap: int) -> float:
+    """Percentile ``q`` in [0, 1] of the binned queue-depth distribution
+    (bin-midpoint convention; NaN for an empty histogram)."""
+    import numpy as np
+
+    counts = np.asarray(counts, np.float64)
+    total = counts.sum()
+    if total <= 0:
+        return float("nan")
+    bins = counts.shape[0]
+    cdf = np.cumsum(counts)
+    idx = int(np.searchsorted(cdf, q * total, side="left"))
+    idx = min(idx, bins - 1)
+    width = (q_cap + 1) / bins
+    return (idx + 0.5) * width
+
+
+@dataclasses.dataclass
+class ObsReport:
+    """A run's drained observability state, host-side numpy throughout."""
+
+    spec: ObsSpec
+    counters: dict                       # scalar gauges/counters by name
+    kalman: dict | None                  # per-bank arrays + fleet scalars
+    preempt_by_type: Any | None          # (T,) numpy
+    kill_by_type: Any | None             # (T,) numpy
+    rejects: Any | None                  # (N,) numpy
+    queue_hist: Any | None               # (bins,) numpy
+    queue_percentiles: dict | None       # {0.5/0.9/0.99: depth}
+    ledger: list                         # [LedgerRecord] chronological
+    ledger_dropped: int                  # exact overwritten-event count
+
+    def to_dataframe(self):
+        """Ledger records as a pandas DataFrame (list of dicts if pandas
+        is unavailable — no new dependency is required to drain a run)."""
+        rows = [r.to_dict() for r in self.ledger]
+        try:
+            import pandas as pd
+        except ImportError:
+            return rows
+        return pd.DataFrame(
+            rows, columns=["tick", "kind", "kind_name", "tenant", "value"])
+
+    def to_jsonl(self, path) -> None:
+        from . import export
+        export.report_jsonl(self, path)
+
+
+def drain(oc: ObsCarry, spec: ObsSpec, *, q_cap: int) -> ObsReport:
+    """Convert the final scan carry's probe registers to an ObsReport."""
+    import numpy as np
+
+    counters: dict = {}
+    kalman = preempt_t = kill_t = rejects = qh = qp = None
+
+    if spec.aimd:
+        counters["aimd_incr_ticks"] = float(oc.aimd.n_incr)
+        counters["aimd_backoff_ticks"] = float(oc.aimd.n_backoff)
+        counters["fail_streak_max"] = float(oc.aimd.streak_max)
+    if spec.kalman:
+        n_upd = np.asarray(oc.kalman.n_upd, np.float64)
+        innov = np.asarray(oc.kalman.innov_sum, np.float64)
+        innov_sq = np.asarray(oc.kalman.innov_sq_sum, np.float64)
+        nis = np.asarray(oc.kalman.nis_sum, np.float64)
+        safe = np.maximum(n_upd, 1.0)
+        kalman = dict(
+            n_upd=n_upd,
+            innov_mean=np.where(n_upd > 0, innov / safe, np.nan),
+            innov_rms=np.where(n_upd > 0, np.sqrt(innov_sq / safe), np.nan),
+            nis_mean=np.where(n_upd > 0, nis / safe, np.nan),
+        )
+        tot = n_upd.sum()
+        counters["kalman_updates"] = float(tot)
+        counters["kalman_nis_mean"] = (
+            float(nis.sum() / tot) if tot > 0 else float("nan"))
+    if spec.preempt:
+        preempt_t = np.asarray(oc.preempt.preempt_by_type)
+        kill_t = np.asarray(oc.preempt.kill_by_type)
+        counters["preemptions"] = float(preempt_t.sum())
+        counters["hard_kills"] = float(kill_t.sum())
+    if spec.fairshare:
+        rejects = np.asarray(oc.fair.rejects)
+        wmin = float(oc.fair.water_min)
+        counters["water_sum"] = float(oc.fair.water_sum)
+        counters["water_min"] = wmin if math.isfinite(wmin) else float("nan")
+        counters["adm_rejects"] = float(rejects.sum())
+        counters["queue_depth_sum"] = float(oc.fair.queue_sum)
+        counters["queue_depth_max"] = float(oc.fair.queue_max)
+    if spec.queue_hist:
+        qh = np.asarray(oc.qhist.counts)
+        qp = {q: hist_percentile(qh, q, q_cap) for q in (0.5, 0.9, 0.99)}
+
+    recs: list = []
+    dropped = 0
+    if spec.ledger > 0:
+        recs, dropped = ledger_lib.records(oc.ledger)
+        counters["ledger_events"] = float(len(recs) + dropped)
+        counters["ledger_dropped"] = float(dropped)
+
+    return ObsReport(spec=spec, counters=counters, kalman=kalman,
+                     preempt_by_type=preempt_t, kill_by_type=kill_t,
+                     rejects=rejects, queue_hist=qh, queue_percentiles=qp,
+                     ledger=recs, ledger_dropped=dropped)

@@ -9,11 +9,11 @@ from ..core.types import PolicyParams, TenantConfig, make_policy_params
 from . import (faults, lambda_model, runner, scenarios, spot, sweep,
                tenants, workloads)
 from .faults import ChaosScenario, FaultConfig, FaultModel, FaultSpec
-from .runner import SimConfig, SimTrace, default_params, run
+from .runner import SimConfig, SimTrace, default_params, run, run_obs
 from .scenarios import ScenarioSet, default_set, paper_scenario
 from .spot import SpotConfig
-from .sweep import (SweepAxes, SweepSpec, SweepStream, make_axes,
-                    run_single, run_sweep)
+from .sweep import (ChunkProfile, SweepAxes, SweepReport, SweepSpec,
+                    SweepStream, make_axes, run_single, run_sweep)
 from .tenants import (TenantRun, TenantSet, TenantSpec, TenantSummary,
                       isolated_runs, run_tenants, tenant_sweep)
 from .workloads import (JaxSchedule, Schedule, paper_schedule,
@@ -23,8 +23,8 @@ __all__ = ["faults", "lambda_model", "runner", "scenarios", "spot", "sweep",
            "tenants", "workloads", "SimConfig", "SimTrace", "run",
            "ChaosScenario", "FaultConfig", "FaultModel", "FaultSpec",
            "ScenarioSet", "default_set", "paper_scenario", "SpotConfig",
-           "SweepAxes", "SweepSpec", "SweepStream", "make_axes",
-           "run_single", "run_sweep",
+           "ChunkProfile", "SweepAxes", "SweepReport", "SweepSpec",
+           "SweepStream", "make_axes", "run_single", "run_sweep", "run_obs",
            "JaxSchedule", "Schedule", "paper_schedule", "uniform_schedule",
            "PolicyParams", "TenantConfig", "make_policy_params",
            "default_params", "TenantRun", "TenantSet", "TenantSpec",

@@ -35,6 +35,7 @@ from ..core import billing as billing_lib
 from ..core import controller as ctrl
 from ..core.types import (ClusterState, ControlParams, PolicyParams,
                           TenantConfig, WorkloadState, make_policy_params)
+from ..obs import probes as obs_lib
 from . import faults as faults_lib
 from . import spot as spot_lib
 from . import workloads as wl
@@ -70,6 +71,13 @@ class SimConfig:
     # baseline.  ``FaultConfig(hardened=False)`` suffers the same faults
     # with the graceful-degradation responses switched off.
     faults: "faults_lib.FaultConfig | None" = None
+    # Observability (``repro.obs``): in-scan metric probes, the decision
+    # ledger, per-family counters/gauges/histograms accumulated in the
+    # scan carry.  Static (hashable, part of every jit cache key, probes
+    # selected per family).  None (default) compiles the exact probe-free
+    # step — runs stay bit-identical to every committed baseline, the
+    # same contract as ``faults=None``.
+    obs: "obs_lib.ObsSpec | None" = None
 
     @property
     def dt(self) -> float:
@@ -229,6 +237,9 @@ class SimState(NamedTuple):
     # so the carry — and the compiled scan — of a fault-free run is
     # untouched.
     faults: "faults_lib.FaultState | None" = None
+    # Observability registers (``repro.obs``); None whenever
+    # ``SimConfig.obs`` is None — the same leafless-carry contract.
+    obs: "obs_lib.ObsCarry | None" = None
 
 
 class SimTrace(NamedTuple):
@@ -333,6 +344,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     pp = default_params(cfg) if params is None else params
     tcfg = cfg.tenants
     fcfg = cfg.faults
+    ocfg = cfg.obs
     hardened = fcfg is not None and fcfg.hardened
     if fcfg is not None and fspec is None:
         fspec = faults_lib.make_fault_spec()
@@ -349,6 +361,10 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     def step(state: SimState, _):
         t = state.t
         key, k_exec = jax.random.split(state.key)
+        # Observability signal slots — assigned below where the matching
+        # plane exists under this config (tenant gate, spot market, chaos
+        # engine), None otherwise.  All trace-time.
+        obs_rej = obs_pre = obs_kill = None
 
         # --- arrivals ------------------------------------------------------
         arrive = (sched.t_arrive == t) & sched.valid
@@ -377,6 +393,12 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
             # contracted cap stops admitting work (default: uncapped).
             spent = state.summ.tenant.cost_u.astype(jnp.float32) / _COST_UNIT
             admit = admit & (spent < tcfg.budget_vec())
+            if ocfg is not None and (ocfg.fairshare or ocfg.ledger > 0):
+                # Rejected arrivals per tenant, read off the gate before it
+                # filters them (observability: fairshare family + ledger).
+                obs_rej = jax.ops.segment_sum(
+                    (arrive & ~admit[tid]).astype(jnp.float32), tid,
+                    num_segments=tcfg.n)
             arrive = arrive & admit[tid]
         work = state.work._replace(
             active=state.work.active | arrive,
@@ -417,6 +439,18 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         # reclaimed slot never renews a quantum at the very price that
         # killed it ---------------------------------------------------------
         if use_spot:
+            if ocfg is not None and ocfg.want_preempt:
+                # Per-type preemption counts: the same hit mask
+                # ``billing.preempt`` is about to apply (phase >= BOOTING
+                # and the clearing price strictly above the slot's bid),
+                # bucketed by instance type before the phases are wiped.
+                pb = jnp.broadcast_to(
+                    jnp.asarray(slot_price, jnp.float32), cluster.bid.shape)
+                p_hit = (cluster.phase >= billing_lib.BOOTING) & (
+                    pb > cluster.bid)
+                obs_pre = jax.ops.segment_sum(
+                    p_hit.astype(jnp.float32), cluster.itype,
+                    num_segments=spot_lib.N_TYPES)
             cluster, _ = billing_lib.preempt(cluster, slot_price)
         # --- wall clock: boots complete, billing quanta renew ---------------
         cluster = billing_lib.advance(cluster, cfg.dt, cfg.ctrl.billing,
@@ -443,6 +477,12 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
             lost = items_done * lost_frac
             new_m = new_m + lost
             done_acc = done_acc - jnp.sum(lost, -1)
+            if ocfg is not None and ocfg.want_preempt:
+                # Chaos hard-kills per type, mirroring kill_slots' hit mask.
+                k_hit = (cluster.phase >= billing_lib.BOOTING) & ftick.kill
+                obs_kill = jax.ops.segment_sum(
+                    k_hit.astype(jnp.float32), cluster.itype,
+                    num_segments=spot_lib.N_TYPES)
             cluster, n_hit = faults_lib.kill_slots(cluster, ftick.kill)
             fstate = fstate._replace(n_killed=fstate.n_killed + n_hit)
         done_acc = jnp.where(arrive, 0.0, done_acc)
@@ -474,7 +514,7 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
             c_state, work, cluster, b_meas, meas_mask, exec_time, items_done,
             cfg.ctrl, cores=cores, pp=pp,
             tenants=(None if tcfg is None else (tid, tcfg.n, base_w)),
-            meas_dropped=meas_dropped)
+            meas_dropped=meas_dropped, obs=ocfg)
         if use_spot:
             rt = spot_state.rt
             # Dynamic bid policy: the TTC-aware signal is how far the most
@@ -591,9 +631,32 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
                 tid, base_w, tcfg.n)),
         )
 
+        # --- observability: accumulate this tick's probe registers ----------
+        # Strictly read-only — every signal is a value computed above, no
+        # PRNG is consumed, nothing flows back into the simulation, so an
+        # obs=None config compiles this block away entirely.
+        obs_c = state.obs
+        if ocfg is not None:
+            pr = dec.probe
+            sig = obs_lib.TickSignals(
+                aimd_incr=pr.aimd_incr,
+                water_scale=pr.water_scale,
+                kalman=pr.kalman,
+                n_target=dec.n_target,
+                preempt_by_type=obs_pre,
+                kill_by_type=obs_kill,
+                adm_rejects=obs_rej,
+                queue_depth=jnp.sum(work.active.astype(jnp.float32)),
+                fail_streak=(fstate.fail_streak
+                             if (fcfg is not None and use_spot) else None),
+                n_shed=(n_shed_now if hardened else None))
+            obs_c = obs_lib.update(state.obs, ocfg, t, sig,
+                                   q_cap=sched.t_arrive.shape[0])
+
         new_state = SimState(c=c_state, work=work, cluster=cluster, s=dec.s,
                              done_acc=done_acc, key=key, t=t + 1,
-                             spot=spot_state, summ=summ, faults=fstate)
+                             spot=spot_state, summ=summ, faults=fstate,
+                             obs=obs_c)
         if not trace:
             return new_state, None
         out = dict(
@@ -681,6 +744,9 @@ def init_state(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         # pending-delivery registers match that, not the schedule's K.
         faults=(None if cfg.faults is None else faults_lib.init_state(
             seed, spot_lib.N_TYPES, w, 1, cfg.pool)),
+        obs=(None if cfg.obs is None else obs_lib.init_carry(
+            cfg.obs, w=w, k=sched.m0.shape[1], n_types=spot_lib.N_TYPES,
+            n_tenants=(1 if cfg.tenants is None else cfg.tenants.n))),
     )
 
 
@@ -853,6 +919,41 @@ def run(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
     violations = count_violations(final.work, sched, cfg)
     return SimTrace(t_done=final.work.t_done, work_final=final.work,
                     violations=violations, **{k: ys[k] for k in ys})
+
+
+def obs_report(final: SimState, cfg: SimConfig,
+               schedule: wl.Schedule | wl.JaxSchedule) -> "obs_lib.ObsReport":
+    """Drain a finished run's observability registers into an ObsReport.
+
+    ``final`` is the scan's final carry (``scan_run``/``cached_scan``
+    return it as the first element); the schedule supplies the queue-depth
+    histogram's static bin span.  Raises if the run was probe-free.
+    """
+    if cfg.obs is None or final.obs is None:
+        raise ValueError("run had no observability enabled — set "
+                         "SimConfig.obs to an ObsSpec")
+    sched = wl.as_jax_schedule(schedule)
+    return obs_lib.drain(final.obs, cfg.obs, q_cap=sched.t_arrive.shape[0])
+
+
+def run_obs(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
+            seed: int | None = None,
+            params: PolicyParams | None = None,
+            fspec: "faults_lib.FaultSpec | None" = None,
+            ) -> "tuple[SimTrace, obs_lib.ObsReport]":
+    """``run`` plus the drained ObsReport, in one cached compile."""
+    s = cfg.seed if seed is None else seed
+    sched = wl.as_jax_schedule(schedule)
+    pp = default_params(cfg) if params is None else params
+    tail: tuple = ()
+    if cfg.faults is not None:
+        tail = (faults_lib.make_fault_spec() if fspec is None else fspec,)
+    final, ys = cached_scan(sched, cfg, trace=True,
+                            with_rt=False)(sched, s, pp, *tail)
+    violations = count_violations(final.work, sched, cfg)
+    trace = SimTrace(t_done=final.work.t_done, work_final=final.work,
+                     violations=violations, **{k: ys[k] for k in ys})
+    return trace, obs_report(final, cfg, sched)
 
 
 def total_cost(trace: SimTrace) -> float:

@@ -73,6 +73,7 @@ import hashlib
 import json
 import os
 import shutil
+import time
 import warnings
 from typing import NamedTuple, Sequence
 
@@ -302,6 +303,10 @@ class SweepSpec:
       * ``resume`` — with ``stream_dir``: reuse committed chunks found in
         the directory (the default).  ``False`` discards them and
         recomputes from scratch.
+      * ``profile`` — wrap the result in a :class:`SweepReport` carrying
+        per-chunk wall-clock (compile vs execute vs chunk-write), the XLA
+        peak-bytes estimate, and a Perfetto trace exporter
+        (``report.write_trace``).
     """
 
     axes: SweepAxes
@@ -320,6 +325,14 @@ class SweepSpec:
     stream_dir: str | os.PathLike | None = dataclasses.field(
         default=None, kw_only=True)
     resume: bool = dataclasses.field(default=True, kw_only=True)
+    # Runtime profiling (``repro.obs`` plane iii): per-chunk wall clock
+    # with the compile vs execute split (AOT ``lower().compile()`` on the
+    # first chunk), XLA peak-bytes estimate, and — when streaming — the
+    # chunk-write time.  ``sweep`` then returns a :class:`SweepReport`
+    # wrapping the unchanged result; the stream manifest gains a
+    # ``"profile"`` record.  Off by default: an unprofiled sweep takes the
+    # exact pre-profiling code path (no timing calls around the dispatch).
+    profile: bool = dataclasses.field(default=False, kw_only=True)
 
     def __post_init__(self):
         # THE validation point for every execution option (the per-function
@@ -629,6 +642,67 @@ def _take_rows(host_tree, rows: int, chunk: int, where: str):
 
 
 # --------------------------------------------------------------------------
+# Runtime profiling (SweepSpec.profile): per-chunk timings + memory.
+
+@dataclasses.dataclass(frozen=True)
+class ChunkProfile:
+    """One micro-batch's runtime profile (``SweepSpec.profile=True``).
+
+    ``compile_s`` is non-zero only on the chunk that triggered the AOT
+    compile (all chunks share one padded shape, hence one executable);
+    ``write_s`` only on streamed sweeps (the atomic chunk-file commit);
+    ``resumed`` marks chunks a streamed sweep found already committed —
+    their timings are zero because no work was re-done.
+    """
+
+    chunk: int
+    rows: int
+    compile_s: float = 0.0
+    execute_s: float = 0.0
+    write_s: float = 0.0
+    peak_bytes: int | None = None   # XLA memory_analysis (temp+out+args)
+    resumed: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepReport:
+    """A profiled sweep's result plus its per-chunk runtime profile.
+
+    ``result`` is exactly what the unprofiled ``sweep`` call would have
+    returned (a summary pytree, or a :class:`SweepStream` handle when
+    streaming) — profiling wraps, never alters.
+    """
+
+    result: object
+    chunks: list          # [ChunkProfile] in chunk order
+    total_s: float        # executor wall clock, compile + dispatch + I/O
+
+    def write_trace(self, path) -> None:
+        """Render the chunk timeline as Chrome/Perfetto trace-event JSON
+        (one complete span per chunk; open in ui.perfetto.dev)."""
+        from ..obs import export
+        export.write_trace(path, export.sweep_trace_events(self.chunks))
+
+
+def _peak_bytes(compiled) -> int | None:
+    """XLA's peak-memory estimate for one compiled chunk executable
+    (temp + output + argument bytes; None where the backend offers no
+    analysis) — same convention as ``benchmarks.bench_throughput``."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    sizes = [getattr(ma, k, None) for k in
+             ("temp_size_in_bytes", "output_size_in_bytes",
+              "argument_size_in_bytes")]
+    if any(s is None for s in sizes):
+        return None
+    return int(sum(sizes))
+
+
+# --------------------------------------------------------------------------
 # Streaming executor: chunk files + manifest, resumable after a kill.
 
 _MANIFEST = "sweep_manifest.json"
@@ -734,6 +808,9 @@ def _stream_init(directory: str, digest: str, b: int, chunk: int,
     elif os.path.exists(path):
         with open(path) as f:
             prev = json.load(f)
+        # A previous profiled run annotates the manifest with its timings;
+        # identity is everything *but* that record.
+        prev = {k: v for k, v in prev.items() if k != "profile"}
         if prev != manifest:
             raise ValueError(
                 f"stream_dir {directory!r} holds a different sweep "
@@ -798,7 +875,8 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
         mesh = mesh_lib.make_sweep_mesh(n_dev)
 
     ftail = () if fspec is None else (fspec,)
-    if spec.chunk_size is None and n_dev == 1 and spec.stream_dir is None:
+    if (spec.chunk_size is None and n_dev == 1 and spec.stream_dir is None
+            and not spec.profile):
         return _sweep_callable(workload, cfg, None)(*axes, sched, pp, *ftail)
 
     chunk = b if spec.chunk_size is None else min(int(spec.chunk_size), b)
@@ -808,20 +886,46 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
     donating = jax.default_backend() != "cpu"
     fn = _sweep_callable(workload, cfg, mesh, donate=True)
     n_chunks = -(-b // chunk)
+    t_sweep = time.perf_counter()
 
     if spec.stream_dir is not None:
-        return _run_streamed(fn, axes, sched, pp, b, chunk, n_chunks,
-                             os.fspath(spec.stream_dir), spec.resume,
-                             donating, workload, check_cfg, fspec=fspec)
+        stream, profiles = _run_streamed(
+            fn, axes, sched, pp, b, chunk, n_chunks,
+            os.fspath(spec.stream_dir), spec.resume,
+            donating, workload, check_cfg, fspec=fspec,
+            profile=spec.profile)
+        if not spec.profile:
+            return stream
+        return SweepReport(result=stream, chunks=profiles,
+                           total_s=time.perf_counter() - t_sweep)
 
     outs = []
+    profiles: list[ChunkProfile] = []
+    compiled = None
+    peak = None
     for i in range(n_chunks):
         lo = i * chunk
         hi = min(lo + chunk, b)
         part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
         fpart = (() if fspec is None else
                  (_pad_fspec(_slice_fspec(fspec, lo, hi), hi - lo, chunk),))
-        res = fn(*part, sched, pp, *fpart)
+        if spec.profile:
+            # Compile-vs-execute split via the AOT path: every chunk is
+            # padded to one shape, so the first chunk's executable serves
+            # them all and only it pays (and reports) the compile.
+            compile_s = 0.0
+            if compiled is None:
+                t0 = time.perf_counter()
+                compiled = fn.lower(*part, sched, pp, *fpart).compile()
+                compile_s = time.perf_counter() - t0
+                peak = _peak_bytes(compiled)
+            t0 = time.perf_counter()
+            res = jax.block_until_ready(compiled(*part, sched, pp, *fpart))
+            profiles.append(ChunkProfile(
+                chunk=i, rows=hi - lo, compile_s=compile_s,
+                execute_s=time.perf_counter() - t0, peak_bytes=peak))
+        else:
+            res = fn(*part, sched, pp, *fpart)
         # Off-device before the next chunk so live bytes stay O(chunk);
         # summaries are plain pytrees of dense arrays, so the transfer is
         # reformat-free.
@@ -834,13 +938,18 @@ def sweep(spec: SweepSpec, cfg: runner.SimConfig):
             raise AssertionError(
                 f"chunked sweep produced {leaf.shape[0]} rows for {b} grid "
                 "points — padded points would leak into the summary")
-    return jax.tree.map(jnp.asarray, cat)
+    result = jax.tree.map(jnp.asarray, cat)
+    if not spec.profile:
+        return result
+    return SweepReport(result=result, chunks=profiles,
+                       total_s=time.perf_counter() - t_sweep)
 
 
 def _run_streamed(fn, axes: SweepAxes, sched, pp, b: int, chunk: int,
                   n_chunks: int, directory: str, resume: bool,
                   donating: bool, workload, check_cfg,
-                  fspec=None) -> SweepStream:
+                  fspec=None, profile: bool = False,
+                  ) -> "tuple[SweepStream, list[ChunkProfile] | None]":
     """Stream each completed chunk's summaries to disk; resumable.
 
     Chunk ``i`` is written atomically as ``step_<i>`` via the
@@ -866,26 +975,69 @@ def _run_streamed(fn, axes: SweepAxes, sched, pp, b: int, chunk: int,
                           min(chunk, b), chunk),))
     struct = jax.eval_shape(fn, *part0, sched, pp, *ftail0)
 
+    profiles: list[ChunkProfile] | None = [] if profile else None
+    compiled = None
+    peak = None
     for i in range(n_chunks):
+        rows = min(chunk, b - i * chunk)
         if i in done:
+            if profile:
+                # Committed on a previous run — no work re-done, so the
+                # span is zero-length but still present in the timeline.
+                profiles.append(ChunkProfile(chunk=i, rows=rows,
+                                             resumed=True))
             continue
         lo = i * chunk
         hi = min(lo + chunk, b)
         part = _pad_axes(_slice_axes(axes, lo, hi, copy=donating), chunk)
         fpart = (() if fspec is None else
                  (_pad_fspec(_slice_fspec(fspec, lo, hi), hi - lo, chunk),))
-        res = fn(*part, sched, pp, *fpart)
+        if profile:
+            compile_s = 0.0
+            if compiled is None:
+                t0 = time.perf_counter()
+                compiled = fn.lower(*part, sched, pp, *fpart).compile()
+                compile_s = time.perf_counter() - t0
+                peak = _peak_bytes(compiled)
+            t0 = time.perf_counter()
+            res = jax.block_until_ready(compiled(*part, sched, pp, *fpart))
+            execute_s = time.perf_counter() - t0
+        else:
+            res = fn(*part, sched, pp, *fpart)
         host = jax.tree.map(np.asarray, res)
         host = _take_rows(host, hi - lo, chunk, "a written chunk file")
+        t0 = time.perf_counter()
         checkpointer.save(directory, i, host)
+        if profile:
+            profiles.append(ChunkProfile(
+                chunk=i, rows=hi - lo, compile_s=compile_s,
+                execute_s=execute_s, write_s=time.perf_counter() - t0,
+                peak_bytes=peak))
         del res, host   # live bytes stay O(chunk) no matter the grid
 
-    return SweepStream(directory=directory, n_points=b, chunk_size=chunk,
-                       n_chunks=n_chunks, manifest=manifest, _struct=struct)
+    if profile:
+        # Persist the run's profile next to the sweep identity.  The
+        # manifest comparison on resume strips this key: profiling a
+        # sweep must never un-resume its own stream_dir.
+        manifest = dict(manifest,
+                        profile=[dataclasses.asdict(p) for p in profiles])
+        path = os.path.join(directory, _MANIFEST)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, path)
+
+    stream = SweepStream(directory=directory, n_points=b, chunk_size=chunk,
+                         n_chunks=n_chunks, manifest=manifest,
+                         _struct=struct)
+    return stream, profiles
 
 
 # --------------------------------------------------------------------------
 # Deprecated wrappers (PR-3-era entry points) and the loop-of-one reference.
+
+_WARNED_RUN_SWEEP = False  # deprecation fires once per process, not per call
+
 
 def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
               axes: SweepAxes, *,
@@ -897,10 +1049,13 @@ def run_sweep(schedule: ScheduleLike, cfg: runner.SimConfig,
     Thin keyword-only wrapper kept so PR-3..6 callers keep working; the
     execution is byte-for-byte the new engine's (same compile cache, same
     chunk padding, same results)."""
-    warnings.warn(
-        "run_sweep is deprecated — build a SweepSpec and call "
-        "repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
-        stacklevel=2)
+    global _WARNED_RUN_SWEEP
+    if not _WARNED_RUN_SWEEP:
+        _WARNED_RUN_SWEEP = True
+        warnings.warn(
+            "run_sweep is deprecated — build a SweepSpec and call "
+            "repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
+            stacklevel=2)
     return sweep(SweepSpec(axes=axes, workload=schedule, params=params,
                            chunk_size=chunk_size, devices=devices), cfg)
 

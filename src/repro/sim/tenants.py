@@ -259,6 +259,9 @@ def _tenant_axes(tset: TenantSet, seeds, bid_mult, instance,
                            policies=None if policy is None else [policy])
 
 
+_WARNED_TENANT_SWEEP = False  # deprecation fires once per process
+
+
 def tenant_sweep(tset: TenantSet, cfg: runner.SimConfig, seeds, *,
                  bid_mult: float = 1.0, instance="m3.medium",
                  policy=None,
@@ -267,10 +270,13 @@ def tenant_sweep(tset: TenantSet, cfg: runner.SimConfig, seeds, *,
     as the workload and call ``sweep.sweep(spec, cfg)`` — which also
     unlocks the chunked / mesh-sharded / streamed execution options this
     per-seed wrapper never had."""
-    warnings.warn(
-        "tenant_sweep is deprecated — build a SweepSpec(workload=tset) "
-        "and call repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
-        stacklevel=2)
+    global _WARNED_TENANT_SWEEP
+    if not _WARNED_TENANT_SWEEP:
+        _WARNED_TENANT_SWEEP = True
+        warnings.warn(
+            "tenant_sweep is deprecated — build a SweepSpec(workload=tset) "
+            "and call repro.sim.sweep.sweep(spec, cfg)", DeprecationWarning,
+            stacklevel=2)
     axes = _tenant_axes(tset, seeds, bid_mult, instance, policy)
     return sweep.sweep(sweep.SweepSpec(axes=axes, workload=tset,
                                        params=params), cfg)

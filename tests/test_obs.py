@@ -1,0 +1,340 @@
+"""The observability plane (``repro.obs``): probe neutrality, family
+gating, the decision-ledger ring, drain/export, sweep profiling, and the
+once-per-process deprecation / fallback warnings.
+
+The load-bearing contract: ``SimConfig.obs=None`` compiles the exact
+probe-free program (its sweep digest is pinned by the committed
+``benchmarks/baselines/BENCH_obs.json``), and every probe is read-only —
+switching any family subset on cannot move one result bit.
+"""
+
+import json
+import pathlib
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.obs import ObsSpec, export, hist_percentile
+from repro.obs import ledger as ledger_lib
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, SweepStream,
+                       TenantSet, TenantSpec, make_axes, paper_schedule,
+                       runner, tenants)
+from repro.sim import scenarios as scen
+from repro.sim import sweep as sweep_mod
+from repro.sim.sweep import sweep
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+# Prime grid (as in test_sweepspec): never divides a chunk or device
+# count, so the profiled chunked/sharded paths below exercise padding.
+PRIME_AXES = make_axes(range(13), [1.1])
+
+
+def _cfg(obs: ObsSpec | None = None) -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(params=ControlParams(monitor_dt=300.0),
+                              billing=BillingParams(terminate="immediate")),
+        ticks=130, spot=SpotConfig(enabled=True), obs=obs)
+
+
+def _assert_same(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------ spec validation
+
+def test_obsspec_with_every_family_off_is_rejected():
+    with pytest.raises(ValueError, match="observes nothing"):
+        ObsSpec(aimd=False, kalman=False, preempt=False, fairshare=False)
+
+
+def test_obsspec_rejects_bad_bins_and_ledger():
+    with pytest.raises(ValueError, match="queue_bins"):
+        ObsSpec(queue_bins=0)
+    with pytest.raises(ValueError, match="ledger"):
+        ObsSpec(ledger=-1)
+
+
+def test_obsspec_is_static_and_hashable():
+    # Part of the jit cache key via SimConfig — must hash and compare.
+    assert hash(ObsSpec.full()) == hash(ObsSpec.full())
+    assert ObsSpec() != ObsSpec.full()
+    # The ledger needs the AIMD/preempt signals even with those metric
+    # families off; the emission hooks key on want_*.
+    s = ObsSpec(aimd=False, kalman=False, preempt=False, fairshare=True,
+                ledger=8)
+    assert s.want_aimd and s.want_preempt
+
+
+# --------------------------------------------------------- ledger ring buffer
+
+def _push_n(led, n, kind=ledger_lib.KIND_PREEMPT):
+    for t in range(n):
+        led = ledger_lib.push(led, jnp.asarray(True), t, kind, float(t))
+    return led
+
+
+def test_ledger_without_wrap_keeps_push_order():
+    recs, dropped = ledger_lib.records(_push_n(ledger_lib.init(4), 3))
+    assert dropped == 0
+    assert [r.tick for r in recs] == [0, 1, 2]
+    assert all(r.kind_name == "preempt" for r in recs)
+    assert all(r.tenant == ledger_lib.NO_TENANT for r in recs)
+
+
+def test_ledger_overflow_drops_exactly_the_oldest():
+    """ISSUE acceptance: oldest-dropped semantics with the exact count —
+    7 pushes into a 4-slot ring keep [3..6] and report 3 dropped."""
+    recs, dropped = ledger_lib.records(_push_n(ledger_lib.init(4), 7))
+    assert dropped == 3
+    assert [r.tick for r in recs] == [3, 4, 5, 6]
+    assert [r.value for r in recs] == [3.0, 4.0, 5.0, 6.0]
+
+
+def test_ledger_exactly_full_is_not_a_wrap():
+    recs, dropped = ledger_lib.records(_push_n(ledger_lib.init(4), 4))
+    assert dropped == 0
+    assert [r.tick for r in recs] == [0, 1, 2, 3]
+
+
+def test_ledger_false_condition_is_a_noop():
+    led = _push_n(ledger_lib.init(4), 2)
+    same = ledger_lib.push(led, jnp.asarray(False), 99,
+                           ledger_lib.KIND_KILL, 123.0)
+    assert int(same.head) == int(led.head) == 2
+    _assert_same(led, same)
+
+
+def test_ledger_push_compiles_under_jit():
+    @jax.jit
+    def f(led):
+        return ledger_lib.push(led, jnp.asarray(True), 5,
+                               ledger_lib.KIND_SHED, 2.0)
+
+    recs, _ = ledger_lib.records(f(ledger_lib.init(3)))
+    assert [(r.tick, r.kind_name, r.value) for r in recs] == [(5, "shed", 2.0)]
+
+
+# --------------------------------------------------- neutrality & family gating
+
+def test_full_probe_catalog_leaves_the_run_bit_identical():
+    """Plane-i acceptance: every family on + ledger + histogram, and the
+    per-tick trace still matches the probe-free program bit for bit."""
+    ref = runner.run(SCHED, _cfg(), seed=0)
+    tr, report = runner.run_obs(SCHED, _cfg(ObsSpec.full(ledger=64)), seed=0)
+    _assert_same(ref, tr)
+    # The probes actually observed something while changing nothing.
+    assert report.counters["aimd_incr_ticks"] > 0
+    assert report.counters["queue_depth_max"] > 0
+    assert report.queue_percentiles is not None
+
+
+def test_probe_families_are_independent():
+    """Enabling a family never perturbs another: the aimd/kalman counters
+    drained from a minimal spec equal the full-catalog ones, and the run
+    itself stays bit-identical under every subset."""
+    ref = runner.run(SCHED, _cfg(), seed=3)
+    _, full = runner.run_obs(SCHED, _cfg(ObsSpec.full(ledger=64)), seed=3)
+    subsets = (
+        ObsSpec(aimd=True, kalman=False, preempt=False, fairshare=False),
+        ObsSpec(aimd=False, kalman=True, preempt=False, fairshare=False),
+        ObsSpec(aimd=False, kalman=False, preempt=True, fairshare=True),
+    )
+    for spec in subsets:
+        tr, rep = runner.run_obs(SCHED, _cfg(spec), seed=3)
+        _assert_same(ref, tr)
+        for name, val in rep.counters.items():
+            assert full.counters[name] == pytest.approx(val, nan_ok=True), \
+                name
+
+
+def test_sweep_digest_matches_committed_baseline():
+    """The obs=None program is digest-pinned: recompute the baseline's
+    smoke neutrality sweep and compare sha256s — any drift in the
+    probe-free simulator (or a probe that leaks into it) fails here
+    before the bench gate ever runs."""
+    path = REPO / "benchmarks" / "baselines" / "BENCH_obs.json"
+    baseline = json.loads(path.read_text())
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks import bench_obs
+    finally:
+        sys.path.remove(str(REPO))
+    cfgrec = baseline["config"]
+    axes = bench_obs._axes(cfgrec["seeds"], cfgrec["bid_mults"])
+    off = sweep(SweepSpec(axes=axes, workload=bench_obs._sched()),
+                bench_obs._cfg())
+    assert bench_obs._summary_digest(off) == baseline["neutrality"]["digest"]
+
+
+def test_obs_report_requires_probes():
+    with pytest.raises(ValueError, match="no observability"):
+        runner.run_obs(SCHED, _cfg(), seed=0)
+
+
+# ----------------------------------------------------------- drain & exports
+
+def test_hist_percentile_bin_midpoints():
+    # 4 bins over depths [0, 7]: width 2, midpoints 1/3/5/7.
+    counts = np.asarray([5, 5, 0, 0])
+    assert hist_percentile(counts, 0.5, q_cap=7) == pytest.approx(1.0)
+    assert hist_percentile(counts, 0.9, q_cap=7) == pytest.approx(3.0)
+    assert np.isnan(hist_percentile(np.zeros(4), 0.5, q_cap=7))
+
+
+@pytest.fixture(scope="module")
+def full_report():
+    _, report = runner.run_obs(SCHED, _cfg(ObsSpec.full(ledger=64)), seed=0)
+    return report
+
+
+def test_report_dataframe_and_jsonl(full_report, tmp_path):
+    rows = full_report.to_dataframe()
+    n = len(full_report.ledger)
+    assert len(rows) == n
+    path = tmp_path / "ledger.jsonl"
+    full_report.to_jsonl(path)
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert lines[0]["record"] == "counters"
+    assert lines[0]["ledger_dropped"] == full_report.ledger_dropped
+    events = [line for line in lines[1:] if line["record"] == "event"]
+    assert len(events) == n
+    for ev, rec in zip(events, full_report.ledger):
+        assert ev["tick"] == rec.tick and ev["kind_name"] == rec.kind_name
+
+
+def test_run_trace_events_one_instant_per_ledger_record(full_report,
+                                                        tmp_path):
+    events = export.run_trace_events(full_report, dt=300.0)
+    instants = [e for e in events if e.get("ph") == "i"]
+    assert len(instants) == len(full_report.ledger)
+    for ev, rec in zip(instants, full_report.ledger):
+        assert ev["ts"] == pytest.approx(rec.tick * 300.0 * 1e6)
+        assert ev["name"] == rec.kind_name
+    path = tmp_path / "trace.json"
+    export.write_trace(path, events)
+    env = json.loads(path.read_text())
+    assert set(env) == {"traceEvents", "displayTimeUnit"}
+    assert len(env["traceEvents"]) == len(events)
+
+
+def test_sweep_trace_events_lay_chunks_end_to_end():
+    chunks = [
+        sweep_mod.ChunkProfile(chunk=0, rows=4, compile_s=1.0,
+                               execute_s=0.5, peak_bytes=10),
+        sweep_mod.ChunkProfile(chunk=1, rows=4, execute_s=0.25,
+                               write_s=0.25),
+        sweep_mod.ChunkProfile(chunk=2, rows=1, resumed=True),
+    ]
+    spans = [e for e in export.sweep_trace_events(chunks)
+             if e.get("ph") == "X"]
+    assert [e["ts"] for e in spans] == [0.0, 1.5e6, 2.0e6]
+    assert [e["dur"] for e in spans] == [1.5e6, 0.5e6, 0.0]
+    assert spans[0]["args"]["peak_bytes"] == 10
+    assert spans[2]["args"]["resumed"] is True
+    # The manifest's "profile" record (plain dicts) renders identically.
+    import dataclasses
+    dicts = [dataclasses.asdict(c) for c in chunks]
+    assert export.sweep_trace_events(dicts) == export.sweep_trace_events(
+        chunks)
+
+
+# ----------------------------------------------------------- sweep profiling
+
+def test_profiled_sweep_wraps_the_unchanged_result():
+    """SweepSpec.profile wraps, never alters: same summaries, plus one
+    ChunkProfile per chunk with the compile cost on the first chunk only.
+    Under the multi-device CI job (4 forced CPU devices) this exercises
+    the shard_map path — `devices` defaults to every local device."""
+    cfg = _cfg()
+    ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
+    rep = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                          profile=True), cfg)
+    assert isinstance(rep, sweep_mod.SweepReport)
+    _assert_same(ref, rep.result)
+    assert [c.chunk for c in rep.chunks] == [0, 1, 2, 3]
+    assert sum(c.rows for c in rep.chunks) == 13
+    assert rep.chunks[0].compile_s > 0.0
+    assert all(c.compile_s == 0.0 for c in rep.chunks[1:])
+    assert all(c.execute_s > 0.0 for c in rep.chunks)
+    assert rep.total_s >= sum(c.compile_s + c.execute_s for c in rep.chunks)
+
+
+def test_profiled_streamed_sweep_manifest_trace_and_resume(tmp_path):
+    cfg = _cfg()
+    d = str(tmp_path / "stream")
+    spec = SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                     stream_dir=d, profile=True)
+    rep = sweep(spec, cfg)
+    assert isinstance(rep, sweep_mod.SweepReport)
+    assert isinstance(rep.result, SweepStream)
+    assert all(c.write_s > 0.0 for c in rep.chunks)
+    # The profile persists in the stream manifest, and the Perfetto export
+    # carries exactly one complete span per chunk.
+    assert len(rep.result.manifest["profile"]) == len(rep.chunks) == 4
+    trace = tmp_path / "sweep_trace.json"
+    rep.write_trace(trace)
+    spans = [e for e in json.loads(trace.read_text())["traceEvents"]
+             if e.get("ph") == "X"]
+    assert len(spans) == 4
+    assert all({"compile_s", "execute_s", "write_s"} <= set(e["args"])
+               for e in spans)
+    # Re-running resumes every committed chunk as a zero-length span...
+    again = sweep(spec, cfg)
+    assert all(c.resumed for c in again.chunks)
+    _assert_same(rep.result.load(), again.result.load())
+    # ...and an unprofiled re-run still resumes the same directory (the
+    # manifest identity strips the profile record).
+    plain = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED, chunk_size=4,
+                            stream_dir=d), cfg)
+    assert isinstance(plain, SweepStream)
+    _assert_same(rep.result.load(), plain.load())
+
+
+# ----------------------------------------------- once-per-process warnings
+
+def test_run_sweep_deprecation_fires_once_per_process(monkeypatch):
+    monkeypatch.setattr(sweep_mod, "_WARNED_RUN_SWEEP", False)
+    axes = make_axes([0], [1.1])
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        sweep_mod.run_sweep(SCHED, _cfg(), axes)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sweep_mod.run_sweep(SCHED, _cfg(), axes)
+
+
+def test_tenant_sweep_deprecation_fires_once_per_process(monkeypatch):
+    monkeypatch.setattr(tenants, "_WARNED_TENANT_SWEEP", False)
+    sset = scen.default_set()
+    tset = TenantSet(tuple(TenantSpec(scenario=s, name=f"t{i}")
+                           for i, s in enumerate(sset.specs[:2])))
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        tenants.tenant_sweep(tset, _cfg(), [0])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        tenants.tenant_sweep(tset, _cfg(), [0])
+
+
+def test_kernel_interpret_fallback_warns_once_with_platform(monkeypatch):
+    from repro.kernels.kalman_update import kernel
+    if jax.default_backend() == "tpu":
+        pytest.skip("the interpret fallback never fires on TPU")
+    monkeypatch.setattr(kernel, "_WARNED_INTERPRET", False)
+    with pytest.warns(UserWarning, match="interpret mode") as rec:
+        assert kernel.resolve_interpret(None) is True
+    assert jax.default_backend() in str(rec[0].message)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", UserWarning)
+        assert kernel.resolve_interpret(None) is True
+        # An explicit choice is honored silently either way.
+        assert kernel.resolve_interpret(False) is False

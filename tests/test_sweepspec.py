@@ -111,7 +111,10 @@ def test_runner_options_are_keyword_only():
 
 # ------------------------------------------------- facade vs deprecated shims
 
-def test_run_sweep_shim_warns_and_matches_facade():
+def test_run_sweep_shim_warns_and_matches_facade(monkeypatch):
+    # The deprecation fires once per process — rearm it so this test
+    # passes regardless of which earlier test file hit the shim first.
+    monkeypatch.setattr(sweep_mod, "_WARNED_RUN_SWEEP", False)
     cfg = _cfg()
     ref = sweep(SweepSpec(axes=PRIME_AXES, workload=SCHED), cfg)
     with pytest.warns(DeprecationWarning, match="SweepSpec"):
@@ -119,7 +122,8 @@ def test_run_sweep_shim_warns_and_matches_facade():
     _assert_same(ref, legacy)
 
 
-def test_tenant_sweep_shim_warns_and_matches_facade():
+def test_tenant_sweep_shim_warns_and_matches_facade(monkeypatch):
+    monkeypatch.setattr(tenants, "_WARNED_TENANT_SWEEP", False)
     cfg = _cfg()
     sset = scen.default_set()
     tset = TenantSet(tuple(TenantSpec(scenario=s, name=f"t{i}")
