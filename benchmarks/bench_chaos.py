@@ -164,7 +164,10 @@ def run_zero_fault(seeds) -> dict:
     off = sweep(SweepSpec(axes=axes, workload=sched), _cfg())
     h = hashlib.sha256()
     for f in type(off)._fields:
-        h.update(np.ascontiguousarray(np.asarray(getattr(off, f))).tobytes())
+        v = getattr(off, f)
+        if v is None:   # leafless fields (alerts without obs.detect)
+            continue    # contribute nothing, keeping old digests stable
+        h.update(np.ascontiguousarray(np.asarray(v)).tobytes())
     return {"neutral_exact": bool(neutral_exact), "digest": h.hexdigest()}
 
 

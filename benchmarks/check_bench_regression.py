@@ -76,13 +76,21 @@ spot/bidding report).
 
   * an acceptance flag flips: ``neutral_exact`` (the full probe catalog
     no longer reproduces the probe-free program bit for bit, or the
-    compiled-out path changed), ``overhead_bounded``, or ``exports_ok``
-    (the Perfetto chunk timeline / ledger exporters broke);
-  * the probe-free sweep digest differs from the baseline's — some PR
-    perturbed the ``obs=None`` program's bits (the static-gating
-    contract, the observability twin of the chaos zero-fault digest);
-  * the full-probe overhead ratio exceeds ``OBS_OVERHEAD_CEILING``
-    (hard ceiling, baseline-independent).
+    compiled-out path changed), ``overhead_bounded``, ``exports_ok``
+    (the Perfetto chunk timeline / ledger exporters broke), or
+    ``calibration_ok``;
+  * either neutrality digest — ``obs=None`` probes compiled out, or
+    ``detect=None`` full probes with detectors compiled out — differs
+    from the baseline's: some PR perturbed those programs' bits (the
+    static-gating contract, the observability twin of the chaos
+    zero-fault digest);
+  * the full-catalog (probes + armed detectors) overhead ratio exceeds
+    ``OBS_OVERHEAD_CEILING`` (hard ceiling, baseline-independent);
+  * detector calibration regresses: the clean paper replay or any
+    fault-free chaos-scenario variant fires an alert (false positive),
+    or a committed chaos scenario stops firing at least one alert per
+    seed with the first tick inside its fault window (missed / mis-
+    localized fault).
 
 ``BENCH_tenants.json`` (``bench_tenants --smoke``):
 
@@ -95,6 +103,14 @@ spot/bidding report).
     profit tuner regressed);
   * any tracked tenant level's consolidation saving goes non-positive, or
     its shared-fleet violation count grows beyond baseline.
+
+On any gate failure the checker additionally runs the cross-run
+attribution diff (``repro.obs.compare``): it prints the **first diverging
+deterministic leaf** between the current report and the baseline (digests
+and acceptance flags rank first — one flipped digest explains every
+numeric drift below it) and writes the full divergence list to
+``results/bench_attribution.json`` so the artifact upload carries the
+localization, not just the red flag.
 
 Exit code 0 = gate passed.  Anything else fails the job; the JSON is
 uploaded as an artifact either way so the trajectory stays inspectable.
@@ -114,6 +130,8 @@ import glob
 import json
 import os
 import sys
+
+ATTRIBUTION_PATH = os.path.join("results", "bench_attribution.json")
 
 SAVING_FLOOR_PCT = 27.0
 COST_TOLERANCE = 1.5
@@ -457,26 +475,34 @@ def check_obs(current: dict, baseline: dict) -> list[str]:
         ),
         (
             "overhead_bounded",
-            "full-catalog probes exceeded the overhead ceiling over the "
-            "probe-free runtime",
+            "the full catalog (probes + armed detectors) exceeded the "
+            "overhead ceiling over the probe-free runtime",
         ),
         (
             "exports_ok",
             "the Perfetto chunk-timeline / ledger exporters no longer "
             "produce well-formed traces",
         ),
+        (
+            "calibration_ok",
+            "detector calibration broke — false positives on a clean "
+            "replay, or a chaos scenario whose fault the detectors miss "
+            "or mislocalize",
+        ),
     ):
         if not acc.get(flag):
             errors.append(f"acceptance flag {flag} is false: {why}")
 
-    cur_digest = current.get("neutrality", {}).get("digest")
-    base_digest = baseline.get("neutrality", {}).get("digest")
-    if cur_digest != base_digest:
-        errors.append(
-            "probe-free sweep digest changed: the obs=None program is no "
-            f"longer bit-identical to the baseline ({cur_digest} vs "
-            f"{base_digest})"
-        )
+    for key, what in (("digest", "obs=None"),
+                      ("digest_detect_none", "detect=None")):
+        cur_digest = current.get("neutrality", {}).get(key)
+        base_digest = baseline.get("neutrality", {}).get(key)
+        if cur_digest != base_digest:
+            errors.append(
+                f"probe-free sweep {key} changed: the {what} program is no "
+                f"longer bit-identical to the baseline ({cur_digest} vs "
+                f"{base_digest})"
+            )
 
     ratio = current.get("overhead", {}).get("overhead_ratio")
     if ratio is None or ratio > OBS_OVERHEAD_CEILING:
@@ -484,6 +510,38 @@ def check_obs(current: dict, baseline: dict) -> list[str]:
             f"full-probe overhead ratio {ratio} exceeds the "
             f"{OBS_OVERHEAD_CEILING} ceiling over the probe-free runtime"
         )
+
+    cal = current.get("calibration", {})
+    clean = cal.get("clean", {}).get("alerts")
+    if clean is None or clean > 0:
+        errors.append(
+            f"detector false-positive gate: clean paper replay fired "
+            f"{clean} alert(s), expected 0"
+        )
+    for name in baseline.get("calibration", {}).get("scenarios", {}):
+        cur_sc = cal.get("scenarios", {}).get(name)
+        if cur_sc is None:
+            errors.append(
+                f"calibration.scenarios[{name}] missing from current "
+                "results")
+            continue
+        if cur_sc.get("fault_free_alerts", 1) > 0:
+            errors.append(
+                f"calibration.scenarios[{name}] fault-free variant fired "
+                f"{cur_sc['fault_free_alerts']} alert(s), expected 0"
+            )
+        if min(cur_sc.get("alerts_per_seed", []), default=0) < 1:
+            errors.append(
+                f"calibration.scenarios[{name}] detectors missed the "
+                f"injected fault on some seed "
+                f"(alerts_per_seed={cur_sc.get('alerts_per_seed')})"
+            )
+        elif not cur_sc.get("first_in_window"):
+            errors.append(
+                f"calibration.scenarios[{name}] first alert tick(s) "
+                f"{cur_sc.get('first_ticks')} fell outside the fault "
+                f"window {cur_sc.get('window')}"
+            )
     return errors
 
 
@@ -547,8 +605,81 @@ def check_tenants(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
-def check_pair(current_path: str, baseline_path: str) -> int:
-    """Gate one (current, baseline) JSON pair; returns the exit code."""
+_CHECKERS = {
+    "spot": check,
+    "throughput": check_throughput,
+    "scenarios": check_scenarios,
+    "tuning": check_tuning,
+    "chaos": check_chaos,
+    "obs": check_obs,
+    "tenants": check_tenants,
+}
+
+
+def gate_errors(current: dict, baseline: dict) -> list[str]:
+    """Dispatch a (current, baseline) report pair to its ``kind``'s rule
+    set and return the gate failures (empty = pass).  The embeddable form
+    of :func:`check_pair` — ``benchmarks/run.py`` uses it to fold gate
+    status into its ``--json`` machine summary without re-running this
+    script as a subprocess."""
+    kind_cur = current.get("kind", "spot")
+    kind_base = baseline.get("kind", "spot")
+    if kind_cur != kind_base:
+        return [f"report kind mismatch: current {kind_cur!r} vs "
+                f"baseline {kind_base!r}"]
+    checker = _CHECKERS.get(kind_cur)
+    if checker is None:
+        return [f"unknown report kind {kind_cur!r}"]
+    return checker(current, baseline)
+
+
+def _attribute(current: dict, baseline: dict, errors: list[str],
+               name: str) -> dict | None:
+    """First-divergence attribution for a failed pair (None if the
+    compare module is unavailable — the gate itself never depends on it)."""
+    try:
+        from repro.obs import compare
+    except ImportError:
+        here = os.path.dirname(os.path.abspath(__file__))
+        sys.path.insert(0, os.path.join(here, os.pardir, "src"))
+        try:
+            from repro.obs import compare
+        except ImportError:
+            print("attribution skipped: repro.obs.compare not importable",
+                  file=sys.stderr)
+            return None
+    report = compare.attribution(current, baseline, gate_errors=errors)
+    report["baseline"] = name
+    first = report["first_divergence"]
+    if first is None:
+        print("ATTRIBUTION: no deterministic leaf diverged — the failure "
+              "is a hard floor/ceiling breach, not a baseline drift",
+              file=sys.stderr)
+    else:
+        print(f"ATTRIBUTION: first divergence at {first['path']}: "
+              f"current={first['current']} vs baseline={first['baseline']}"
+              + (f" ({first['detail']})" if first.get("detail") else ""),
+              file=sys.stderr)
+        print(f"ATTRIBUTION: {report['n_divergences']} deterministic "
+              f"leaf(s) diverged, {report['n_noise']} wall-clock leaf(s) "
+              f"classified as noise", file=sys.stderr)
+    return report
+
+
+def write_attribution(reports: list[dict],
+                      path: str = ATTRIBUTION_PATH) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"attributions": reports}, f, indent=2, sort_keys=True)
+    print(f"attribution report written to {path}", file=sys.stderr)
+
+
+def check_pair(current_path: str, baseline_path: str,
+               attributions: list[dict] | None = None) -> int:
+    """Gate one (current, baseline) JSON pair; returns the exit code.
+
+    On failure, appends the first-divergence attribution report to
+    ``attributions`` (when given) after printing its headline."""
     with open(current_path) as f:
         current = json.load(f)
     with open(baseline_path) as f:
@@ -564,8 +695,8 @@ def check_pair(current_path: str, baseline_path: str) -> int:
         )
         return 1
 
+    errors = gate_errors(current, baseline)
     if kind_cur == "throughput":
-        errors = check_throughput(current, baseline)
         front = current.get("grids", {}).get("frontier", {})
         streamed = current.get("grids", {}).get("streamed", {})
         print(
@@ -576,7 +707,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"streamed_ok={current.get('acceptance', {}).get('streamed_ok')}"
         )
     elif kind_cur == "scenarios":
-        errors = check_scenarios(current, baseline)
         savings = {
             name: round(sc.get("saving_pct", float("nan")), 1)
             for name, sc in current.get("scenarios", {}).items()
@@ -588,7 +718,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"scenario_savings={savings}"
         )
     elif kind_cur == "tuning":
-        errors = check_tuning(current, baseline)
         improvements = {
             name: round(sc.get("improvement_pct", float("nan")), 1)
             for name, sc in current.get("scenarios", {}).items()
@@ -602,7 +731,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"improvements_pct={improvements}"
         )
     elif kind_cur == "chaos":
-        errors = check_chaos(current, baseline)
         margins = {
             name: round(sc.get("margin_pct", float("nan")), 1)
             for name, sc in current.get("scenarios", {}).items()
@@ -618,7 +746,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"margins_pct={margins}"
         )
     elif kind_cur == "obs":
-        errors = check_obs(current, baseline)
         acc = current.get("acceptance", {})
         print(
             f"bench gate [obs]: neutral_exact={acc.get('neutral_exact')} "
@@ -628,7 +755,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"exports_ok={acc.get('exports_ok')}"
         )
     elif kind_cur == "tenants":
-        errors = check_tenants(current, baseline)
         savings = {
             n: round(row.get("saving_pct", float("nan")), 1)
             for n, row in current.get("consolidation", {}).items()
@@ -642,7 +768,6 @@ def check_pair(current_path: str, baseline_path: str) -> int:
             f"consolidation_savings_pct={savings}"
         )
     else:
-        errors = check(current, baseline)
         saving = current.get("headline", {}).get("saving_pct", float("nan"))
         accepted = current.get("acceptance", {}).get("dynamic_beats_static")
         print(
@@ -653,6 +778,10 @@ def check_pair(current_path: str, baseline_path: str) -> int:
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)
+        report = _attribute(current, baseline, errors,
+                            os.path.basename(baseline_path))
+        if report is not None and attributions is not None:
+            attributions.append(report)
         return 1
     print("bench gate passed: no benchmark regressions vs baseline")
     return 0
@@ -670,10 +799,14 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--baselines-dir", default="benchmarks/baselines")
     args = ap.parse_args(argv)
 
+    attributions: list[dict] = []
     if not args.auto:
         if not (args.current and args.baseline):
             ap.error("need CURRENT and BASELINE paths (or --auto)")
-        return check_pair(args.current, args.baseline)
+        rc = check_pair(args.current, args.baseline, attributions)
+        if attributions:
+            write_attribution(attributions)
+        return rc
 
     baselines = sorted(glob.glob(os.path.join(args.baselines_dir,
                                               "BENCH_*.json")))
@@ -690,7 +823,11 @@ def main(argv: list[str] | None = None) -> int:
             rc = 1
             continue
         print(f"--- {os.path.basename(baseline)}")
-        rc = max(rc, check_pair(current, baseline))
+        rc = max(rc, check_pair(current, baseline, attributions))
+    if attributions:
+        write_attribution(attributions,
+                          os.path.join(args.results_dir,
+                                       "bench_attribution.json"))
     return rc
 
 

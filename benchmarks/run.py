@@ -17,9 +17,14 @@ acceptance check) is reported in its ``_suite_*`` row and turns the exit
 code non-zero, but never hides the remaining suites.
 
 ``--json PATH`` additionally writes a machine-readable report — one
-record per suite (name, ok, wall_s, error) plus the overall verdict —
-for CI artifact upload and downstream dashboards; the CSV on stdout is
-unchanged.
+record per suite (name, ok, wall_s, error, and ``gate``: the regression
+verdict of the suite's ``results/BENCH_*.json`` against its committed
+baseline, via ``check_bench_regression.gate_errors``) plus the overall
+verdict — for CI artifact upload and downstream dashboards; the CSV on
+stdout is unchanged.  The gate column is advisory inside this report
+(CI still runs ``check_bench_regression --auto`` as its own failing
+step, with attribution); suites whose artifact has no committed
+baseline report ``gate: null``.
 
 CLI:  PYTHONPATH=src python -m benchmarks.run [--smoke] [--json PATH] [suite]
 """
@@ -34,6 +39,8 @@ import pathlib
 import sys
 import time
 
+BASELINES_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
 
 def discover() -> dict:
     """suite name → module *name*, for every ``bench_*.py`` beside this
@@ -43,6 +50,34 @@ def discover() -> dict:
     package = __package__ or "benchmarks"
     return {path.stem[len("bench_"):]: f"{package}.{path.stem}"
             for path in sorted(here.glob("bench_*.py"))}
+
+
+def _suite_gate(started: float) -> tuple[bool | None, list[str]]:
+    """Regression-gate every ``results/BENCH_*.json`` the suite that just
+    ran (re)wrote, against its committed baseline.  Returns the combined
+    verdict (``None`` when no refreshed artifact has a baseline) and the
+    per-artifact failure messages."""
+    try:
+        from .check_bench_regression import gate_errors
+    except ImportError:          # direct script execution
+        from check_bench_regression import gate_errors
+    verdict: bool | None = None
+    errors: list[str] = []
+    for artifact in sorted(pathlib.Path("results").glob("BENCH_*.json")):
+        if artifact.stat().st_mtime < started:
+            continue             # stale: written by an earlier suite/run
+        baseline = BASELINES_DIR / artifact.name
+        if not baseline.exists():
+            continue
+        try:
+            current = json.loads(artifact.read_text())
+            base = json.loads(baseline.read_text())
+            errs = gate_errors(current, base)
+        except (OSError, ValueError) as e:
+            errs = [f"unreadable ({e})"]
+        verdict = (verdict is not False) and not errs
+        errors.extend(f"{artifact.name}: {e}" for e in errs)
+    return verdict, errors
 
 
 def _call_suite(module_name: str, emit, smoke: bool) -> None:
@@ -86,22 +121,27 @@ def main(argv: list[str] | None = None) -> int:
         try:
             _call_suite(module_name, emit, args.smoke)
             wall = time.time() - t0
-            emit(f"_suite_{name}_wall_s", wall, "ok")
+            gate, gate_errs = _suite_gate(t0)
+            status = "ok" if gate is None else f"ok;gate={'pass' if gate else 'FAIL'}"
+            emit(f"_suite_{name}_wall_s", wall, status)
             records.append({"suite": name, "ok": True,
-                            "wall_s": round(wall, 3), "error": None})
+                            "wall_s": round(wall, 3), "error": None,
+                            "gate": gate, "gate_errors": gate_errs})
         except (Exception, SystemExit) as e:  # a failed suite (even at
             wall = time.time() - t0           # import) must not hide the
             err = f"{type(e).__name__}:{e}"   # others
             emit(f"_suite_{name}_wall_s", wall, f"FAILED:{err}")
             records.append({"suite": name, "ok": False,
-                            "wall_s": round(wall, 3), "error": err})
+                            "wall_s": round(wall, 3), "error": err,
+                            "gate": None, "gate_errors": []})
             failures.append(name)
     if args.json:
         path = pathlib.Path(args.json)
         path.parent.mkdir(parents=True, exist_ok=True)
+        gates_ok = all(r["gate"] is not False for r in records)
         path.write_text(json.dumps(
             {"smoke": bool(args.smoke), "ok": not failures,
-             "suites": records}, indent=2) + "\n")
+             "gates_ok": gates_ok, "suites": records}, indent=2) + "\n")
     if failures:
         print(f"benchmark suites failed: {', '.join(failures)}",
               file=sys.stderr)

@@ -146,7 +146,7 @@ def step(state: ControllerState,
     # there with inflated covariance instead of silently standing still.
     k_probe = None
     if cfg.predictor == "kalman":
-        if obs is not None and obs.kalman:
+        if obs is not None and obs.want_kalman:
             # Innovation/NIS from the *pre-update* bank — the residual
             # eq. 8 is about to correct with (trace-time gated: probe-free
             # configs compile the exact historical update).

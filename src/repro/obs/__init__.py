@@ -1,6 +1,6 @@
-"""Observability layer: in-scan probes, decision ledger, sweep profiling.
+"""Observability layer: in-scan probes, ledger, detectors, attribution.
 
-Three planes, all zero-cost when off:
+Five planes, all zero-cost when off:
 
   1. **In-scan metric probes** (``probes``): ``ObsSpec`` rides
      ``SimConfig.obs`` (default ``None``) and selects per-family counter /
@@ -16,6 +16,17 @@ Three planes, all zero-cost when off:
      wall-clock, compile-vs-execute split and XLA peak-bytes land in the
      stream manifest and a ``SweepReport``; ``export`` renders a run's
      ledger or a sweep's chunk timeline as Chrome/Perfetto trace JSON.
+  4. **In-scan anomaly detection** (``detect``): CUSUM/EWMA change-point
+     detectors, a chi-square NIS band test over the Kalman innovation
+     probes and multi-window SLO burn-rate tracking ride
+     ``ObsSpec.detect`` (default ``None``, compiled out) and fire
+     fixed-shape alert events — with severity and subject — into the
+     ledger ring; ``metrics`` exposes any report as OpenMetrics text and
+     live-tails streamed sweep directories.
+  5. **Cross-run attribution** (``compare``): diff two ObsReports family
+     by family — or two benchmark JSON artifacts leaf by leaf — and
+     localize the first divergence; the CI bench gate prints and uploads
+     that localization whenever it fails.
 
 Carry-threading contract (what ``sim.runner`` guarantees):
 
@@ -39,12 +50,18 @@ so the core control plane can type against ``ObsSpec`` without an import
 cycle.
 """
 
-from . import export, ledger, probes
+from . import compare, detect, export, ledger, metrics, probes
+from .compare import Divergence, attribution, diff_bench, diff_reports
+from .detect import BURN_NAMES, SIGNAL_NAMES, DetectCarry, DetectSpec
 from .ledger import KIND_NAMES, Ledger, LedgerRecord
+from .metrics import to_openmetrics, watch
 from .probes import (ObsCarry, ObsReport, ObsSpec, TickSignals, drain,
                      hist_percentile, init_carry, update)
 
-__all__ = ["export", "ledger", "probes", "KIND_NAMES", "Ledger",
-           "LedgerRecord", "ObsCarry", "ObsReport", "ObsSpec",
-           "TickSignals", "drain", "hist_percentile", "init_carry",
-           "update"]
+__all__ = ["compare", "detect", "export", "ledger", "metrics", "probes",
+           "BURN_NAMES", "SIGNAL_NAMES", "KIND_NAMES", "Divergence",
+           "DetectCarry", "DetectSpec", "Ledger", "LedgerRecord",
+           "ObsCarry", "ObsReport", "ObsSpec", "TickSignals",
+           "attribution", "diff_bench", "diff_reports", "drain",
+           "hist_percentile", "init_carry", "to_openmetrics", "update",
+           "watch"]

@@ -1,0 +1,264 @@
+"""Cross-run regression attribution: localize *where* two runs diverged.
+
+The bench gate (``benchmarks/check_bench_regression.py``) can tell you
+*that* a trajectory regressed; this module tells you *where first*.  Two
+entry points share one divergence record:
+
+  * :func:`diff_reports` — compare two :class:`~repro.obs.probes.ObsReport`
+    objects probe family by probe family (counters, Kalman banks, per-type
+    preempt/kill series, rejects, queue histogram, ledger, detectors) and
+    return every divergence, ordered so the **first diverging family at
+    the earliest tick** leads.  Tick-indexed families resolve the
+    divergence to a tick; the ledger resolves it to the first differing
+    event; scalar families carry ``tick=None``.
+  * :func:`diff_bench` — compare two benchmark JSON trees (a CI result vs
+    the committed ``benchmarks/baselines/`` artifact) leaf by leaf.
+    Wall-clock leaves (``*_s``, ``*per_s`` …) never reproduce across
+    machines, so they are classified as *noise* and kept out of the
+    headline ordering; digests and acceptance flags rank first because
+    one flipped bit there explains every numeric drift below it.
+
+:func:`attribution` wraps ``diff_bench`` into the JSON-serializable
+report the gate prints and uploads (``results/bench_attribution.json``)
+whenever it fails — the point is that a red CI job leads with "first
+divergence: ``neutrality.digest``" instead of a wall of numbers.
+
+Pure host-side ``numpy``/stdlib — nothing here touches jax, so the gate
+can import it in environments where no accelerator runtime exists.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+# Probe families in report order: a divergence in an earlier family is
+# reported first — the ledger and detect stats are downstream of the raw
+# counters, so the earliest family is the closest to the root cause.
+FAMILY_ORDER = ("counters", "kalman", "preempt_by_type", "kill_by_type",
+                "rejects", "queue_hist", "queue_percentiles", "ledger",
+                "detect")
+
+# Benchmark-JSON leaves that legitimately differ run to run (wall-clock
+# and derived rates) — classified as noise, never the headline.
+_NOISE_LEAF = re.compile(r"(_s|_sec|per_s|wall|peak_bytes)$")
+
+# Leaves whose divergence explains everything downstream, in rank order.
+_ROOT_CAUSE_RANK = ("digest", "exact", "ok", "parity")
+
+
+@dataclasses.dataclass(frozen=True)
+class Divergence:
+    """One localized difference between two runs."""
+
+    family: str           # probe family / top-level JSON section
+    path: str             # dotted path to the diverging leaf
+    tick: int | None      # first diverging tick where the family has one
+    a: Any                # current value (scalar or short repr)
+    b: Any                # baseline value
+    detail: str = ""      # one-line human summary
+
+    def to_dict(self) -> dict:
+        return {"family": self.family, "path": self.path, "tick": self.tick,
+                "current": self.a, "baseline": self.b, "detail": self.detail}
+
+
+def _neq(a, b, rtol: float) -> bool:
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return False
+        if rtol > 0.0:
+            return not math.isclose(a, b, rel_tol=rtol, abs_tol=0.0)
+    return a != b
+
+
+def _scalar(x):
+    """A JSON-friendly rendering of a numpy scalar / small value."""
+    try:
+        return x.item()
+    except AttributeError:
+        return x
+
+
+def _diff_arrays(family: str, path: str, a, b, *, tick_axis: bool,
+                 out: list[Divergence]) -> None:
+    import numpy as np
+
+    if a is None and b is None:
+        return
+    if (a is None) != (b is None):
+        out.append(Divergence(family, path, None,
+                              None if a is None else "present",
+                              None if b is None else "present",
+                              "family enabled in one run only"))
+        return
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape:
+        out.append(Divergence(family, path, None, list(a.shape),
+                              list(b.shape), "shape mismatch"))
+        return
+    neq = a != b
+    both_nan = np.zeros_like(neq) if a.dtype.kind not in "fc" else (
+        np.isnan(a) & np.isnan(b))
+    neq = neq & ~both_nan
+    if not bool(neq.any()):
+        return
+    idx = tuple(int(i) for i in np.argwhere(neq)[0])
+    tick = idx[0] if tick_axis and a.ndim >= 1 else None
+    out.append(Divergence(
+        family, f"{path}[{','.join(map(str, idx))}]", tick,
+        _scalar(a[idx]), _scalar(b[idx]),
+        f"first of {int(neq.sum())} differing element(s)"))
+
+
+def _diff_mapping(family: str, a: dict | None, b: dict | None, *,
+                  tick_axis: bool, out: list[Divergence]) -> None:
+    import numpy as np
+
+    if a is None and b is None:
+        return
+    if (a is None) != (b is None):
+        out.append(Divergence(family, family, None,
+                              None if a is None else "present",
+                              None if b is None else "present",
+                              "family enabled in one run only"))
+        return
+    for key in sorted(set(a) | set(b)):
+        if key not in a or key not in b:
+            out.append(Divergence(family, f"{family}.{key}", None,
+                                  a.get(key, "<missing>"),
+                                  b.get(key, "<missing>"),
+                                  "key present in one run only"))
+            continue
+        va, vb = a[key], b[key]
+        if isinstance(va, (list, tuple, np.ndarray)) or hasattr(va, "shape"):
+            _diff_arrays(family, f"{family}.{key}", va, vb,
+                         tick_axis=tick_axis, out=out)
+        elif _neq(_scalar(va), _scalar(vb), 0.0):
+            out.append(Divergence(family, f"{family}.{key}", None,
+                                  _scalar(va), _scalar(vb), ""))
+
+
+def _diff_ledgers(a: list, b: list, out: list[Divergence]) -> None:
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        if ra != rb:
+            field = next(f for f in ("tick", "kind", "tenant", "value",
+                                     "severity")
+                         if getattr(ra, f) != getattr(rb, f))
+            out.append(Divergence(
+                "ledger", f"ledger[{i}].{field}", int(ra.tick),
+                _scalar(getattr(ra, field)), _scalar(getattr(rb, field)),
+                f"event {i}: {ra.kind_name} vs {rb.kind_name}"))
+            return
+    if len(a) != len(b):
+        extra = a[len(b):] if len(a) > len(b) else b[len(a):]
+        out.append(Divergence(
+            "ledger", f"ledger[{min(len(a), len(b))}]",
+            int(extra[0].tick), len(a), len(b),
+            f"event counts differ; first unmatched: {extra[0].kind_name}"))
+
+
+def diff_reports(current, baseline) -> list[Divergence]:
+    """Every divergence between two ObsReports, first family / earliest
+    tick leading.  Empty list = the runs are observationally identical."""
+    out: list[Divergence] = []
+    _diff_mapping("counters", current.counters, baseline.counters,
+                  tick_axis=False, out=out)
+    _diff_mapping("kalman", current.kalman, baseline.kalman,
+                  tick_axis=False, out=out)
+    for fam in ("preempt_by_type", "kill_by_type", "rejects", "queue_hist"):
+        _diff_arrays(fam, fam, getattr(current, fam), getattr(baseline, fam),
+                     tick_axis=fam in ("preempt_by_type", "kill_by_type"),
+                     out=out)
+    _diff_mapping("queue_percentiles", current.queue_percentiles,
+                  baseline.queue_percentiles, tick_axis=False, out=out)
+    _diff_ledgers(current.ledger, baseline.ledger, out)
+    if current.ledger_dropped != baseline.ledger_dropped:
+        out.append(Divergence("ledger", "ledger_dropped", None,
+                              current.ledger_dropped,
+                              baseline.ledger_dropped, ""))
+    _diff_mapping("detect", current.detect, baseline.detect,
+                  tick_axis=False, out=out)
+    rank = {f: i for i, f in enumerate(FAMILY_ORDER)}
+    out.sort(key=lambda d: (rank.get(d.family, len(rank)),
+                            math.inf if d.tick is None else d.tick, d.path))
+    return out
+
+
+def first_divergence(divs: list[Divergence]) -> Divergence | None:
+    return divs[0] if divs else None
+
+
+def _walk(prefix: str, a, b, signal: list[Divergence],
+          noise: list[Divergence]) -> None:
+    if isinstance(a, dict) and isinstance(b, dict):
+        for key in sorted(set(a) | set(b)):
+            path = f"{prefix}.{key}" if prefix else str(key)
+            if key not in a or key not in b:
+                signal.append(Divergence(path.split(".")[0], path, None,
+                                         a.get(key, "<missing>"),
+                                         b.get(key, "<missing>"),
+                                         "key present in one report only"))
+                continue
+            _walk(path, a[key], b[key], signal, noise)
+        return
+    if isinstance(a, list) and isinstance(b, list):
+        if len(a) != len(b):
+            signal.append(Divergence(prefix.split(".")[0], prefix, None,
+                                     len(a), len(b), "length mismatch"))
+            return
+        for i, (va, vb) in enumerate(zip(a, b)):
+            _walk(f"{prefix}[{i}]", va, vb, signal, noise)
+        return
+    a, b = _scalar(a), _scalar(b)
+    if not _neq(a, b, 0.0):
+        return
+    leaf = prefix.rsplit(".", 1)[-1]
+    d = Divergence(prefix.split(".")[0], prefix, None, a, b, "")
+    (noise if _NOISE_LEAF.search(leaf) else signal).append(d)
+
+
+def _bench_rank(d: Divergence) -> tuple:
+    leaf = d.path.rsplit(".", 1)[-1]
+    for i, marker in enumerate(_ROOT_CAUSE_RANK):
+        if marker in leaf:
+            return (i, d.path)
+    return (len(_ROOT_CAUSE_RANK), d.path)
+
+
+def diff_bench(current: dict, baseline: dict) -> tuple[list[Divergence],
+                                                       list[Divergence]]:
+    """Leaf-by-leaf diff of two benchmark JSON reports.
+
+    Returns ``(signal, noise)``: *signal* holds deterministic leaves
+    (digests and flags ranked first — one flipped digest explains every
+    numeric drift below it), *noise* holds wall-clock/rate leaves that
+    never reproduce across machines.
+    """
+    signal: list[Divergence] = []
+    noise: list[Divergence] = []
+    _walk("", current, baseline, signal, noise)
+    signal.sort(key=_bench_rank)
+    noise.sort(key=lambda d: d.path)
+    return signal, noise
+
+
+def attribution(current: dict, baseline: dict,
+                gate_errors: list[str] | None = None,
+                max_leaves: int = 32) -> dict:
+    """The JSON-serializable attribution report the bench gate emits on
+    failure: the first diverging deterministic leaf, the full (bounded)
+    divergence list, and the gate errors it explains."""
+    signal, noise = diff_bench(current, baseline)
+    first = first_divergence(signal)
+    return {
+        "kind": current.get("kind", baseline.get("kind", "spot")),
+        "first_divergence": None if first is None else first.to_dict(),
+        "n_divergences": len(signal),
+        "divergences": [d.to_dict() for d in signal[:max_leaves]],
+        "n_noise": len(noise),
+        "noise": [d.to_dict() for d in noise[:max_leaves]],
+        "gate_errors": list(gate_errors or []),
+    }

@@ -30,32 +30,79 @@ def _meta(pid: int, tid: int, name: str) -> dict:
             "args": {"name": name}}
 
 
+_SEVERITY_NAMES = {0: "info", 1: "warn", 2: "page"}
+
+
+def _subject_name(kind: int, subject: int) -> str | None:
+    """Resolve an alert record's tenant column to its subject label: the
+    monitored-signal name for CUSUM/EWMA, the burn window name, the
+    flattened Kalman bank for the NIS band test.  ``None`` for non-alert
+    kinds (there the column really is a tenant id)."""
+    from . import detect as detect_lib
+    from . import ledger as ledger_lib
+
+    if kind in (ledger_lib.KIND_ALERT_CUSUM, ledger_lib.KIND_ALERT_EWMA):
+        if 0 <= subject < len(detect_lib.SIGNAL_NAMES):
+            return detect_lib.SIGNAL_NAMES[subject]
+    elif kind == ledger_lib.KIND_ALERT_BURN:
+        if 0 <= subject < len(detect_lib.BURN_NAMES):
+            return detect_lib.BURN_NAMES[subject]
+    elif kind == ledger_lib.KIND_ALERT_NIS:
+        return f"bank_{subject}"
+    return None
+
+
+def _track(kind: int, tenant: int, kind_name: str) -> tuple[int, str]:
+    """The (tid, thread label) a record renders on: fleet-level events
+    share the per-kind track (tid = kind code); tenant- or
+    subject-scoped events each get their own labelled sub-track so the
+    viewer separates ``alert_cusum/market_unavail`` from
+    ``alert_cusum/spot_price`` and tenant 0's rejects from tenant 3's."""
+    subject = _subject_name(kind, tenant)
+    if subject is not None:
+        return kind * 1000 + tenant + 1, f"{kind_name}/{subject}"
+    if tenant is not None and tenant >= 0:
+        return kind * 1000 + tenant + 1, f"{kind_name}/tenant{tenant}"
+    return kind, kind_name
+
+
 def run_trace_events(report, dt: float = 1.0, pid: int = 1) -> list[dict]:
     """A drained :class:`~repro.obs.probes.ObsReport` as trace events.
 
-    Each ledger kind gets its own track (tid = kind code); every record
-    becomes an instant event at its tick's simulated time, args carrying
-    the value and tenant.  The report's scalar counters ride a process
-    metadata event so they show up in the viewer's process pane.
+    Each ledger kind gets its own track, and tenant- or subject-scoped
+    records (admission rejects per tenant, detector alerts per monitored
+    signal / burn window / Kalman bank) fan out onto labelled sub-tracks
+    — so the Perfetto timeline reads ``alert_burn/unavail`` next to
+    ``alert_cusum/market_unavail``.  Every record becomes an instant
+    event at its tick's simulated time, args carrying the value, tenant,
+    resolved subject and severity.  The report's scalar counters ride a
+    process metadata event so they show up in the viewer's process pane.
     """
-    from . import ledger as ledger_lib
-
     events: list[dict] = [
         {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
          "args": {"name": "sim-run"}},
         {"name": "counters", "ph": "M", "pid": pid, "tid": 0,
          "args": {k: v for k, v in report.counters.items()}},
     ]
-    kinds_seen = sorted({r.kind for r in report.ledger})
-    for kind in kinds_seen:
-        events.append(_meta(pid, kind, ledger_lib.KIND_NAMES.get(
-            kind, f"kind_{kind}")))
+    tracks: dict[int, str] = {}
     for rec in report.ledger:
+        tid, label = _track(rec.kind, rec.tenant, rec.kind_name)
+        tracks.setdefault(tid, label)
+    for tid in sorted(tracks):
+        events.append(_meta(pid, tid, tracks[tid]))
+    for rec in report.ledger:
+        tid, _ = _track(rec.kind, rec.tenant, rec.kind_name)
+        args = {"value": rec.value, "tenant": rec.tenant,
+                "severity": _SEVERITY_NAMES.get(rec.severity,
+                                                str(rec.severity))}
+        subject = _subject_name(rec.kind, rec.tenant)
+        if subject is not None:
+            args["subject"] = subject
         events.append({
             "name": rec.kind_name, "ph": "i", "s": "t",
-            "pid": pid, "tid": rec.kind,
+            "pid": pid, "tid": tid,
             "ts": rec.tick * dt * _US,
-            "args": {"value": rec.value, "tenant": rec.tenant},
+            "args": args,
         })
     return events
 

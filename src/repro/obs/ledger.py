@@ -34,6 +34,18 @@ KIND_KILL = 3           # chaos hard-kills this tick; value = count
 KIND_BACKOFF_ENTER = 4  # acquisition fail-streak left 0; value = streak
 KIND_ADM_REJECT = 5     # admission-gate rejects; value = count
 KIND_SHED = 6           # deadline-aware shed arrivals; value = count
+# Alert kinds (obs.detect).  The tenant column carries the *subject* id —
+# the monitored-signal index for CUSUM/EWMA (detect.SIGNAL_NAMES), the
+# flattened worst (w, k) bank for the NIS band test, the burn-rate window
+# id (0 = violations, 1 = spend) — and ``severity`` is 1 (warn) or 2
+# (page).
+KIND_ALERT_CUSUM = 7    # sustained mean shift; value = CUSUM statistic
+KIND_ALERT_EWMA = 8     # smoothed drift out of band; value = EWMA stat
+KIND_ALERT_NIS = 9      # Kalman NIS out of chi-square band; value = mean NIS
+KIND_ALERT_BURN = 10    # SLO burn rate over budget; value = burn multiple
+# Optimizer telemetry kinds (opt.cem / opt.es); tick = generation index.
+KIND_OPT_IMPROVE = 11   # incumbent replaced; value = new best score
+KIND_OPT_STALL = 12     # convergence stall detected; value = stalled gens
 
 KIND_NAMES = {
     KIND_AIMD_BACKOFF: "aimd_backoff",
@@ -42,7 +54,22 @@ KIND_NAMES = {
     KIND_BACKOFF_ENTER: "backoff_enter",
     KIND_ADM_REJECT: "adm_reject",
     KIND_SHED: "shed",
+    KIND_ALERT_CUSUM: "alert_cusum",
+    KIND_ALERT_EWMA: "alert_ewma",
+    KIND_ALERT_NIS: "alert_nis",
+    KIND_ALERT_BURN: "alert_burn",
+    KIND_OPT_IMPROVE: "opt_improve",
+    KIND_OPT_STALL: "opt_stall",
 }
+
+# Every alert kind, in code order — the detect calibration gates count
+# ledger events against this set.
+ALERT_KINDS = (KIND_ALERT_CUSUM, KIND_ALERT_EWMA, KIND_ALERT_NIS,
+               KIND_ALERT_BURN)
+
+# Severity levels carried by alert events (0 = informational event).
+SEV_WARN = 1
+SEV_PAGE = 2
 
 # Fleet-level events carry this sentinel in the tenant column.
 NO_TENANT = -1
@@ -59,6 +86,7 @@ class Ledger(NamedTuple):
     kind: jnp.ndarray         # (cap,) int32
     tenant: jnp.ndarray       # (cap,) int32 (NO_TENANT = fleet-level)
     value: jnp.ndarray        # (cap,) float32
+    severity: jnp.ndarray     # (cap,) int32 (0 = event, 1 = warn, 2 = page)
     head: jnp.ndarray         # ()     int32 total events ever pushed
     prev_incr: jnp.ndarray    # ()     bool  last tick's AIMD branch
     prev_streak: jnp.ndarray  # ()     f32   last tick's fail-streak
@@ -70,6 +98,7 @@ def init(capacity: int) -> Ledger:
         kind=jnp.zeros((capacity,), jnp.int32),
         tenant=jnp.full((capacity,), NO_TENANT, jnp.int32),
         value=jnp.zeros((capacity,), jnp.float32),
+        severity=jnp.zeros((capacity,), jnp.int32),
         head=jnp.asarray(0, jnp.int32),
         prev_incr=jnp.asarray(True),
         prev_streak=jnp.asarray(0.0, jnp.float32),
@@ -77,7 +106,7 @@ def init(capacity: int) -> Ledger:
 
 
 def push(led: Ledger, cond, t, kind: int, value,
-         tenant=NO_TENANT) -> Ledger:
+         tenant=NO_TENANT, severity=0) -> Ledger:
     """Conditionally append one event.  ``cond`` is a traced () bool: when
     False every buffer writes its current slot value back (a no-op), and
     ``head`` does not advance — so the ring only ever holds real events."""
@@ -90,6 +119,7 @@ def push(led: Ledger, cond, t, kind: int, value,
         kind=keep(led.kind, jnp.asarray(kind, jnp.int32)),
         tenant=keep(led.tenant, jnp.asarray(tenant, jnp.int32)),
         value=keep(led.value, jnp.asarray(value, jnp.float32)),
+        severity=keep(led.severity, jnp.asarray(severity, jnp.int32)),
         head=led.head + cond.astype(jnp.int32),
     )
 
@@ -103,19 +133,22 @@ class LedgerRecord:
     kind_name: str
     tenant: int
     value: float
+    severity: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
 
 
-def records(led: Ledger) -> tuple[list[LedgerRecord], int]:
+def drain(led: Ledger) -> tuple[list[LedgerRecord], int]:
     """Decode a drained ring: (chronological records, exact dropped count).
 
     With ``head <= capacity`` the ring never wrapped and slots ``[0, head)``
     are already in push order.  After a wrap the oldest surviving event
     sits at ``head % capacity`` and the window reads circularly from
     there; everything pushed before it — exactly ``head - capacity``
-    events — was overwritten (oldest-dropped).
+    events — was overwritten (oldest-dropped).  Either way the returned
+    list is in push order, so ticks are monotonically non-decreasing —
+    the exactness contract ``tests/test_obs.py`` overflows a ring to pin.
     """
     import numpy as np
 
@@ -123,6 +156,7 @@ def records(led: Ledger) -> tuple[list[LedgerRecord], int]:
     kind = np.asarray(led.kind)
     tenant = np.asarray(led.tenant)
     value = np.asarray(led.value)
+    severity = np.asarray(led.severity)
     cap = tick.shape[0]
     head = int(led.head)
     n = min(head, cap)
@@ -132,6 +166,11 @@ def records(led: Ledger) -> tuple[list[LedgerRecord], int]:
     recs = [LedgerRecord(tick=int(tick[i]), kind=int(kind[i]),
                          kind_name=KIND_NAMES.get(int(kind[i]),
                                                   f"kind_{int(kind[i])}"),
-                         tenant=int(tenant[i]), value=float(value[i]))
+                         tenant=int(tenant[i]), value=float(value[i]),
+                         severity=int(severity[i]))
             for i in order]
     return recs, dropped
+
+
+# Backwards-compatible alias: ``drain`` is the canonical decode.
+records = drain

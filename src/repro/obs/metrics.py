@@ -1,0 +1,248 @@
+"""OpenMetrics exposition and live sweep tailing.
+
+Two host-side read paths over artifacts the jitted code already produces
+— nothing here touches the scan:
+
+  * :func:`to_openmetrics` renders an :class:`~repro.obs.probes.ObsReport`
+    as OpenMetrics text (the Prometheus exposition format): every probe
+    counter becomes a gauge, detector alert counts/first-ticks get
+    ``family`` labels, ledger events are bucketed by ``kind``.  Write it
+    behind any HTTP handler — or just to a file a node exporter scrapes —
+    and a standard dashboard stack reads the simulator like production
+    infrastructure.
+  * :func:`watch` tails a *streamed sweep directory* while (or after) the
+    executor runs: the manifest gives the chunk plan, the atomic
+    ``step_<i>.done`` markers give progress and an ETA, and the chunk
+    files' per-field ``.npy`` leaves give running violation/alert totals
+    — all without loading whole chunks or knowing the summary pytree,
+    so a live sweep can be monitored from a second process with nothing
+    but the directory path.
+
+Pure stdlib + numpy; safe to import where no jax runtime exists.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+from typing import Callable
+
+_MANIFEST = "sweep_manifest.json"
+
+_NAME_OK = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _metric(name: str, prefix: str) -> str:
+    name = _NAME_OK.sub("_", f"{prefix}_{name}")
+    return name if re.match(r"[a-zA-Z_:]", name) else f"_{name}"
+
+
+def _fmt(value) -> str:
+    v = float(value)
+    return str(int(v)) if v == int(v) and abs(v) < 1e15 else repr(v)
+
+
+def to_openmetrics(report, prefix: str = "repro") -> str:
+    """Render an ObsReport as OpenMetrics text exposition.
+
+    Scalar probe counters map to gauges named ``<prefix>_<counter>``;
+    detector alerts expose ``<prefix>_alerts_total`` plus per-``family``
+    labelled counts and first-firing ticks; ledger events are counted per
+    ``kind`` label.  Ends with the mandatory ``# EOF`` terminator.
+    """
+    lines: list[str] = []
+
+    def gauge(name: str, value, labels: dict | None = None,
+              help_: str | None = None) -> None:
+        m = _metric(name, prefix)
+        if help_ is not None:
+            lines.append(f"# HELP {m} {help_}")
+            lines.append(f"# TYPE {m} gauge")
+        if labels:
+            lab = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+            lines.append(f"{m}{{{lab}}} {_fmt(value)}")
+        else:
+            lines.append(f"{m} {_fmt(value)}")
+
+    for name in sorted(report.counters):
+        # The drained report mirrors ledger/alert totals into counters;
+        # the labelled sections below are their canonical exposition —
+        # emitting both would duplicate metric families.
+        if name.startswith(("ledger_", "alerts_")):
+            continue
+        gauge(name, report.counters[name],
+              help_=f"probe counter {name}")
+
+    if report.queue_percentiles:
+        first = True
+        for q in sorted(report.queue_percentiles):
+            m = _metric("queue_depth", prefix)
+            if first:
+                lines.append(f"# HELP {m} queue depth percentile")
+                lines.append(f"# TYPE {m} gauge")
+                first = False
+            lines.append(
+                f'{m}{{quantile="{q}"}} '
+                f"{_fmt(report.queue_percentiles[q])}")
+
+    kinds: dict[str, int] = {}
+    for rec in report.ledger:
+        kinds[rec.kind_name] = kinds.get(rec.kind_name, 0) + 1
+    if report.ledger or report.ledger_dropped:
+        first = True
+        for kind in sorted(kinds):
+            m = _metric("ledger_events", prefix)
+            if first:
+                lines.append(f"# HELP {m} decision-ledger events by kind")
+                lines.append(f"# TYPE {m} gauge")
+                first = False
+            lines.append(f'{m}{{kind="{kind}"}} {kinds[kind]}')
+        gauge("ledger_dropped", report.ledger_dropped,
+              help_="ledger events overwritten by ring overflow")
+
+    det = report.detect
+    if det is not None:
+        gauge("alerts_total", det["alerts_total"],
+              help_="detector alerts fired, all families")
+        first = True
+        for fam in sorted(det["alerts_by_family"]):
+            m = _metric("alerts", prefix)
+            if first:
+                lines.append(f"# HELP {m} detector alerts by family")
+                lines.append(f"# TYPE {m} gauge")
+                first = False
+            lines.append(
+                f'{m}{{family="{fam}"}} '
+                f"{_fmt(det['alerts_by_family'][fam])}")
+        first = True
+        for fam in sorted(det["first_tick_by_family"]):
+            m = _metric("alert_first_tick", prefix)
+            if first:
+                lines.append(f"# HELP {m} first firing tick per family "
+                             "(-1 = never fired)")
+                lines.append(f"# TYPE {m} gauge")
+                first = False
+            lines.append(
+                f'{m}{{family="{fam}"}} '
+                f"{det['first_tick_by_family'][fam]}")
+
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
+
+
+def write_openmetrics(report, path, prefix: str = "repro") -> None:
+    """Atomic file form of :func:`to_openmetrics` (scrape-safe)."""
+    text = to_openmetrics(report, prefix=prefix)
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+
+
+def _chunk_leaf_sums(step_dir: str, leaves: dict,
+                     names: tuple[str, ...]) -> dict[str, float]:
+    """Sum the named 1-d leaf files of one committed chunk (missing
+    leaves — e.g. ``alerts`` on a detector-free sweep — read as absent)."""
+    import numpy as np
+
+    out = {}
+    for name in names:
+        meta = leaves.get(name)
+        if meta is None:
+            continue
+        try:
+            out[name] = float(
+                np.load(os.path.join(step_dir, meta["file"])).sum())
+        except (OSError, ValueError):
+            continue
+    return out
+
+
+def snapshot(stream_dir: str,
+             leaf_names: tuple[str, ...] = ("violations", "alerts",
+                                            "preemptions")) -> dict:
+    """One observation of a streamed sweep directory.
+
+    Returns progress (chunks/rows done), throughput and ETA derived from
+    the ``.done`` commit-marker mtimes, and running totals of the named
+    summary leaves over every committed chunk.
+    """
+    with open(os.path.join(stream_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    n_chunks = int(manifest["n_chunks"])
+    n_points = int(manifest["n_points"])
+    chunk = int(manifest["chunk"])
+
+    done: list[int] = []
+    mtimes: list[float] = []
+    for name in os.listdir(stream_dir):
+        if name.startswith("step_") and name.endswith(".done"):
+            i = int(name[len("step_"):-len(".done")])
+            if i < n_chunks:
+                done.append(i)
+                mtimes.append(os.path.getmtime(os.path.join(stream_dir,
+                                                            name)))
+    done.sort()
+    rows_done = sum(min(chunk, n_points - i * chunk) for i in done)
+
+    rate = eta_s = None
+    if len(mtimes) >= 2:
+        span = max(mtimes) - min(mtimes)
+        if span > 0:
+            rate = (len(mtimes) - 1) / span          # chunks per second
+            eta_s = (n_chunks - len(done)) / rate
+
+    totals: dict[str, float] = {}
+    for i in done:
+        step_dir = os.path.join(stream_dir, f"step_{i:08d}")
+        try:
+            with open(os.path.join(step_dir, "manifest.json")) as f:
+                leaves = json.load(f)["leaves"]
+        except (OSError, ValueError, KeyError):
+            continue
+        for name, v in _chunk_leaf_sums(step_dir, leaves,
+                                        leaf_names).items():
+            totals[name] = totals.get(name, 0.0) + v
+
+    return {
+        "n_chunks": n_chunks,
+        "n_points": n_points,
+        "chunks_done": len(done),
+        "rows_done": rows_done,
+        "complete": len(done) >= n_chunks,
+        "progress": len(done) / max(n_chunks, 1),
+        "chunks_per_s": rate,
+        "eta_s": eta_s,
+        "totals": totals,
+    }
+
+
+def format_snapshot(s: dict) -> str:
+    eta = "--" if s["eta_s"] is None else f"{s['eta_s']:.0f}s"
+    totals = " ".join(f"{k}={int(v)}" for k, v in sorted(s["totals"].items()))
+    return (f"[{s['chunks_done']}/{s['n_chunks']} chunks] "
+            f"{s['rows_done']}/{s['n_points']} runs "
+            f"({100.0 * s['progress']:.0f}%) eta={eta}"
+            + (f" {totals}" if totals else ""))
+
+
+def watch(stream_dir: str, interval: float = 2.0,
+          emit: Callable[[str], None] = print,
+          max_updates: int | None = None) -> dict:
+    """Live-tail a streamed sweep: emit one progress line per interval
+    until every chunk is committed (or ``max_updates`` observations have
+    been made — the bound tests and impatient callers use).  Returns the
+    final snapshot.  Point it at a directory another process is writing;
+    only the manifest, commit markers and leaf files are read, so the
+    tail never races the executor's atomic renames.
+    """
+    n = 0
+    while True:
+        s = snapshot(stream_dir)
+        emit(format_snapshot(s))
+        n += 1
+        if s["complete"] or (max_updates is not None and n >= max_updates):
+            return s
+        time.sleep(interval)

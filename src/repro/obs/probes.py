@@ -39,6 +39,7 @@ from typing import Any, NamedTuple
 
 import jax.numpy as jnp
 
+from . import detect as detect_lib
 from . import ledger as ledger_lib
 
 
@@ -60,6 +61,7 @@ class ObsSpec:
     queue_hist: bool = False
     queue_bins: int = 16
     ledger: int = 0
+    detect: "detect_lib.DetectSpec | None" = None
 
     def __post_init__(self):
         if self.queue_bins < 1:
@@ -67,16 +69,24 @@ class ObsSpec:
         if self.ledger < 0:
             raise ValueError(f"ledger capacity must be >= 0, got {self.ledger}")
         if not (self.aimd or self.kalman or self.preempt or self.fairshare
-                or self.queue_hist or self.ledger):
+                or self.queue_hist or self.ledger
+                or self.detect is not None):
             raise ValueError(
                 "ObsSpec with every family off observes nothing — use "
                 "SimConfig.obs=None for the probe-free program")
 
     @classmethod
-    def full(cls, ledger: int = 256) -> "ObsSpec":
-        """Every probe family on — the overhead-gate configuration."""
+    def full(cls, ledger: int = 256,
+             detect: "bool | detect_lib.DetectSpec" = False) -> "ObsSpec":
+        """Every probe family on — the overhead-gate configuration.
+        ``detect=True`` adds the default detector catalog (``detect`` may
+        also be a ready ``DetectSpec``)."""
+        if detect is True:
+            detect = detect_lib.DetectSpec()
+        elif detect is False:
+            detect = None
         return cls(aimd=True, kalman=True, preempt=True, fairshare=True,
-                   queue_hist=True, ledger=ledger)
+                   queue_hist=True, ledger=ledger, detect=detect)
 
     # The ledger's transition detectors need the AIMD branch / water-level
     # signals even when the corresponding metric family is off, so the
@@ -91,7 +101,15 @@ class ObsSpec:
 
     @property
     def want_preempt(self) -> bool:
-        return self.preempt or self.ledger > 0
+        # The detectors' disruption signal sums the same per-type
+        # preemption/kill vectors the ledger events use.
+        return self.preempt or self.ledger > 0 or self.detect is not None
+
+    # The NIS band test consumes the per-bank Kalman innovation probe, so
+    # the controller must emit it even when the metric family is off.
+    @property
+    def want_kalman(self) -> bool:
+        return self.kalman or (self.detect is not None and self.detect.nis)
 
 
 class AimdMetrics(NamedTuple):
@@ -135,12 +153,13 @@ class ObsCarry(NamedTuple):
     fair: FairshareMetrics | None = None
     qhist: QueueHist | None = None
     ledger: "ledger_lib.Ledger | None" = None
+    detect: "detect_lib.DetectCarry | None" = None
 
 
 def init_carry(spec: ObsSpec, *, w: int, k: int, n_types: int,
                n_tenants: int = 1) -> ObsCarry:
     z = jnp.asarray(0.0, jnp.float32)
-    aimd = kalman = preempt = fair = qhist = led = None
+    aimd = kalman = preempt = fair = qhist = led = det = None
     if spec.aimd:
         aimd = AimdMetrics(n_incr=z, n_backoff=z, streak_max=z)
     if spec.kalman:
@@ -159,8 +178,10 @@ def init_carry(spec: ObsSpec, *, w: int, k: int, n_types: int,
         qhist = QueueHist(counts=jnp.zeros((spec.queue_bins,), jnp.int32))
     if spec.ledger > 0:
         led = ledger_lib.init(spec.ledger)
+    if spec.detect is not None:
+        det = detect_lib.init(spec.detect, w=w, k=k)
     return ObsCarry(aimd=aimd, kalman=kalman, preempt=preempt, fair=fair,
-                    qhist=qhist, ledger=led)
+                    qhist=qhist, ledger=led, detect=det)
 
 
 class TickSignals(NamedTuple):
@@ -182,6 +203,11 @@ class TickSignals(NamedTuple):
     queue_depth: Any = None      # () f32   active workloads after arrivals
     fail_streak: Any = None      # () f32   consecutive failed acquisitions
     n_shed: Any = None           # () f32   arrivals shed this tick
+    spot_price: Any = None       # () f32   primary type's $/quantum
+    viol_now: Any = None         # () f32   TTC violations judged this tick
+    cost_delta: Any = None       # () f32   $ billed this tick (fleet)
+    n_committed: Any = None      # () f32   booting+active CUs this tick
+    n_unavail: Any = None        # () f32   instance types with no capacity
 
 
 def update(oc: ObsCarry, spec: ObsSpec, t, sig: TickSignals, *,
@@ -194,7 +220,7 @@ def update(oc: ObsCarry, spec: ObsSpec, t, sig: TickSignals, *,
     ``q_cap`` is the (static) workload-row count the queue-depth
     histogram bins span.
     """
-    aimd, kalman, preempt, fair, qhist, led = oc
+    aimd, kalman, preempt, fair, qhist, led, det = oc
 
     if spec.aimd:
         incr = sig.aimd_incr
@@ -270,8 +296,42 @@ def update(oc: ObsCarry, spec: ObsSpec, t, sig: TickSignals, *,
                                   ledger_lib.KIND_SHED, sig.n_shed)
         led = led._replace(prev_incr=incr, prev_streak=streak)
 
+    if spec.detect is not None:
+        # Monitored-signal vector, detect.SIGNAL_NAMES order; a plane
+        # that does not exist under this config reads as a constant 0.
+        z = jnp.asarray(0.0, jnp.float32)
+        # Capacity gap: the target the scaler asked for minus what the
+        # market actually committed — the shortfall signal a gracefully
+        # absorbed outage still cannot hide (see detect module doc).
+        gap = (z if (sig.n_target is None or sig.n_committed is None)
+               else jnp.maximum(
+                   0.0, jnp.asarray(sig.n_target - sig.n_committed,
+                                    jnp.float32)))
+        disrupt = z
+        if sig.preempt_by_type is not None:
+            disrupt = disrupt + jnp.sum(sig.preempt_by_type)
+        if sig.kill_by_type is not None:
+            disrupt = disrupt + jnp.sum(sig.kill_by_type)
+        sigs = jnp.stack([
+            z if sig.queue_depth is None else jnp.asarray(
+                sig.queue_depth, jnp.float32),
+            z if sig.spot_price is None else jnp.asarray(
+                sig.spot_price, jnp.float32),
+            z if sig.viol_now is None else jnp.asarray(
+                sig.viol_now, jnp.float32),
+            z if sig.fail_streak is None else jnp.asarray(
+                sig.fail_streak, jnp.float32),
+            gap,
+            disrupt,
+            z if sig.n_unavail is None else jnp.asarray(
+                sig.n_unavail, jnp.float32),
+        ])
+        det, led = detect_lib.update(
+            det, spec.detect, t, signals=sigs, kalman=sig.kalman,
+            cost_delta=sig.cost_delta, led=led)
+
     return ObsCarry(aimd=aimd, kalman=kalman, preempt=preempt, fair=fair,
-                    qhist=qhist, ledger=led)
+                    qhist=qhist, ledger=led, detect=det)
 
 
 # --------------------------------------------------------------------------
@@ -298,7 +358,7 @@ def hist_percentile(counts, q: float, q_cap: int) -> float:
 class ObsReport:
     """A run's drained observability state, host-side numpy throughout."""
 
-    spec: ObsSpec
+    spec: ObsSpec | None
     counters: dict                       # scalar gauges/counters by name
     kalman: dict | None                  # per-bank arrays + fleet scalars
     preempt_by_type: Any | None          # (T,) numpy
@@ -308,17 +368,26 @@ class ObsReport:
     queue_percentiles: dict | None       # {0.5/0.9/0.99: depth}
     ledger: list                         # [LedgerRecord] chronological
     ledger_dropped: int                  # exact overwritten-event count
+    detect: dict | None = None           # alert counts/first-ticks/stats
 
     def to_dataframe(self):
-        """Ledger records as a pandas DataFrame (list of dicts if pandas
-        is unavailable — no new dependency is required to drain a run)."""
-        rows = [r.to_dict() for r in self.ledger]
+        """Ledger records as a pandas DataFrame.
+
+        pandas is an *optional* dependency: without it this raises a
+        clear ImportError naming it — use :meth:`to_jsonl` or iterate
+        ``report.ledger`` for the dependency-free paths.
+        """
         try:
             import pandas as pd
-        except ImportError:
-            return rows
+        except ImportError as e:
+            raise ImportError(
+                "ObsReport.to_dataframe() needs the optional dependency "
+                "'pandas', which is not installed — use to_jsonl() or the "
+                "report.ledger record list instead") from e
         return pd.DataFrame(
-            rows, columns=["tick", "kind", "kind_name", "tenant", "value"])
+            [r.to_dict() for r in self.ledger],
+            columns=["tick", "kind", "kind_name", "tenant", "value",
+                     "severity"])
 
     def to_jsonl(self, path) -> None:
         from . import export
@@ -372,11 +441,18 @@ def drain(oc: ObsCarry, spec: ObsSpec, *, q_cap: int) -> ObsReport:
     recs: list = []
     dropped = 0
     if spec.ledger > 0:
-        recs, dropped = ledger_lib.records(oc.ledger)
+        recs, dropped = ledger_lib.drain(oc.ledger)
         counters["ledger_events"] = float(len(recs) + dropped)
         counters["ledger_dropped"] = float(dropped)
+
+    det = None
+    if spec.detect is not None:
+        det = detect_lib.drain(oc.detect, spec.detect)
+        counters["alerts_total"] = det["alerts_total"]
+        for name, n in det["alerts_by_family"].items():
+            counters[f"alerts_{name}"] = n
 
     return ObsReport(spec=spec, counters=counters, kalman=kalman,
                      preempt_by_type=preempt_t, kill_by_type=kill_t,
                      rejects=rejects, queue_hist=qh, queue_percentiles=qp,
-                     ledger=recs, ledger_dropped=dropped)
+                     ledger=recs, ledger_dropped=dropped, detect=det)

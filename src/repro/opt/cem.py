@@ -19,14 +19,38 @@ than the incumbent, and any strict improvement is a genuine win over it.
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from ..obs import ledger as ledger_lib
 from .space import BoxSpace
 
 SIGMA_FLOOR = 0.02  # keeps the elite refit from collapsing to a point
+
+# A stall event fires when the incumbent has not improved for this many
+# consecutive generations (once per episode, on the transition).
+STALL_GENS = 3
+
+
+class OptTelemetry(NamedTuple):
+    """Per-generation optimizer probes + the decision-ledger ring.
+
+    Static opt-in (``telemetry=True`` on the minimizers): off, the field
+    is ``None`` on :class:`TuneResult` and the compiled program is the
+    exact historical one — the same leafless-carry contract as
+    ``SimConfig.obs``.  The ledger's tick column is the *generation*
+    index; ``opt.tuner.telemetry_report`` drains it into an ObsReport so
+    every downstream exporter (JSONL, Perfetto, OpenMetrics) works on
+    tuning runs unchanged.
+    """
+
+    ledger: Any                  # obs.ledger.Ledger; tick = generation
+    elite_mean: jnp.ndarray      # (G,) mean elite score (ES: incumbent)
+    score_std: jnp.ndarray       # (G,) population score spread
+    sigma_mean: jnp.ndarray      # (G,) mean sampling scale
+    stalled: jnp.ndarray         # ()  consecutive stale gens at the end
 
 
 class TuneResult(NamedTuple):
@@ -37,19 +61,25 @@ class TuneResult(NamedTuple):
     final_mean: jnp.ndarray    # (d,) final sampling-distribution mean
     history_best: jnp.ndarray  # (G,) per-generation best score
     history_mean: jnp.ndarray  # (G,) per-generation population mean score
+    telemetry: OptTelemetry | None = None  # probes (None = off, compiled out)
 
 
 def cem_minimize(f: Callable, space: BoxSpace, key: jax.Array,
                  pop_size: int = 32, generations: int = 8,
                  elite_frac: float = 0.25, init: jnp.ndarray | None = None,
                  inject: jnp.ndarray | None = None,
-                 init_sigma: float = 0.3) -> TuneResult:
+                 init_sigma: float = 0.3,
+                 telemetry: bool = False) -> TuneResult:
     """Minimize ``f`` (a scalar function of a ``(space.dim,)`` vector) —
     traceable end to end; wrap in ``jax.jit`` for the one-compile path.
 
     ``init`` centres the first generation (default: mid-box).  ``inject``
     is one ``(dim,)`` vector — or a ``(k, dim)`` stack of them — evaluated
     as the first candidate(s) of *every* generation (see module doc).
+    ``telemetry`` statically opts the per-generation probes and the
+    incumbent-replacement / stall event ledger into the scan (see
+    :class:`OptTelemetry`); off (default) compiles the probe-free run and
+    the result is bit-identical either way — probes only observe.
     """
     if pop_size < 2:
         raise ValueError(f"pop_size must be >= 2, got {pop_size}")
@@ -72,8 +102,11 @@ def cem_minimize(f: Callable, space: BoxSpace, key: jax.Array,
                 f"{inject_u.shape[0]} injected incumbents leave no room "
                 f"to explore in a population of {pop_size}")
 
-    def gen(carry, k):
-        mu, sigma, best_u, best_score = carry
+    def gen(carry, xs):
+        if telemetry:
+            (mu, sigma, best_u, best_score, led, stall), (k, g) = carry, xs
+        else:
+            (mu, sigma, best_u, best_score), k = carry, xs
         pop = mu + sigma * jax.random.normal(k, (pop_size, d))
         pop = jnp.clip(pop, 0.0, 1.0)
         if inject_u is not None:
@@ -87,15 +120,38 @@ def cem_minimize(f: Callable, space: BoxSpace, key: jax.Array,
         better = gen_best < best_score
         best_u = jnp.where(better, pop[order[0]], best_u)
         best_score = jnp.minimum(best_score, gen_best)
+        if telemetry:
+            led = ledger_lib.push(led, better, g,
+                                  ledger_lib.KIND_OPT_IMPROVE, gen_best)
+            stall = jnp.where(better, 0, stall + 1)
+            led = ledger_lib.push(led, stall == STALL_GENS, g,
+                                  ledger_lib.KIND_OPT_STALL,
+                                  stall.astype(jnp.float32))
+            return ((new_mu, new_sigma, best_u, best_score, led, stall),
+                    (gen_best, jnp.mean(scores),
+                     jnp.mean(scores[order[:n_elite]]), jnp.std(scores),
+                     jnp.mean(new_sigma)))
         return ((new_mu, new_sigma, best_u, best_score),
                 (gen_best, jnp.mean(scores)))
 
     carry0 = (mu0, jnp.full((d,), init_sigma, jnp.float32), mu0,
               jnp.asarray(jnp.inf, jnp.float32))
     keys = jax.random.split(key, generations)
-    (mu, _, best_u, best_score), (hist_best, hist_mean) = jax.lax.scan(
-        gen, carry0, keys)
+    if telemetry:
+        carry0 = carry0 + (ledger_lib.init(2 * generations),
+                           jnp.asarray(0, jnp.int32))
+        final, ys = jax.lax.scan(gen, carry0,
+                                 (keys, jnp.arange(generations)))
+        mu, _, best_u, best_score, led, stall = final
+        tel = OptTelemetry(ledger=led, elite_mean=ys[2], score_std=ys[3],
+                           sigma_mean=ys[4], stalled=stall)
+        hist_best, hist_mean = ys[0], ys[1]
+    else:
+        (mu, _, best_u, best_score), (hist_best, hist_mean) = jax.lax.scan(
+            gen, carry0, keys)
+        tel = None
     return TuneResult(best_vec=space.from_unit(best_u),
                       best_score=best_score,
                       final_mean=space.from_unit(mu),
-                      history_best=hist_best, history_mean=hist_mean)
+                      history_best=hist_best, history_mean=hist_mean,
+                      telemetry=tel)

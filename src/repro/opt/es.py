@@ -23,7 +23,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .cem import TuneResult
+from ..obs import ledger as ledger_lib
+from .cem import STALL_GENS, OptTelemetry, TuneResult
 from .space import BoxSpace
 
 SIGMA_MIN = 0.01
@@ -35,10 +36,14 @@ SIGMA_DOWN = 0.85
 def es_minimize(f: Callable, space: BoxSpace, key: jax.Array,
                 pop_size: int = 32, generations: int = 8,
                 init: jnp.ndarray | None = None,
-                init_sigma: float = 0.25) -> TuneResult:
+                init_sigma: float = 0.25,
+                telemetry: bool = False) -> TuneResult:
     """Minimize ``f`` over ``space`` with a (1+λ) ES — traceable end to
     end; wrap in ``jax.jit`` for the one-compile path.  ``init`` seeds the
-    incumbent (default: mid-box)."""
+    incumbent (default: mid-box).  ``telemetry`` statically opts the
+    per-generation probes / event ledger into the scan (see
+    ``cem.OptTelemetry``); the minimization itself is bit-identical
+    either way."""
     if pop_size < 2:
         raise ValueError(f"pop_size must be >= 2, got {pop_size}")
     if generations < 1:
@@ -48,8 +53,11 @@ def es_minimize(f: Callable, space: BoxSpace, key: jax.Array,
     parent0 = (jnp.full((d,), 0.5, jnp.float32) if init is None
                else space.to_unit(init))
 
-    def gen(carry, k):
-        parent, parent_score, sigma = carry
+    def gen(carry, xs):
+        if telemetry:
+            (parent, parent_score, sigma, led, stall), (k, g) = carry, xs
+        else:
+            (parent, parent_score, sigma), k = carry, xs
         pop = parent + sigma * jax.random.normal(k, (pop_size, d))
         pop = jnp.clip(pop, 0.0, 1.0)
         # Candidate 0 is the incumbent: its score refreshes every
@@ -65,15 +73,38 @@ def es_minimize(f: Callable, space: BoxSpace, key: jax.Array,
         sigma = jnp.clip(jnp.where(improved, sigma * SIGMA_UP,
                                    sigma * SIGMA_DOWN),
                          SIGMA_MIN, SIGMA_MAX)
+        if telemetry:
+            led = ledger_lib.push(led, improved, g,
+                                  ledger_lib.KIND_OPT_IMPROVE, child_score)
+            stall = jnp.where(improved, 0, stall + 1)
+            led = ledger_lib.push(led, stall == STALL_GENS, g,
+                                  ledger_lib.KIND_OPT_STALL,
+                                  stall.astype(jnp.float32))
+            # The (1+λ) "elite" is the incumbent itself; sigma is scalar.
+            return ((parent, parent_score, sigma, led, stall),
+                    (child_score, jnp.mean(scores), parent_score,
+                     jnp.std(scores), sigma))
         return ((parent, parent_score, sigma),
                 (child_score, jnp.mean(scores)))
 
     carry0 = (parent0, jnp.asarray(jnp.inf, jnp.float32),
               jnp.asarray(init_sigma, jnp.float32))
     keys = jax.random.split(key, generations)
-    (parent, parent_score, _), (hist_best, hist_mean) = jax.lax.scan(
-        gen, carry0, keys)
+    if telemetry:
+        carry0 = carry0 + (ledger_lib.init(2 * generations),
+                           jnp.asarray(0, jnp.int32))
+        final, ys = jax.lax.scan(gen, carry0,
+                                 (keys, jnp.arange(generations)))
+        parent, parent_score, _, led, stall = final
+        tel = OptTelemetry(ledger=led, elite_mean=ys[2], score_std=ys[3],
+                           sigma_mean=ys[4], stalled=stall)
+        hist_best, hist_mean = ys[0], ys[1]
+    else:
+        (parent, parent_score, _), (hist_best, hist_mean) = jax.lax.scan(
+            gen, carry0, keys)
+        tel = None
     return TuneResult(best_vec=space.from_unit(parent),
                       best_score=parent_score,
                       final_mean=space.from_unit(parent),
-                      history_best=hist_best, history_mean=hist_mean)
+                      history_best=hist_best, history_mean=hist_mean,
+                      telemetry=tel)

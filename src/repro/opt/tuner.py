@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.types import PolicyParams
+from ..obs import ledger as ledger_lib
+from ..obs import probes
 from ..sim import runner
 from .cem import TuneResult, cem_minimize
 from .es import es_minimize
@@ -48,7 +50,8 @@ def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
                 scenarios=None, method: str = "cem", pop_size: int = 32,
                 generations: int = 8, penalty: float = DEFAULT_PENALTY,
                 bounds: dict | None = None,
-                objective=None, space=None) -> PolicyTuning:
+                objective=None, space=None,
+                telemetry: bool = False) -> PolicyTuning:
     """Tune the ``PolicyParams`` coefficients for this config on this
     workload batch.  ``schedule`` is anything ``run_sweep`` accepts — a
     static schedule or a ``ScenarioSet`` with ``scenarios`` selecting ids
@@ -62,6 +65,11 @@ def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
     ``ProfitObjective`` — to tune a different score through the identical
     CEM/ES machinery; ``schedule``/``seeds``/``scenarios``/``penalty`` are
     then the objective's business and ignored here.
+
+    ``telemetry=True`` statically opts the per-generation optimizer probes
+    and the improvement/stall event ledger into the minimizer's scan
+    (``result.telemetry``; see ``telemetry_report``); the tuned outcome is
+    bit-identical either way.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; choose one of {METHODS}")
@@ -79,13 +87,13 @@ def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
     if method == "cem":
         run = jax.jit(lambda k: cem_minimize(
             obj, space, k, pop_size=pop_size, generations=generations,
-            init=d0, inject=d0))
+            init=d0, inject=d0, telemetry=telemetry))
     else:
         # The (1+λ) ES's incumbent *is* the init, giving the same
         # never-worse-than-default guarantee without a separate inject.
         run = jax.jit(lambda k: es_minimize(
             obj, space, k, pop_size=pop_size, generations=generations,
-            init=d0))
+            init=d0, telemetry=telemetry))
     result = jax.tree.map(jnp.asarray, run(key))
     # Score the default at the vector the optimizer *actually* evaluated:
     # the incumbent rides through the unit-cube mapping, whose f32
@@ -105,3 +113,36 @@ def tune_policy(cfg: runner.SimConfig, schedule, seeds, key: jax.Array,
                                                 names=space.names),
                         default_vec=d0_eval, default_score=default_score,
                         objective=obj)
+
+
+def telemetry_report(run) -> probes.ObsReport:
+    """Drain a ``telemetry=True`` tuning run into an :class:`ObsReport`.
+
+    Accepts a :class:`PolicyTuning` or a raw :class:`TuneResult`; the
+    report's ledger holds the improvement/stall events with the tick
+    column meaning *generation*, so every downstream exporter — JSONL,
+    Perfetto traces, OpenMetrics — works on optimizer runs unchanged.
+    """
+    result = run.result if isinstance(run, PolicyTuning) else run
+    tel = result.telemetry
+    if tel is None:
+        raise ValueError(
+            "this tuning run has no telemetry — pass telemetry=True to "
+            "tune_policy / cem_minimize / es_minimize")
+    records, dropped = ledger_lib.drain(tel.ledger)
+    counters = {
+        "generations": float(tel.elite_mean.shape[0]),
+        "opt_improvements": float(
+            sum(r.kind == ledger_lib.KIND_OPT_IMPROVE for r in records)),
+        "opt_stalls": float(
+            sum(r.kind == ledger_lib.KIND_OPT_STALL for r in records)),
+        "best_score": float(result.best_score),
+        "final_elite_mean": float(tel.elite_mean[-1]),
+        "final_score_std": float(tel.score_std[-1]),
+        "final_sigma_mean": float(tel.sigma_mean[-1]),
+        "stalled_gens_final": float(tel.stalled),
+    }
+    return probes.ObsReport(
+        spec=None, counters=counters, kalman=None, preempt_by_type=None,
+        kill_by_type=None, rejects=None, queue_hist=None,
+        queue_percentiles=None, ledger=records, ledger_dropped=dropped)

@@ -638,6 +638,18 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
         obs_c = state.obs
         if ocfg is not None:
             pr = dec.probe
+            obs_viol = obs_cost = None
+            if ocfg.detect is not None:
+                # Detector inputs, still read-only: TTC violations judged
+                # at completion time (the same lateness rule as
+                # ``violation_rows``; never-finished work is only judged
+                # at the horizon) and this tick's billed spend.
+                ticks_allowed = jnp.ceil(sched.d_requested / cfg.dt)
+                late = (t - work.t_submit) - ticks_allowed
+                obs_viol = jnp.sum(
+                    (done_now & sched.valid & (late > 1))
+                    .astype(jnp.float32))
+                obs_cost = cluster.cum_cost - state.cluster.cum_cost
             sig = obs_lib.TickSignals(
                 aimd_incr=pr.aimd_incr,
                 water_scale=pr.water_scale,
@@ -649,7 +661,13 @@ def make_step(schedule: wl.Schedule | wl.JaxSchedule, cfg: SimConfig, *,
                 queue_depth=jnp.sum(work.active.astype(jnp.float32)),
                 fail_streak=(fstate.fail_streak
                              if (fcfg is not None and use_spot) else None),
-                n_shed=(n_shed_now if hardened else None))
+                n_shed=(n_shed_now if hardened else None),
+                spot_price=spot_price,
+                viol_now=obs_viol,
+                n_committed=n_committed,
+                n_unavail=(jnp.sum((~ftick.avail).astype(jnp.float32))
+                           if fcfg is not None else None),
+                cost_delta=obs_cost)
             obs_c = obs_lib.update(state.obs, ocfg, t, sig,
                                    q_cap=sched.t_arrive.shape[0])
 

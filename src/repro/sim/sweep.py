@@ -118,6 +118,20 @@ class RunSummary(NamedTuple):
     max_committed: jnp.ndarray # peak control-plane fleet, in CUs
     mean_price: jnp.ndarray    # mean $/quantum of the primary type
     max_price: jnp.ndarray     # worst $/quantum seen (primary type)
+    # Total in-scan detector alerts (obs.detect).  ``None`` — a leafless
+    # pytree, absent from compiled programs and chunk files — whenever the
+    # config carries no detector spec, so every pre-detector summary
+    # consumer (digests, streams, parity tests) is untouched.
+    alerts: jnp.ndarray | None = None
+
+
+def _alert_count(final) -> jnp.ndarray | None:
+    """Total detector alerts from the final carry — ``None`` (leafless)
+    unless the run carried ``ObsSpec.detect`` registers."""
+    obs_c = getattr(final, "obs", None)
+    if obs_c is None or getattr(obs_c, "detect", None) is None:
+        return None
+    return jnp.sum(obs_c.detect.n_alerts).astype(jnp.int32)
 
 
 def summarize(final, schedule: wl.Schedule | wl.JaxSchedule,
@@ -166,6 +180,7 @@ def summarize(final, schedule: wl.Schedule | wl.JaxSchedule,
         max_committed=final.summ.max_committed,
         mean_price=final.summ.price_sum / cfg.ticks,
         max_price=final.summ.price_max,
+        alerts=_alert_count(final),
     )
 
 
@@ -194,6 +209,7 @@ def summarize_trace(final, ys, schedule: wl.Schedule | wl.JaxSchedule,
         max_committed=jnp.max(ys["n_committed"]),
         mean_price=jnp.mean(ys["spot_price"]),
         max_price=jnp.max(ys["spot_price"]),
+        alerts=_alert_count(final),
     )
 
 

@@ -1,0 +1,221 @@
+"""In-scan anomaly detection (``repro.obs.detect``): static gating,
+jit compatibility, calibration against the committed chaos scenarios,
+and the sweep summary's ``alerts`` field.
+
+The load-bearing contracts: ``ObsSpec.detect=None`` (the default)
+compiles the exact detector-free program (its sweep digest is pinned by
+``benchmarks/baselines/BENCH_obs.json``); armed detectors are read-only
+— they perturb nothing but the summary's ``alerts`` count; and their
+thresholds are *calibrated*, not decorative — zero alerts on clean
+replays, at least one correctly-localized alert under every committed
+chaos scenario.
+"""
+
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.controller import ControllerConfig
+from repro.core.types import BillingParams, ControlParams
+from repro.obs import BURN_NAMES, SIGNAL_NAMES, DetectSpec, ObsSpec
+from repro.obs import detect as detect_lib
+from repro.obs import ledger as ledger_lib
+from repro.sim import (SimConfig, SpotConfig, SweepSpec, faults, make_axes,
+                       paper_schedule, runner)
+from repro.sim.sweep import sweep
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:          # benchmarks/ is a namespace package
+    sys.path.insert(0, str(REPO))
+from benchmarks import bench_chaos, bench_obs  # noqa: E402
+
+SCHED = paper_schedule(ttc=7500.0, arrival_gap_ticks=1)
+
+
+def _cfg(obs: ObsSpec | None = None, **market) -> SimConfig:
+    return SimConfig(
+        ctrl=ControllerConfig(params=ControlParams(monitor_dt=300.0),
+                              billing=BillingParams(terminate="immediate")),
+        ticks=130, spot=SpotConfig(enabled=True, **market), obs=obs)
+
+
+def _alerts(report) -> list:
+    return [r for r in report.ledger if r.kind in ledger_lib.ALERT_KINDS]
+
+
+def _assert_same(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------ spec
+
+def test_detectspec_is_static_hashable_and_validated():
+    # Rides ObsSpec.detect and therefore every jit cache key.
+    assert hash(DetectSpec()) == hash(DetectSpec())
+    assert DetectSpec() != DetectSpec(cusum=False)
+    assert hash(ObsSpec.full(detect=True)) == hash(ObsSpec.full(detect=True))
+    with pytest.raises(ValueError):
+        DetectSpec(slo_viol_per_tick=0.0)
+    with pytest.raises(ValueError):
+        DetectSpec(burn_warn_mult=10.0, burn_page_mult=2.0)
+
+
+def test_obsspec_detect_flag_builds_a_spec():
+    assert ObsSpec.full().detect is None
+    assert ObsSpec.full(detect=True).detect == DetectSpec()
+    custom = DetectSpec(nis=False)
+    assert ObsSpec.full(detect=custom).detect is custom
+
+
+# ------------------------------------------------------------ jit + firing
+
+def test_change_point_detectors_fire_under_jit_on_a_step():
+    """CUSUM/EWMA compiled into a scan: silent on a flat signal, firing —
+    with the right subject and a localized first tick — after a level
+    step in spot_price (signal 1)."""
+    spec = DetectSpec(nis=False)   # NIS needs the KalmanProbe; the
+                                   # end-to-end tests below arm it
+
+    @jax.jit
+    def run(level):
+        dc = detect_lib.init(spec, w=1, k=1)
+        led = ledger_lib.init(64)
+
+        def body(carry, t):
+            dc, led = carry
+            sig = jnp.zeros((detect_lib.N_SIGNALS,), jnp.float32)
+            sig = sig.at[1].set(jnp.where(t < 40, 1.0, level))
+            dc, led = detect_lib.update(dc, spec, t, signals=sig,
+                                        kalman=None,
+                                        cost_delta=jnp.asarray(0.0), led=led)
+            return (dc, led), None
+
+        return jax.lax.scan(body, (dc, led), jnp.arange(80))[0]
+
+    dc, led = run(jnp.asarray(1.0))          # no step: stays silent
+    assert float(jnp.sum(dc.n_alerts)) == 0.0
+    assert all(int(t) == -1 for t in dc.first_tick)
+
+    dc, led = run(jnp.asarray(5.0))          # 4-unit step at t=40
+    recs, _ = ledger_lib.drain(led)
+    fired = {r.kind_name for r in recs}
+    assert {"alert_cusum", "alert_ewma"} <= fired
+    for fam in (0, 1):                       # cusum, ewma
+        assert int(dc.n_alerts[fam]) >= 1
+        assert 40 <= int(dc.first_tick[fam]) <= 50
+    # The subject column carries the monitored signal that fired.
+    assert all(SIGNAL_NAMES[r.tenant] == "spot_price" for r in recs)
+
+
+def test_burn_rate_warns_then_pages_on_budget_overrun():
+    """SLO burn: a sustained violation rate far over budget pages on the
+    fast window; events fire on level transitions only — a steady burn
+    is one page, not eighty."""
+    spec = DetectSpec(cusum=False, ewma=False, nis=False,
+                      slo_viol_per_tick=0.01)
+
+    @jax.jit
+    def run():
+        dc = detect_lib.init(spec, w=1, k=1)
+        led = ledger_lib.init(64)
+
+        def body(carry, t):
+            dc, led = carry
+            sig = jnp.zeros((detect_lib.N_SIGNALS,), jnp.float32)
+            sig = sig.at[2].set(jnp.where(t >= 30, 1.0, 0.0))  # viol_rate
+            dc, led = detect_lib.update(dc, spec, t, signals=sig,
+                                        kalman=None,
+                                        cost_delta=jnp.asarray(0.0), led=led)
+            return (dc, led), None
+
+        return jax.lax.scan(body, (dc, led), jnp.arange(80))[0]
+
+    dc, led = run()
+    recs, _ = ledger_lib.drain(led)
+    burn = [r for r in recs if r.kind_name == "alert_burn"]
+    assert burn and all(BURN_NAMES[r.tenant] == "viol" for r in burn)
+    assert any(r.severity == ledger_lib.SEV_PAGE for r in burn)
+    assert int(dc.first_tick[3]) >= 30
+    # Transition-fired: far fewer events than over-budget ticks.
+    assert len(burn) <= 4
+
+
+# ------------------------------------------------- static gating / neutrality
+
+def test_armed_detectors_leave_the_run_bit_identical():
+    """Detectors are read-only: arming the full detector catalog on top
+    of the full probe catalog moves no result bit, and the probe report
+    differs only by its ``detect`` section."""
+    tr_probes, rep_probes = runner.run_obs(
+        SCHED, _cfg(ObsSpec.full(ledger=64)), seed=0)
+    tr_det, rep_det = runner.run_obs(
+        SCHED, _cfg(ObsSpec.full(ledger=64, detect=True)), seed=0)
+    _assert_same(tr_probes, tr_det)
+    assert rep_probes.detect is None
+    assert isinstance(rep_det.detect, dict)
+    assert rep_probes.counters == {
+        k: v for k, v in rep_det.counters.items()
+        if not k.startswith("alerts_")}
+
+
+def test_sweep_summary_alerts_field_gates_on_detect():
+    """The sweep summary gains an ``alerts`` leaf only when detectors
+    are armed; every other field stays bit-identical (the leafless-None
+    contract that keeps detector-free digests and chunk files stable)."""
+    axes = make_axes(range(3), [1.1])
+    spec_off = SweepSpec(axes=axes, workload=SCHED)
+    off = sweep(spec_off, _cfg(ObsSpec.full(ledger=32)))
+    on = sweep(spec_off, _cfg(ObsSpec.full(ledger=32, detect=True)))
+    assert off.alerts is None
+    assert on.alerts is not None and on.alerts.shape == (3,)
+    assert on.alerts.dtype == jnp.int32
+    _assert_same(on._replace(alerts=None), off)
+    # And with obs off entirely the field stays leafless too.
+    assert sweep(spec_off, _cfg()).alerts is None
+
+
+# ------------------------------------------------------------- calibration
+
+def test_clean_paper_replay_fires_zero_alerts():
+    """False-positive gate (ISSUE acceptance): the spike-free paper
+    replay with every detector armed stays silent, and the report's
+    detect section agrees with the ledger."""
+    cfg = _cfg(ObsSpec.full(ledger=128, detect=True),
+               **dict(bench_obs.MARKET, p_spike_per_core=0.0))
+    _, report = runner.run_obs(SCHED, cfg, seed=0)
+    det = report.detect
+    assert det["alerts_total"] == 0
+    assert _alerts(report) == []
+    assert all(v == 0 for v in det["alerts_by_family"].values())
+    assert all(t == -1 for t in det["first_tick_by_family"].values())
+
+
+@pytest.mark.parametrize("name", sorted(bench_chaos.SCENARIOS))
+def test_chaos_scenarios_fire_localized_alerts(name):
+    """True-positive gate (ISSUE acceptance): every committed chaos
+    scenario fires at least one alert whose first tick lands inside the
+    injected fault window."""
+    sc = bench_chaos.SCENARIOS[name]
+    det = ObsSpec.full(ledger=256, detect=True)
+    cfg = bench_obs._chaos_cfg(det, faults.FaultConfig(hardened=True),
+                               **sc["market"])
+    fs = faults.make_fault_spec(**sc["spec"])
+    _, report = runner.run_obs(bench_chaos._sched(), cfg, seed=0, fspec=fs)
+    recs = _alerts(report)
+    assert recs, f"{name}: detectors missed the injected fault"
+    lo, hi = bench_obs.ALERT_WINDOWS.get(name, (0, bench_chaos.TICKS))
+    first = min(r.tick for r in recs)
+    assert lo <= first <= hi, (
+        f"{name}: first alert at tick {first} outside window ({lo}, {hi})")
+    # Counters, ledger and first-tick registers tell one story.
+    assert report.detect["alerts_total"] == len(recs)
+    firsts = [t for t in report.detect["first_tick_by_family"].values()
+              if t >= 0]
+    assert firsts and min(firsts) == first

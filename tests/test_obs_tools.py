@@ -1,0 +1,346 @@
+"""Host-side observability tooling: cross-run attribution
+(``repro.obs.compare``), OpenMetrics exposition + live sweep tailing
+(``repro.obs.metrics``), the labelled Perfetto tracks, the pandas-free
+export paths, and the CI gate's first-divergence attribution hookup.
+
+Everything here is pure host-side plumbing — no scans compile — so the
+file doubles as the place the export/report schema is pinned.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (Divergence, ObsReport, attribution, diff_bench,
+                       diff_reports, export, to_openmetrics)
+from repro.obs import ledger as ledger_lib
+from repro.obs import metrics
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:          # benchmarks/ is a namespace package
+    sys.path.insert(0, str(REPO))
+from benchmarks import check_bench_regression as cbr  # noqa: E402
+from benchmarks import run as bench_run  # noqa: E402
+
+BASELINE_OBS = REPO / "benchmarks" / "baselines" / "BENCH_obs.json"
+
+
+def _rec(tick, kind, tenant=ledger_lib.NO_TENANT, value=1.0, severity=0):
+    return ledger_lib.LedgerRecord(
+        tick=tick, kind=kind, kind_name=ledger_lib.KIND_NAMES[kind],
+        tenant=tenant, value=value, severity=severity)
+
+
+def _report(**kw):
+    base = dict(spec=None, counters={"preemptions": 2.0}, kalman=None,
+                preempt_by_type=np.array([1.0, 1.0]), kill_by_type=None,
+                rejects=None, queue_hist=None,
+                queue_percentiles={0.5: 3.0, 0.9: 7.0},
+                ledger=[_rec(1, ledger_lib.KIND_PREEMPT),
+                        _rec(4, ledger_lib.KIND_ADM_REJECT, tenant=2)],
+                ledger_dropped=0, detect=None)
+    base.update(kw)
+    return ObsReport(**base)
+
+
+# ------------------------------------------------------------------ compare
+
+def test_diff_reports_identical_is_empty():
+    assert diff_reports(_report(), _report()) == []
+
+
+def test_diff_reports_localizes_family_and_tick():
+    """The first divergence is the *earliest probe family* in canonical
+    order, then the earliest tick inside it — a perturbed per-type
+    preempt register outranks a later ledger drift."""
+    cur = _report(preempt_by_type=np.array([1.0, 9.0]),
+                  ledger=[_rec(1, ledger_lib.KIND_PREEMPT),
+                          _rec(3, ledger_lib.KIND_KILL)])
+    divs = diff_reports(cur, _report())
+    assert divs, "expected divergences"
+    first = divs[0]
+    assert isinstance(first, Divergence)
+    assert first.family == "preempt_by_type"
+    assert first.tick == 1
+    d = first.to_dict()
+    assert d["current"] != d["baseline"]
+    assert {"family", "path", "tick"} <= set(d)
+    assert any(v.family == "ledger" and v.tick == 3 for v in divs)
+
+
+def test_diff_bench_splits_signal_from_noise():
+    """Wall-clock leaves are noise, deterministic leaves are signal, and
+    digests rank ahead of numeric drift."""
+    base = {"neutrality": {"digest": "aaa", "sweep_exact": True},
+            "overhead": {"steady_s": 0.5},
+            "exports": {"total_s": 1.0, "ledger_events": 3}}
+    cur = json.loads(json.dumps(base))
+    cur["neutrality"]["digest"] = "bbb"
+    cur["overhead"]["steady_s"] = 0.9          # noise: _s suffix
+    cur["exports"]["total_s"] = 2.0            # noise
+    cur["exports"]["ledger_events"] = 5        # signal
+    signal, noise = diff_bench(cur, base)
+    assert signal[0].path == "neutrality.digest"
+    assert {s.path for s in signal if "ledger" in s.path} == {
+        "exports.ledger_events"}
+    assert {n.path for n in noise} == {"overhead.steady_s",
+                                       "exports.total_s"}
+    rep = attribution(cur, base, gate_errors=["digest changed"])
+    assert rep["first_divergence"]["path"] == "neutrality.digest"
+    assert rep["n_noise"] == 2 and rep["gate_errors"] == ["digest changed"]
+
+
+# ---------------------------------------------------- CI gate + attribution
+
+def test_gate_errors_dispatches_by_kind():
+    baseline = json.loads(BASELINE_OBS.read_text())
+    assert cbr.gate_errors(baseline, baseline) == []
+    assert "kind mismatch" in cbr.gate_errors({"kind": "chaos"},
+                                              baseline)[0]
+
+
+def test_induced_gate_failure_prints_attribution(tmp_path, capsys):
+    """ISSUE acceptance: tamper a BENCH artifact, run the gate, and the
+    failure comes with a first-divergence localization on stderr plus a
+    written attribution report."""
+    tampered = json.loads(BASELINE_OBS.read_text())
+    tampered["neutrality"]["digest"] = "deadbeef"
+    cur = tmp_path / "BENCH_obs.json"
+    cur.write_text(json.dumps(tampered))
+
+    attributions = []
+    rc = cbr.check_pair(str(cur), str(BASELINE_OBS), attributions)
+    err = capsys.readouterr().err
+    assert rc == 1
+    assert "REGRESSION" in err
+    assert "ATTRIBUTION: first divergence at neutrality.digest" in err
+    assert len(attributions) == 1
+    assert attributions[0]["first_divergence"]["path"] == "neutrality.digest"
+
+    out = tmp_path / "attr.json"
+    cbr.write_attribution(attributions, str(out))
+    written = json.loads(out.read_text())
+    assert written["attributions"][0]["baseline"] == "BENCH_obs.json"
+
+
+def test_obs_gate_catches_calibration_regressions():
+    baseline = json.loads(BASELINE_OBS.read_text())
+    broken = json.loads(BASELINE_OBS.read_text())
+    broken["calibration"]["clean"]["alerts"] = 3
+    broken["calibration"]["scenarios"]["blackout"]["alerts_per_seed"] = [0, 0]
+    errs = "\n".join(cbr.check_obs(broken, baseline))
+    assert "clean paper replay fired 3 alert(s)" in errs
+    assert "missed the injected fault" in errs
+
+
+def test_run_json_gate_status(tmp_path, monkeypatch):
+    """run.py's --json report carries the per-suite regression-gate
+    verdict for every artifact with a committed baseline."""
+    monkeypatch.chdir(tmp_path)
+    results = tmp_path / "results"
+    results.mkdir()
+    artifact = results / "BENCH_obs.json"
+    artifact.write_text(BASELINE_OBS.read_text())
+    verdict, errors = bench_run._suite_gate(started=0.0)
+    assert verdict is True and errors == []
+
+    tampered = json.loads(BASELINE_OBS.read_text())
+    tampered["acceptance"]["overhead_bounded"] = False
+    artifact.write_text(json.dumps(tampered))
+    verdict, errors = bench_run._suite_gate(started=0.0)
+    assert verdict is False
+    assert any("overhead" in e for e in errors)
+
+    (results / "BENCH_nobaseline.json").write_text("{}")
+    artifact.unlink()
+    assert bench_run._suite_gate(started=0.0) == (None, [])
+
+
+# -------------------------------------------------------------- openmetrics
+
+def test_openmetrics_exposition_format():
+    report = _report(
+        counters={"preemptions": 2.0, "alerts_total": 3.0,
+                  "ledger_events": 2.0},
+        detect={"alerts_total": 3,
+                "alerts_by_family": {"cusum": 1, "burn": 2},
+                "first_tick_by_family": {"cusum": 19, "burn": 22,
+                                         "ewma": -1}})
+    text = to_openmetrics(report, prefix="repro")
+    assert text.endswith("# EOF\n")
+    assert "repro_preemptions 2" in text
+    assert 'repro_alerts{family="burn"} 2' in text
+    assert 'repro_alert_first_tick{family="cusum"} 19' in text
+    assert 'repro_ledger_events{kind="preempt"} 1' in text
+    # Mirrored counters must not duplicate the labelled families.
+    assert "repro_alerts_total 3\n# EOF" not in text
+    assert text.count("# TYPE repro_alerts gauge") == 1
+    # One TYPE declaration per metric family, no duplicates.
+    types = [ln for ln in text.splitlines() if ln.startswith("# TYPE")]
+    assert len(types) == len(set(types))
+
+
+def test_write_openmetrics_is_atomic(tmp_path):
+    path = tmp_path / "metrics.prom"
+    metrics.write_openmetrics(_report(), str(path))
+    assert path.read_text().endswith("# EOF\n")
+    assert not (tmp_path / "metrics.prom.tmp").exists()
+
+
+# ------------------------------------------------------------- sweep tailing
+
+def _fake_stream(root: pathlib.Path, n_chunks=3, chunk=2, n_points=5,
+                 committed=None):
+    root.mkdir(parents=True, exist_ok=True)
+    (root / "sweep_manifest.json").write_text(json.dumps(
+        {"schema": 1, "digest": "d", "n_points": n_points, "chunk": chunk,
+         "n_chunks": n_chunks}))
+    for i in committed if committed is not None else range(n_chunks):
+        rows = min(chunk, n_points - i * chunk)
+        step = root / f"step_{i:08d}"
+        step.mkdir()
+        leaves = {}
+        for name, fill in (("violations", 1.0), ("alerts", 2.0)):
+            fname = f"{name}.npy"
+            np.save(step / fname, np.full((rows,), fill))
+            leaves[name] = {"file": fname, "shape": [rows],
+                            "dtype": "float64", "sha256": "x"}
+        (step / "manifest.json").write_text(json.dumps(
+            {"step": i, "leaves": leaves}))
+        (root / f"step_{i:08d}.done").write_text("")
+        time.sleep(0.01)   # distinct mtimes give the ETA a rate
+
+
+def test_snapshot_progress_totals_and_eta(tmp_path):
+    _fake_stream(tmp_path / "s", committed=[0, 1])
+    s = metrics.snapshot(str(tmp_path / "s"))
+    assert (s["chunks_done"], s["n_chunks"]) == (2, 3)
+    assert s["rows_done"] == 4 and not s["complete"]
+    assert s["totals"] == {"violations": 4.0, "alerts": 8.0}
+    assert s["eta_s"] is not None and s["eta_s"] >= 0.0
+    line = metrics.format_snapshot(s)
+    assert "[2/3 chunks]" in line and "alerts=8" in line
+
+
+def test_watch_returns_when_complete(tmp_path):
+    _fake_stream(tmp_path / "s")
+    lines = []
+    s = metrics.watch(str(tmp_path / "s"), interval=0.0,
+                      emit=lines.append)
+    assert s["complete"] and s["rows_done"] == 5
+    assert lines and "[3/3 chunks]" in lines[-1]
+    # The last committed chunk is short (5 rows / chunks of 2).
+    assert s["totals"]["violations"] == 5.0
+
+
+def test_watch_honors_max_updates_on_a_stalled_sweep(tmp_path):
+    _fake_stream(tmp_path / "s", committed=[0])
+    lines = []
+    s = metrics.watch(str(tmp_path / "s"), interval=0.0,
+                      emit=lines.append, max_updates=2)
+    assert not s["complete"] and len(lines) == 2
+
+
+# ------------------------------------------------------- pandas-free exports
+
+def _hide_pandas(monkeypatch):
+    # pandas IS installed in this environment; make `import pandas`
+    # raise to prove the dependency really is optional.
+    monkeypatch.setitem(sys.modules, "pandas", None)
+
+
+def test_to_dataframe_without_pandas_raises_naming_it(monkeypatch):
+    _hide_pandas(monkeypatch)
+    with pytest.raises(ImportError, match="pandas"):
+        _report().to_dataframe()
+
+
+def test_to_jsonl_is_pandas_free(monkeypatch, tmp_path):
+    _hide_pandas(monkeypatch)
+    path = tmp_path / "run.jsonl"
+    _report(ledger_dropped=1).to_jsonl(str(path))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines[0]["record"] == "counters"
+    assert lines[0]["ledger_dropped"] == 1
+    events = lines[1:]
+    assert [e["tick"] for e in events] == [1, 4]
+    assert events[1]["kind_name"] == "adm_reject"
+    assert events[1]["tenant"] == 2
+
+
+# ------------------------------------------------------- trace-event labels
+
+def test_trace_tracks_carry_process_and_thread_names():
+    """Perfetto metadata (ISSUE satellite): a process_name record, one
+    thread_name per track, and tenant-/subject-scoped events fanned out
+    onto labelled sub-tracks."""
+    report = _report(ledger=[
+        _rec(1, ledger_lib.KIND_PREEMPT),
+        _rec(4, ledger_lib.KIND_ADM_REJECT, tenant=2),
+        _rec(19, ledger_lib.KIND_ALERT_CUSUM, tenant=6,
+             severity=ledger_lib.SEV_PAGE),          # market_unavail
+        _rec(22, ledger_lib.KIND_ALERT_BURN, tenant=3,
+             severity=ledger_lib.SEV_WARN),          # unavail window
+    ])
+    events = export.run_trace_events(report, dt=300.0)
+    procs = [e for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"]
+    assert [p["args"]["name"] for p in procs] == ["sim-run"]
+    threads = {e["tid"]: e["args"]["name"] for e in events
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert set(threads.values()) == {
+        "preempt", "adm_reject/tenant2",
+        "alert_cusum/market_unavail", "alert_burn/unavail"}
+
+    inst = {e["name"]: e for e in events if e["ph"] == "i"}
+    cusum = inst["alert_cusum"]
+    assert cusum["args"]["subject"] == "market_unavail"
+    assert cusum["args"]["severity"] == "page"
+    assert cusum["ts"] == 19 * 300.0 * 1e6
+    assert threads[cusum["tid"]] == "alert_cusum/market_unavail"
+    burn = inst["alert_burn"]
+    assert burn["args"]["severity"] == "warn"
+    # Fleet-level events stay on the plain per-kind track.
+    assert inst["preempt"]["tid"] == ledger_lib.KIND_PREEMPT
+    assert inst["preempt"]["args"]["severity"] == "info"
+
+
+# ------------------------------------------------------------ ledger drain
+
+def test_drain_is_chronological_with_severity_after_wrap():
+    """Satellite (a): drain() returns push order even across a wrap, so
+    ticks are monotonically non-decreasing and the alert metadata
+    (severity, subject) survives the ring."""
+    import jax.numpy as jnp
+
+    led = ledger_lib.init(4)
+    for t, kind, sev in ((0, ledger_lib.KIND_PREEMPT, 0),
+                         (2, ledger_lib.KIND_ALERT_CUSUM, 2),
+                         (2, ledger_lib.KIND_ALERT_BURN, 1),
+                         (5, ledger_lib.KIND_KILL, 0),
+                         (7, ledger_lib.KIND_ALERT_EWMA, 1),
+                         (9, ledger_lib.KIND_SHED, 0)):
+        led = ledger_lib.push(led, jnp.asarray(True), t, kind, 1.0,
+                              severity=sev)
+    recs, dropped = ledger_lib.drain(led)
+    assert dropped == 2
+    ticks = [r.tick for r in recs]
+    assert ticks == sorted(ticks) == [2, 5, 7, 9]
+    assert [r.severity for r in recs] == [1, 0, 1, 0]
+    assert recs[0].kind_name == "alert_burn"
+
+
+def test_check_regression_cli_auto_smoke():
+    """The --auto CLI form CI runs: against the committed baselines with
+    current results absent it must fail loudly, not crash."""
+    p = subprocess.run(
+        [sys.executable, "benchmarks/check_bench_regression.py", "--auto",
+         "--results-dir", "does_not_exist"],
+        cwd=REPO, capture_output=True, text=True)
+    assert p.returncode == 1
+    assert "missing" in p.stderr

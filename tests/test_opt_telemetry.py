@@ -1,0 +1,134 @@
+"""Optimizer telemetry (``repro.opt``): per-generation probes and
+improve/stall events on the CEM/ES minimizers behind the same static
+opt-in contract as ``SimConfig.obs`` — ``telemetry=False`` (the default)
+compiles the exact historical program and returns ``telemetry=None``;
+``telemetry=True`` moves no result bit and drains into the standard
+``ObsReport`` so every exporter works on tuning runs unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import ledger as ledger_lib
+from repro.obs import to_openmetrics
+from repro.opt import BoxSpace, cem_minimize, es_minimize, tuner
+from repro.opt.cem import STALL_GENS, OptTelemetry
+
+SPACE = BoxSpace(names=("a", "b"), lo=(0.0, 0.0), hi=(1.0, 1.0))
+GENS = 8
+
+
+def _quadratic(vec):
+    return jnp.sum((vec - jnp.asarray([0.3, 0.7])) ** 2)
+
+
+def _constant(vec):
+    return jnp.asarray(1.0, jnp.float32)
+
+
+RESULT_FIELDS = ("best_vec", "best_score", "final_mean", "history_best",
+                 "history_mean")
+
+
+def _assert_results_equal(a, b):
+    for field in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=field)
+
+
+@pytest.mark.parametrize("minimize", [cem_minimize, es_minimize],
+                         ids=["cem", "es"])
+def test_telemetry_defaults_off_and_moves_no_bit(minimize):
+    """The tuning-neutrality contract: telemetry defaults to None, and
+    arming it leaves every optimizer result leaf bit-identical (committed
+    tuning baselines cannot move)."""
+    key = jax.random.PRNGKey(0)
+    off = minimize(_quadratic, SPACE, key, generations=GENS)
+    assert off.telemetry is None
+    on = minimize(_quadratic, SPACE, key, generations=GENS, telemetry=True)
+    _assert_results_equal(off, on)
+    assert isinstance(on.telemetry, OptTelemetry)
+
+
+@pytest.mark.parametrize("minimize", [cem_minimize, es_minimize],
+                         ids=["cem", "es"])
+def test_telemetry_shapes_and_event_stream(minimize):
+    res = minimize(_quadratic, SPACE, jax.random.PRNGKey(1),
+                   generations=GENS, telemetry=True)
+    tel = res.telemetry
+    for leaf in (tel.elite_mean, tel.score_std, tel.sigma_mean):
+        assert leaf.shape == (GENS,)
+    assert tel.stalled.shape == ()
+
+    records, dropped = ledger_lib.drain(tel.ledger)
+    assert dropped == 0
+    kinds = {r.kind for r in records}
+    assert kinds <= {ledger_lib.KIND_OPT_IMPROVE, ledger_lib.KIND_OPT_STALL}
+    # On a smooth quadratic the incumbent improves at least once, and
+    # the tick column is the (nondecreasing) generation index.
+    assert ledger_lib.KIND_OPT_IMPROVE in kinds
+    ticks = [r.tick for r in records]
+    assert ticks == sorted(ticks)
+    assert all(0 <= t < GENS for t in ticks)
+
+
+@pytest.mark.parametrize("minimize", [cem_minimize, es_minimize],
+                         ids=["cem", "es"])
+def test_constant_objective_fires_one_stall_event(minimize):
+    """A flat landscape never improves after generation 0, so the stall
+    detector fires exactly once — on the transition at STALL_GENS — and
+    the final stalled counter covers every stale generation."""
+    res = minimize(_constant, SPACE, jax.random.PRNGKey(2),
+                   generations=GENS, telemetry=True)
+    records, _ = ledger_lib.drain(res.telemetry.ledger)
+    stalls = [r for r in records if r.kind == ledger_lib.KIND_OPT_STALL]
+    assert len(stalls) == 1
+    assert stalls[0].tick == STALL_GENS
+    assert int(res.telemetry.stalled) == GENS - 1
+
+
+def test_telemetry_report_counters_and_exports():
+    """tuner.telemetry_report turns a telemetry run into a standard
+    ObsReport the OpenMetrics/JSONL exporters consume unchanged."""
+    res = cem_minimize(_quadratic, SPACE, jax.random.PRNGKey(3),
+                       generations=GENS, telemetry=True)
+    report = tuner.telemetry_report(res)
+    c = report.counters
+    assert c["generations"] == float(GENS)
+    assert c["opt_improvements"] >= 1.0
+    assert c["opt_improvements"] == float(
+        sum(r.kind == ledger_lib.KIND_OPT_IMPROVE for r in report.ledger))
+    assert c["best_score"] == pytest.approx(float(res.best_score))
+    assert c["final_elite_mean"] == pytest.approx(
+        float(res.telemetry.elite_mean[-1]))
+
+    text = to_openmetrics(report, prefix="tune")
+    assert text.endswith("# EOF\n")
+    assert "tune_opt_improvements" in text
+    assert 'tune_ledger_events{kind="opt_improve"}' in text
+
+
+def test_telemetry_report_jsonl_round_trip(tmp_path):
+    import json
+
+    res = es_minimize(_quadratic, SPACE, jax.random.PRNGKey(4),
+                      generations=GENS, telemetry=True)
+    path = tmp_path / "tune.jsonl"
+    tuner.telemetry_report(res).to_jsonl(str(path))
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines[0]["record"] == "counters"
+    assert lines[0]["generations"] == float(GENS)
+    events = lines[1:]
+    assert all(e["record"] == "event" for e in events)
+    assert all(e["kind_name"] in ("opt_improve", "opt_stall")
+               for e in events)
+
+
+def test_telemetry_report_requires_telemetry():
+    res = cem_minimize(_quadratic, SPACE, jax.random.PRNGKey(5),
+                       generations=GENS)
+    with pytest.raises(ValueError, match="telemetry=True"):
+        tuner.telemetry_report(res)

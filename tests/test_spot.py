@@ -178,6 +178,8 @@ def test_vmapped_sweep_equals_python_loop():
         for bid in bids:
             single = run_single(SCHED, cfg, seed=seed, bid_mult=bid)
             for field in single._fields:
+                if getattr(single, field) is None:
+                    continue   # e.g. alerts without obs.detect
                 np.testing.assert_allclose(
                     np.asarray(getattr(batched, field))[i],
                     np.asarray(getattr(single, field)),

@@ -258,6 +258,8 @@ axes = make_axes(range(13), [1.1])  # prime: pads 13 -> 16 on 4 devices
 r1 = sweep(SweepSpec(axes=axes, workload=sched, devices=1), cfg)
 r4 = sweep(SweepSpec(axes=axes, workload=sched), cfg)
 for name, a, b in zip(type(r1)._fields, r1, r4):
+    if a is None and b is None:   # e.g. alerts without obs.detect
+        continue
     a, b = np.asarray(a), np.asarray(b)
     assert a.shape == b.shape == (13,), (name, a.shape, b.shape)
     assert np.array_equal(a, b), name

@@ -60,6 +60,8 @@ def test_one_tenant_bit_identical_to_single_owner(scenario_id):
     # test_throughput's EXACT_FIELDS.
     for f in sweep.RunSummary._fields:
         a, b = getattr(shared.fleet, f), getattr(alone, f)
+        if a is None and b is None:     # e.g. alerts without obs.detect
+            continue
         if f == "mean_price":
             assert jnp.allclose(a, b, rtol=1e-6), (f, a, b)
         else:
